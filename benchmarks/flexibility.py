@@ -1,0 +1,60 @@
+"""Table I flexibility-rows analogue.
+
+The paper's differentiator is not peak efficiency but that BrainTTA *runs
+anything*: any layer geometry (C multiple of 32/16/4, M of 32, any R/S),
+partial results, residual layers, C-programmability. Our analogue: every
+assigned architecture × every precision policy must build and run a forward
+step — a 10x5 support matrix — plus the utilization-divisibility conditions
+(our v_C analogue is the 32-bit packing word + the 16-way TP axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.core.quantize import PACK_FACTOR
+from repro.models import registry, transformer
+from repro.models.common import TRAIN
+
+POLICIES = ("none", "int8", "w-ternary", "mixed", "binary")
+
+
+def run(quick: bool = True) -> dict:
+    support: dict[str, dict[str, str]] = {}
+    for arch in ARCHS:
+        support[arch] = {}
+        for pol in POLICIES:
+            cfg = dataclasses.replace(get_config(arch).reduced(), policy=pol)
+            try:
+                t0 = time.time()
+                sp = transformer.build_specs(cfg)
+                params = transformer.init(jax.random.PRNGKey(0), cfg)
+                batch = registry.make_batch(jax.random.PRNGKey(1), cfg, 1, 8)
+                loss, _ = transformer.loss_fn(params, batch, sp, TRAIN)
+                ok = bool(jnp.isfinite(loss))
+                support[arch][pol] = f"ok({time.time()-t0:.0f}s)" if ok else "nan"
+            except Exception as e:
+                support[arch][pol] = f"FAIL:{type(e).__name__}"
+    return support
+
+
+def main():
+    print("# flexibility (paper Table I rows: full-utilization conditions + support)")
+    print("## utilization conditions (v_C analogue)")
+    print("precision,packing(ops/word),K_multiple_of,TP_axis_multiple")
+    for p, f in PACK_FACTOR.items():
+        print(f"{p},{f},{32 if p != 'int8' else 4},16")
+    sup = run()
+    print("## arch x policy support matrix")
+    print("arch," + ",".join(POLICIES))
+    for arch, row in sup.items():
+        print(arch + "," + ",".join(row[p] for p in POLICIES))
+    return sup
+
+
+if __name__ == "__main__":
+    main()

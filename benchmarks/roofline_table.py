@@ -1,0 +1,40 @@
+"""Render the EXPERIMENTS.md roofline tables from results/dryrun_*.json."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path: str, title: str) -> str:
+    d = json.load(open(path))
+    rows = d["results"]
+    out = [f"### {title} (cost scope: {d['cost_scope']}, "
+           f"{'multi-pod 2x16x16' if d['multi_pod'] else 'single-pod 16x16'})",
+           "",
+           "| arch | shape | t_comp[s] | t_mem[s] | t_coll[s] | bound | "
+           "useful | roofl.frac | args GiB/dev | temp GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        m = r["memory_per_device"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['bottleneck'][:4]} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} | "
+            f"{m.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0)/2**30:.2f} |")
+    if d.get("failures"):
+        out.append("")
+        out.append(f"FAILURES: {[(f['arch'], f['shape']) for f in d['failures']]}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for p, t in [("results/dryrun_singlepod.json",
+                  "Roofline, single pod (final config; §Perf baselines via flags)"),
+                 ("results/dryrun_multipod.json", "Multi-pod dry-run")]:
+        try:
+            print(render(p, t))
+            print()
+        except FileNotFoundError:
+            print(f"({p} not present yet)")

@@ -1,0 +1,42 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+  energy_proxy  Fig. 5 (per-precision energy breakdown -> traffic/roofline)
+  throughput    Table I KPIs (614/307/77 GOPS b/t/i8)
+  kernel_bench  Pallas kernels: interpret validation + VMEM tile model
+  flexibility   Table I flexibility rows (arch x policy support matrix)
+  qat_quality   §II-A mixed-precision motivation (QAT loss per policy)
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow QAT sweep")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import energy_proxy, flexibility, kernel_bench, throughput
+
+    benches = [("energy_proxy", energy_proxy.main),
+               ("throughput", throughput.main),
+               ("kernel_bench", kernel_bench.main)]
+    if not args.quick:
+        from benchmarks import qat_quality
+        benches += [("flexibility", flexibility.main),
+                    ("qat_quality", qat_quality.main)]
+    for name, fn in benches:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"\n==== {name} ====")
+        fn()
+        print(f"({name}: {time.time()-t0:.0f}s)")
+
+
+if __name__ == '__main__':
+    main()

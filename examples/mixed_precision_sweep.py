@@ -1,0 +1,28 @@
+"""The paper's central trade-off: energy/footprint vs accuracy per precision.
+
+Trains the same reduced LM under five precision policies (QAT) and reports
+final loss next to the packed-weight footprint — the software twin of
+BrainTTA's Fig. 5 + Table I trade-off.
+
+    PYTHONPATH=src python examples/mixed_precision_sweep.py
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.qat_quality import run
+from repro.configs import get_config
+from repro.models import transformer
+
+curves = run(steps=50)
+print("\npolicy      final_loss   packed_MiB")
+for pol, losses in curves.items():
+    cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(), policy=pol)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    mib = sum(np.asarray(x).nbytes for x in jax.tree.leaves(sparams)) / 2**20
+    print(f"{pol:10s}  {np.mean(losses[-5:]):10.4f}   {mib:8.2f}")

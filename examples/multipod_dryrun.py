@@ -1,0 +1,15 @@
+"""Programmatic dry-run of one (arch x shape x mesh) cell — the API the
+roofline study is built on. Works on this CPU container (512 fake devices).
+
+    PYTHONPATH=src python examples/multipod_dryrun.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import calibrate_cost_scope, run_cell
+from repro.launch.mesh import make_production_mesh
+
+scope = calibrate_cost_scope(make_production_mesh(multi_pod=True))
+out = run_cell("llama3.2-3b", "train_4k", multi_pod=True, cost_scope=scope)
+print("\nJSON record:", {k: out[k] for k in
+      ("arch", "shape", "mesh", "bottleneck", "roofline_fraction")})

@@ -1,0 +1,55 @@
+"""Quickstart: build a mixed-precision quantized LM, QAT-train it briefly,
+pack it into BrainTTA bit-plane format, and serve a prompt.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import registry, transformer
+from repro.models.common import ModelCtx, TRAIN
+from repro.optim.adamw import adamw, apply_updates
+
+# 1. pick an architecture and a precision policy (--arch / --precision in the
+#    real drivers). "mixed" = the paper's recipe: int8 first/last, ternary body.
+cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(), policy="mixed")
+sp = transformer.build_specs(cfg)
+params = transformer.init(jax.random.PRNGKey(0), cfg)
+print(f"arch={cfg.name} policy={cfg.policy} "
+      f"params={sum(x.size for x in jax.tree.leaves(params))/1e6:.2f}M")
+
+# 2. a few QAT steps (straight-through estimators keep the master weights fp32)
+opt = adamw(1e-3)
+state = opt.init(params)
+for step in range(20):
+    batch = registry.make_batch(jax.random.fold_in(jax.random.PRNGKey(1), step),
+                                cfg, 4, 32)
+    (loss, _), grads = jax.value_and_grad(transformer.loss_fn, has_aux=True)(
+        params, batch, sp, TRAIN)
+    upd, state, _ = opt.update(grads, state, params)
+    params = apply_updates(params, upd)
+    if step % 5 == 0:
+        print(f"  step {step:3d} loss {float(loss):.3f}")
+
+# 3. pack for serving: ternary weights become 2 bit-planes (16 trits / word),
+#    int8 layers become codes + scales — BrainTTA's storage format
+sparams = transformer.pack_for_serve(params, cfg)
+tb = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
+sb = sum(np.asarray(x).nbytes for x in jax.tree.leaves(sparams))
+print(f"packed: {tb/2**20:.2f} MiB -> {sb/2**20:.2f} MiB ({tb/sb:.1f}x)")
+
+# 4. serve: prefill a prompt, decode greedily with the packed kernels' algebra
+serve = ModelCtx(mode="serve")
+prompt = jnp.asarray([[5, 42, 7, 99, 123, 4, 17, 56]], jnp.int32)
+logits, cache = transformer.prefill(sparams, prompt, sp, serve, cache_len=32)
+toks = [int(jnp.argmax(logits[0, -1]))]
+for i in range(8):
+    logits, cache = transformer.decode_step(
+        sparams, cache, jnp.asarray([[toks[-1]]], jnp.int32),
+        jnp.int32(prompt.shape[1] + i), sp, serve)
+    toks.append(int(jnp.argmax(logits[0, 0])))
+print("generated token ids:", toks)

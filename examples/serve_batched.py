@@ -1,0 +1,19 @@
+"""End-to-end driver (the paper's kind is inference): serve a real ~125M-param
+model with batched requests through the continuous-batching server, with
+ternary-packed weights.
+
+    PYTHONPATH=src python examples/serve_batched.py [--full]
+
+--full uses the actual xlstm-125m config (125M params; a couple of minutes of
+CPU for weight init + a few tokens/s decode). Default uses the reduced config
+so the example finishes in seconds.
+"""
+import sys
+
+from repro.launch import serve
+
+args = ["--arch", "xlstm-125m", "--requests", "8", "--max-new", "12",
+        "--slots", "4", "--policy", "w-ternary"]
+if "--full" not in sys.argv:
+    args.append("--reduced")
+serve.main(args)

@@ -1,0 +1,2 @@
+"""repro — BrainTTA (mixed-precision b/t/i8 quantized NN compute) as a
+production-grade multi-pod JAX training/inference framework."""

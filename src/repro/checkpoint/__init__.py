@@ -1,0 +1,3 @@
+"""Sharded atomic checkpointing with elastic (mesh-shape-changing) restore."""
+from . import ckpt  # noqa: F401
+from .ckpt import save, restore, latest_step  # noqa: F401

@@ -1,0 +1,131 @@
+"""Sharded, atomic, mesh-elastic checkpointing.
+
+Layout:  <dir>/step_<N>/
+             manifest.json     tree structure, shapes, dtypes, step, mesh info
+             shard_<i>.npz     leaf arrays (flat index -> array)
+         <dir>/LATEST          text file naming the newest complete step
+
+Properties needed at 1000+ nodes, implemented here at laptop scale:
+  * atomicity — written to step_<N>.tmp, fsync'd, renamed; a crash mid-write
+    never corrupts LATEST (restart ignores .tmp).
+  * retention — keep_n newest checkpoints, older ones pruned after a
+    successful write (never before).
+  * resume — `latest_step(dir)` + `restore(dir, like=tree)`; the train driver
+    resumes data position from the step (step-indexed pipeline).
+  * elasticity — arrays are saved *unsharded by logical leaf* with the mesh
+    shape recorded; restore re-shards onto whatever mesh the new job has
+    (tested 8 -> 4 devices in tests/test_elastic.py). At real scale each host
+    would write its shard; the manifest/rename protocol is identical.
+  * int8 optimizer states and packed uint32 weights round-trip unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+LATEST = "LATEST"
+
+
+def _paths(tree):
+    leaves, tdef = jax.tree.flatten(tree)
+    return leaves, tdef
+
+
+def save(ckpt_dir: str, step: int, tree, *, mesh_shape=None, keep_n: int = 3,
+         extra: dict | None = None) -> str:
+    """Atomically write `tree` as checkpoint `step`. Returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, tdef = _paths(tree)
+    arrays = [np.asarray(x) for x in leaves]
+    np.savez(os.path.join(tmp, "shard_0.npz"),
+             **{f"a{i}": a for i, a in enumerate(arrays)})
+    manifest = {
+        "step": step,
+        "n_leaves": len(arrays),
+        "treedef": str(tdef),
+        "shapes": [list(a.shape) for a in arrays],
+        "dtypes": [str(a.dtype) for a in arrays],
+        "mesh_shape": list(mesh_shape) if mesh_shape else None,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):      # re-save of the same step (post-resume)
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(ckpt_dir, LATEST + ".tmp"), "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(os.path.join(ckpt_dir, LATEST + ".tmp"),
+              os.path.join(ckpt_dir, LATEST))
+    _prune(ckpt_dir, keep_n)
+    return final
+
+
+def _prune(ckpt_dir: str, keep_n: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep_n]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    path = os.path.join(ckpt_dir, LATEST)
+    if not os.path.exists(path):
+        return None
+    name = open(path).read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name, MANIFEST)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like, *, step: int | None = None, shardings=None):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). If `shardings` (matching pytree of NamedSharding) is
+    given, leaves are placed onto the new mesh — elastic restore."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "shard_0.npz"))
+    arrays = [data[f"a{i}"] for i in range(manifest["n_leaves"])]
+    leaves, tdef = _paths(like)
+    if len(leaves) != len(arrays):
+        raise ValueError(f"checkpoint has {len(arrays)} leaves, model needs "
+                         f"{len(leaves)} — architecture mismatch")
+    out = []
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(arrays))
+    for a, l, s in zip(arrays, leaves, shard_leaves):
+        if tuple(a.shape) != tuple(l.shape):
+            raise ValueError(f"shape mismatch {a.shape} vs {l.shape}")
+        if s is not None:
+            out.append(jax.device_put(a, s))
+        else:
+            out.append(jax.numpy.asarray(a, dtype=l.dtype))
+    return tdef.unflatten(out), manifest
+
+
+def manifest_extra(ckpt_dir: str, step: int | None = None) -> dict:
+    if step is None:
+        step = latest_step(ckpt_dir)
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, MANIFEST)) as f:
+        return json.load(f).get("extra", {})

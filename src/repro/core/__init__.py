@@ -1,0 +1,9 @@
+"""repro.core — BrainTTA's contribution as composable JAX modules.
+
+Mixed-precision (binary/ternary/int8) quantization with bit-packed storage,
+XNOR/gated-XNOR/int8 GEMM formulations, fused requantization, and a per-layer
+precision policy. See DESIGN.md §2 for the TTA→TPU mapping.
+"""
+from . import pack, precision, qlinear, quantize, requant  # noqa: F401
+from .precision import LayerQuant, PrecisionPolicy, get_policy, POLICIES  # noqa: F401
+from .quantize import QuantSpec, fake_quant, BITS, PACK_FACTOR  # noqa: F401

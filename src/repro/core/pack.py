@@ -1,0 +1,109 @@
+"""Bit-plane packing — BrainTTA's v_C operands-per-word storage (§IV-B).
+
+The SoC packs 32 binary / 16 ternary / 4 int8 operands into each 32-bit word
+so a 1024-bit vector holds one vMAC input. On TPU the analogous layout packs
+the *contraction* (K) axis of a GEMM into int32 words:
+
+  binary : K/32 words, bit k of word j  = code of operand j*32+k
+  ternary: two planes (mask, sign), each K/32 words of 1-bit fields
+           (a trit is 2 bits *across planes*, matching v_C=16 per 32-bit
+            word-pair of storage)
+  int8   : native int8 arrays (4 per 32-bit word is the hardware's native
+           byte layout already; XLA handles it)
+
+Packing always happens along the LAST axis; callers move K last first.
+K must be a multiple of 32 (pad upstream — model dims here are all
+multiples of 128, cf. paper's "multiples of v_C for full utilization",
+Table I flexibility rows).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32  # bits per packed word
+
+
+def _check_k(k: int) -> None:
+    if k % WORD:
+        raise ValueError(f"packing axis length {k} not a multiple of {WORD}")
+
+
+def pack_bits(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack 0/1 codes (uint8, last axis = K) into int32 words (last axis K/32).
+
+    Bit k of word j holds code[..., j*32+k] (little-endian within the word).
+    """
+    _check_k(codes.shape[-1])
+    c = codes.reshape(*codes.shape[:-1], codes.shape[-1] // WORD, WORD)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    words = jnp.sum(c.astype(jnp.uint32) << shifts, axis=-1)
+    return words.astype(jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of pack_bits -> uint8 codes with last axis k."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * WORD)[..., :k].astype(jnp.uint8)
+
+
+# -- binary ------------------------------------------------------------------
+
+def pack_binary(values: jnp.ndarray) -> jnp.ndarray:
+    """Pack {-1,+1} float values: bit=1 encodes +1."""
+    return pack_bits((values >= 0).astype(jnp.uint8))
+
+
+def unpack_binary(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Unpack to {-1,+1} float32."""
+    bits = unpack_bits(words, k)
+    return jnp.where(bits == 1, 1.0, -1.0).astype(jnp.float32)
+
+
+# -- ternary -----------------------------------------------------------------
+
+def pack_ternary(values: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack {-1,0,+1} floats into (mask_words, sign_words) planes."""
+    mask = (values != 0).astype(jnp.uint8)
+    sign = (values < 0).astype(jnp.uint8)
+    return pack_bits(mask), pack_bits(sign)
+
+
+def unpack_ternary(mask_words: jnp.ndarray, sign_words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Unpack planes to {-1,0,+1} float32."""
+    mask = unpack_bits(mask_words, k).astype(jnp.float32)
+    sign = unpack_bits(sign_words, k)
+    return mask * jnp.where(sign == 1, -1.0, 1.0)
+
+
+# -- packed dot products (the XNOR/gated-XNOR algebra, §II-A) ----------------
+
+def binary_dot_words(x_words: jnp.ndarray, w_words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Binary dot product over packed words: sum_i x_i * w_i, x,w in {-1,+1}.
+
+    XNOR-popcount identity: matches = K - popcount(x ^ w);
+    dot = matches - mismatches = K - 2*popcount(x ^ w).
+    Contracts the last axis of both operands (word axis).
+    """
+    mismatch = jnp.sum(
+        jax.lax.population_count(jnp.bitwise_xor(x_words, w_words)).astype(jnp.int32),
+        axis=-1,
+    )
+    return jnp.int32(k) - 2 * mismatch
+
+
+def ternary_dot_words(
+    xm: jnp.ndarray, xs: jnp.ndarray, wm: jnp.ndarray, ws: jnp.ndarray
+) -> jnp.ndarray:
+    """Gated-XNOR dot product over packed trit planes (§II-A).
+
+    active = xm & wm (both non-zero); within active lanes the product is
+    +1 where signs agree, -1 where they differ:
+        dot = popcount(active & ~(xs^ws)) - popcount(active & (xs^ws))
+            = popcount(active) - 2*popcount(active & (xs^ws))
+    """
+    active = jnp.bitwise_and(xm, wm)
+    disagree = jnp.bitwise_and(active, jnp.bitwise_xor(xs, ws))
+    pc = lambda v: jnp.sum(jax.lax.population_count(v).astype(jnp.int32), axis=-1)
+    return pc(active) - 2 * pc(disagree)

@@ -1,0 +1,363 @@
+"""QuantizedLinear — BrainTTA's vMAC as a composable JAX module.
+
+One module covers every matmul in the model zoo (QKV/O, FFN, experts, SSM
+projections, LM head). It has three execution backends:
+
+  mode="train"  QAT: STE fake-quant of weights/activations, bf16 MXU matmul.
+                This is what `train_step` lowers; the SoC does not train, a
+                pod framework must (DESIGN.md §2).
+  mode="serve"  packed inference: weights stored in the bit-plane format of
+                `core.pack` (32/16 operands per word for binary/ternary,
+                int8 codes for 8-bit), activations quantized on the fly.
+                Two GEMM formulations are selectable:
+                  impl="popcount"  paper-faithful XNOR/gated-XNOR + popcount
+                                   (VPU path on TPU)
+                  impl="mxu"       beyond-paper: unpack packed planes to ±1
+                                   int8 *in VMEM* and use the int8 MXU path —
+                                   packed HBM storage, dense-rate compute.
+  backend="pallas"  serve-mode GEMMs dispatch to the Pallas TPU kernels in
+                `repro.kernels` (interpret-validated on CPU); "jnp" uses the
+                identical XLA formulations below (what the CPU dry-run lowers).
+
+Weight layout (train): w[in, out] (+ optional expert axis in front).
+Weight layout (serve): precision-dependent, produced by `pack_params`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import pack
+from .precision import LayerQuant
+from .quantize import (QuantSpec, binarize, binary_codes, fake_quant,
+                       int8_codes, int8_scale, ternarize, ternary_codes)
+
+Params = dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinearSpec:
+    in_dim: int
+    out_dim: int
+    lq: LayerQuant = LayerQuant()
+    use_bias: bool = False
+    experts: int = 0           # 0 = dense; >0 = leading expert axis on weights
+    name: str = "qlinear"
+
+
+# ---------------------------------------------------------------------------
+# init (train layout)
+# ---------------------------------------------------------------------------
+
+def init(rng: jax.Array, spec: QLinearSpec, dtype=jnp.float32) -> Params:
+    shape = (spec.in_dim, spec.out_dim)
+    if spec.experts:
+        shape = (spec.experts,) + shape
+    scale = 1.0 / (spec.in_dim ** 0.5)
+    p: Params = {"w": jax.random.normal(rng, shape, dtype) * scale}
+    if spec.use_bias:
+        bshape = (spec.experts, spec.out_dim) if spec.experts else (spec.out_dim,)
+        p["b"] = jnp.zeros(bshape, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# train path (QAT)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ste_attach(q_wire, w, alpha):
+    """Forward: the packed-path value. Backward: straight-through to w
+    (hard-tanh mask). Crucially there is NO full-precision forward value to
+    gather — `q_wire + (ste - stop_grad(ste))` does not work because XLA will
+    not simplify float `a - a` to 0, so the bf16 `ste` got gathered anyway
+    (measured: identical 12.5 TB all-gather; see EXPERIMENTS.md §Perf B)."""
+    return q_wire
+
+
+def _ste_attach_fwd(q_wire, w, alpha):
+    return q_wire, (w, alpha)
+
+
+def _ste_attach_bwd(res, g):
+    w, alpha = res
+    return None, (g * alpha * (jnp.abs(w) <= 1.0)).astype(w.dtype), None
+
+
+_ste_attach.defvjp(_ste_attach_fwd, _ste_attach_bwd)
+
+
+def _packed_wire_weight(w: jnp.ndarray, spec: QLinearSpec) -> jnp.ndarray:
+    """QAT weight whose *value* flows through the packed bit-plane format.
+
+    §Perf B (beyond paper, built from the paper's own format): under FSDP,
+    XLA all-gathers the weight at every use — in bf16 that wire dominates
+    large-model training. The QAT forward only needs the *quantized* weight,
+    so its value is computed from `core.pack` planes pinned replicated-over-
+    data: GSPMD must place the data-axis all-gather on the 1/2/8-bit planes
+    (16x/8x/2x less wire than bf16). The STE gradient reaches the sharded
+    master weight through `_ste_attach` (custom_vjp), so no full-precision
+    forward tensor ever exists to be gathered."""
+    from jax.sharding import PartitionSpec as P
+    prec = spec.lq.weights.precision
+
+    def rep(t):
+        """Pin replicated-over-data (out-dim stays on model) — forces the
+        FSDP all-gather HERE, on the packed planes. No-op without a mesh."""
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+            if mesh is None or "model" not in (mesh.axis_names or ()):
+                return t
+            return jax.lax.with_sharding_constraint(
+                t, P(*([None] * (t.ndim - 1)), "model"))
+        except Exception:
+            return t
+
+    wq = jax.lax.stop_gradient(w)
+    if prec == "ternary":
+        q = jax.lax.stop_gradient(ternarize(wq, spec.lq.weights.ternary_threshold))
+        qa = jnp.abs(q)
+        alpha = (jnp.sum(jnp.abs(wq) * qa, axis=-2, keepdims=True)
+                 / (jnp.sum(qa, axis=-2, keepdims=True) + 1e-6))
+        m, sgn = pack.pack_ternary(jnp.swapaxes(q, -1, -2))  # pack along in-dim
+        q_wire = jnp.swapaxes(pack.unpack_ternary(
+            rep(m), rep(sgn), w.shape[-2]), -1, -2) * alpha
+        q_wire = q_wire.astype(jnp.bfloat16)
+    elif prec == "binary":
+        q = jax.lax.stop_gradient(binarize(wq))
+        alpha = jnp.mean(jnp.abs(wq), axis=-2, keepdims=True)
+        words = pack.pack_binary(jnp.swapaxes(q, -1, -2))
+        q_wire = (jnp.swapaxes(pack.unpack_binary(
+            rep(words), w.shape[-2]), -1, -2) * alpha).astype(jnp.bfloat16)
+    elif prec == "int8":
+        axis = tuple(range(w.ndim - 1))
+        sc = int8_scale(wq, axis=axis)
+        codes = rep(int8_codes(wq, sc))
+        q_wire = codes.astype(jnp.float32) * sc
+        alpha = jnp.ones((), w.dtype)
+    else:
+        return fake_quant(w, spec.lq.weights, scale_axis=-2)
+    return _ste_attach(q_wire, w, jax.lax.stop_gradient(alpha))
+
+
+def _apply_train(p: Params, x: jnp.ndarray, spec: QLinearSpec,
+                 wire: str = "dense") -> jnp.ndarray:
+    # keep the master dtype through fake-quant: upcasting to f32 here made
+    # every FSDP weight gather (and the STE backward reshard) move 2x the
+    # bytes — nemotron-340b train: 3.7 TiB f32(18432,18432) gathers
+    # (EXPERIMENTS.md §Perf B iter-5)
+    wf = p["w"]
+    if wire == "packed" and not spec.experts and wf.shape[-2] % 32 == 0:
+        w = _packed_wire_weight(wf, spec).astype(x.dtype)
+    else:
+        # alpha per out-channel (reduce the in-dim) == serve w_scale algebra
+        w = fake_quant(wf, spec.lq.weights, scale_axis=-2).astype(x.dtype)
+    # name the gathered+quantized weight so the remat policy can SAVE it:
+    # re-gathering weights during backward recompute tripled the FSDP
+    # all-gather volume (§Perf B iter-6)
+    from jax.ad_checkpoint import checkpoint_name
+    w = checkpoint_name(w, "qweight")
+    xq = fake_quant(x, spec.lq.acts, scale_axis=-1)  # per-row a_alpha
+    if spec.experts:
+        y = jnp.einsum("e...k,ekn->e...n", xq, w)
+    else:
+        y = xq @ w
+    if "b" in p:
+        b = p["b"]
+        y = y + (b[:, None, :] if spec.experts and b.ndim == 2 else b)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# serve layout: pack_params + spec tree for the dry-run
+# ---------------------------------------------------------------------------
+
+def pack_params(p: Params, spec: QLinearSpec) -> Params:
+    """Convert train-layout params to the packed serve layout.
+
+    binary : w_packed  uint32[(E,) out, in/32]     (bit = +1)
+             w_scale   f32[(E,) out]               (XNOR-Net per-channel alpha)
+    ternary: w_mask/w_sign uint32[(E,) out, in/32]
+             w_scale   f32[(E,) out]
+    int8   : w_q       int8[(E,) in, out]
+             w_scale   f32[(E,) out]
+    none   : w         bf16 (dense weights, cast)
+    `a_scale` (f32 scalar) is a calibrated activation scale for int8 acts.
+    """
+    w = p["w"].astype(jnp.float32)
+    prec = spec.lq.weights.precision
+    out: Params = {}
+    # channel-last -> put out_dim first for the packed (K-last) layouts
+    wt = jnp.swapaxes(w, -1, -2)  # (E,) out, in
+    if prec == "binary":
+        out["w_packed"] = pack.pack_binary(jnp.sign(wt) + (wt == 0))
+        out["w_scale"] = jnp.mean(jnp.abs(wt), axis=-1)
+    elif prec == "ternary":
+        q = ternarize(wt, spec.lq.weights.ternary_threshold)
+        m, s = pack.pack_ternary(jax.lax.stop_gradient(q))
+        out["w_mask"], out["w_sign"] = m, s
+        nz = jnp.sum(jnp.abs(q), axis=-1) + 1e-6
+        out["w_scale"] = jnp.sum(jnp.abs(wt) * jnp.abs(q), axis=-1) / nz
+    elif prec == "int8":
+        s = int8_scale(w, axis=(w.ndim - 2,))  # reduce in_dim, keep experts
+        out["w_q"] = int8_codes(w, s)
+        out["w_scale"] = jnp.squeeze(s, axis=w.ndim - 2)
+    else:
+        out["w"] = w.astype(jnp.bfloat16)
+    if spec.lq.acts.precision == "int8":
+        out["a_scale"] = jnp.float32(0.05)  # calibration constant
+    if "b" in p:
+        out["b"] = p["b"].astype(jnp.float32)
+    return out
+
+
+def serve_param_shapes(spec: QLinearSpec) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct tree of the serve layout (dry-run, no allocation)."""
+    e = (spec.experts,) if spec.experts else ()
+    k, n = spec.in_dim, spec.out_dim
+    prec = spec.lq.weights.precision
+    sd = jax.ShapeDtypeStruct
+    out: dict[str, jax.ShapeDtypeStruct] = {}
+    if prec == "binary":
+        out["w_packed"] = sd(e + (n, k // 32), jnp.uint32)
+        out["w_scale"] = sd(e + (n,), jnp.float32)
+    elif prec == "ternary":
+        out["w_mask"] = sd(e + (n, k // 32), jnp.uint32)
+        out["w_sign"] = sd(e + (n, k // 32), jnp.uint32)
+        out["w_scale"] = sd(e + (n,), jnp.float32)
+    elif prec == "int8":
+        out["w_q"] = sd(e + (k, n), jnp.int8)
+        out["w_scale"] = sd(e + (n,), jnp.float32)
+    else:
+        out["w"] = sd(e + (k, n), jnp.bfloat16)
+    if spec.lq.acts.precision == "int8":
+        out["a_scale"] = sd((), jnp.float32)
+    if spec.use_bias:
+        out["b"] = sd(e + (n,) if e else (n,), jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serve path — jnp formulations (XLA; the Pallas kernels mirror these)
+# ---------------------------------------------------------------------------
+
+def _binary_gemm_popcount(xp: jnp.ndarray, wp: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Paper-faithful XNOR+popcount GEMM. xp: (..., K/32) uint32 packed acts,
+    wp: (N, K/32) packed weights -> (..., N) int32."""
+    mism = jnp.sum(
+        jax.lax.population_count(xp[..., None, :] ^ wp).astype(jnp.int32), axis=-1)
+    return jnp.int32(k) - 2 * mism
+
+
+def _ternary_gemm_popcount(xm, xs, wm, ws) -> jnp.ndarray:
+    """Gated-XNOR+popcount GEMM over trit planes -> (..., N) int32."""
+    am = xm[..., None, :] & wm
+    dis = am & (xs[..., None, :] ^ ws)
+    pc = lambda v: jnp.sum(jax.lax.population_count(v).astype(jnp.int32), axis=-1)
+    return pc(am) - 2 * pc(dis)
+
+
+def _unpack_pm1_i8(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Unpack bit-plane words to ±1 int8 along a new last axis of length k."""
+    bits = pack.unpack_bits(words, k)
+    return (bits.astype(jnp.int8) * 2 - 1)
+
+
+def _binary_gemm_mxu(x: jnp.ndarray, wp: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Beyond-paper MXU formulation: unpack weights to ±1 and dense-dot.
+    x is bf16 acts (weight-only) or ±1 int8 (W&A binary)."""
+    w = _unpack_pm1_i8(wp, k)  # (N, K)
+    if x.dtype == jnp.int8:
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    return x @ w.astype(x.dtype).T
+
+
+def _ternary_unpack_i8(wm, ws, k: int) -> jnp.ndarray:
+    mask = pack.unpack_bits(wm, k).astype(jnp.int8)
+    sign = pack.unpack_bits(ws, k).astype(jnp.int8)
+    return mask * (1 - 2 * sign)
+
+
+def apply(p: Params, x: jnp.ndarray, spec: QLinearSpec, *,
+          mode: str = "train", impl: str = "popcount",
+          backend: str = "jnp", wire: str = "dense") -> jnp.ndarray:
+    """Apply the quantized linear. See module docstring for modes."""
+    if mode == "train":
+        return _apply_train(p, x, spec, wire)
+    if mode != "serve":
+        raise ValueError(f"mode={mode!r}")
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.qlinear_serve(p, x, spec, impl=impl)
+    return _apply_serve_jnp(p, x, spec, impl)
+
+
+def _apply_serve_jnp(p: Params, x: jnp.ndarray, spec: QLinearSpec, impl: str) -> jnp.ndarray:
+    if spec.experts:
+        # vmap the dense serve path over the expert axis; x: (E, ..., K)
+        sub = dataclasses.replace(spec, experts=0)
+        sub_p = {k: v for k, v in p.items() if k != "a_scale"}
+        fn = lambda pp, xx: _apply_serve_jnp(
+            {**pp, **({"a_scale": p["a_scale"]} if "a_scale" in p else {})}, xx, sub, impl)
+        return jax.vmap(fn)(sub_p, x)
+
+    wprec = spec.lq.weights.precision
+    aprec = spec.lq.acts.precision
+    k = spec.in_dim
+    odt = jnp.bfloat16
+
+    if wprec == "binary":
+        wscale = p["w_scale"]
+        if aprec == "binary":
+            a_alpha = jnp.mean(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
+            if impl == "popcount":
+                xp = pack.pack_binary(jnp.where(x >= 0, 1.0, -1.0))
+                acc = _binary_gemm_popcount(xp, p["w_packed"], k)
+            else:
+                xi = jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+                acc = _binary_gemm_mxu(xi, p["w_packed"], k)
+            y = acc.astype(jnp.float32) * wscale * a_alpha
+        else:  # weight-only binary: bf16 acts, MXU — stay bf16 end-to-end so
+            # the row-parallel TP partial-sum reduces in bf16 (2x wire, §Perf A)
+            acc = _binary_gemm_mxu(x.astype(odt), p["w_packed"], k)
+            y = acc * wscale.astype(odt)
+    elif wprec == "ternary":
+        wscale = p["w_scale"]
+        if aprec == "ternary":
+            a_alpha = jnp.mean(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
+            xq = ternarize(x.astype(jnp.float32))
+            if impl == "popcount":
+                xm, xs = pack.pack_ternary(jax.lax.stop_gradient(xq))
+                acc = _ternary_gemm_popcount(xm, xs, p["w_mask"], p["w_sign"])
+            else:
+                xi = xq.astype(jnp.int8)
+                w = _ternary_unpack_i8(p["w_mask"], p["w_sign"], k)  # (N, K)
+                acc = jax.lax.dot_general(
+                    xi, w, (((x.ndim - 1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+            y = acc.astype(jnp.float32) * wscale * a_alpha
+        else:
+            w = _ternary_unpack_i8(p["w_mask"], p["w_sign"], k).astype(odt)
+            y = (x.astype(odt) @ w.T) * wscale.astype(odt)   # bf16 TP reduce
+    elif wprec == "int8":
+        wscale = p["w_scale"]
+        if aprec == "int8":
+            a_s = p["a_scale"]
+            xi = int8_codes(x.astype(jnp.float32), a_s)
+            acc = jax.lax.dot_general(
+                xi, p["w_q"], (((x.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            y = acc.astype(jnp.float32) * (wscale * a_s)
+        else:
+            y = (x.astype(odt) @ p["w_q"].astype(odt)) * wscale.astype(odt)
+    else:  # dense bf16
+        y = x.astype(odt) @ p["w"]
+
+    if "b" in p:
+        y = (y.astype(jnp.float32) + p["b"]).astype(odt)
+    return y.astype(odt)

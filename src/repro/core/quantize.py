@@ -1,0 +1,148 @@
+"""Quantizers for BrainTTA's three operand precisions: binary, ternary, int8.
+
+The paper (§II-A) restricts weights/activations to {-1,+1} (binary) or
+{-1,0,+1} (ternary), or to int8. For *training* (which the edge SoC does not
+do, but a pod framework must) we use straight-through-estimator (STE)
+fake-quantization: the forward pass sees the quantized value, the backward
+pass sees the identity (clipped). For *serving*, `repro.core.pack` converts
+the quantized tensors into the bit-plane format the packed kernels consume.
+
+All quantizers share the signature ``quantize(x, scale) -> q`` where ``q``
+is float-typed but holds only representable values (fake-quant), plus an
+integer-codes variant used by the packed/serve path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Precision = Literal["binary", "ternary", "int8", "none"]
+
+#: bits per operand for each precision (paper Table I / §IV-B: v_C = 32/16/4
+#: operands per 32-bit word => 1/2/8 bits each).
+BITS = {"binary": 1, "ternary": 2, "int8": 8, "none": 16}
+
+#: packing density: operands per 32-bit word (paper's v_C for a 32-bit lane).
+PACK_FACTOR = {"binary": 32, "ternary": 16, "int8": 4}
+
+
+def _ste(fwd: jnp.ndarray, grad_path: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: forward `fwd`, gradient of `grad_path`."""
+    return grad_path + jax.lax.stop_gradient(fwd - grad_path)
+
+
+# ---------------------------------------------------------------------------
+# binary {-1,+1}
+# ---------------------------------------------------------------------------
+
+def binarize(x: jnp.ndarray) -> jnp.ndarray:
+    """sign(x) in {-1,+1} with STE on the clipped input (BinaryNet-style).
+
+    Gradient is passed through only inside |x|<=1 (hard-tanh STE), which is
+    the standard estimator for binary nets [Rastegari'16].
+    """
+    q = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    return _ste(q, jnp.clip(x, -1.0, 1.0))
+
+
+def binary_codes(x: jnp.ndarray) -> jnp.ndarray:
+    """Integer codes for the serve path: 1 for +1, 0 for -1 (uint8)."""
+    return (x >= 0).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# ternary {-1,0,+1}
+# ---------------------------------------------------------------------------
+
+def ternarize(x: jnp.ndarray, threshold: float = 0.05) -> jnp.ndarray:
+    """Symmetric-threshold ternarization with STE [GXNOR-Net].
+
+    q = 0 when |x| <= t, else sign(x). `threshold` is relative to the
+    per-tensor mean absolute value, matching common TWN practice.
+    """
+    t = threshold * jnp.mean(jnp.abs(x)) + 1e-8
+    q = jnp.where(x > t, 1.0, jnp.where(x < -t, -1.0, 0.0)).astype(x.dtype)
+    return _ste(q, jnp.clip(x, -1.0, 1.0))
+
+
+def ternary_codes(x: jnp.ndarray, threshold: float = 0.05) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(mask, sign) code planes for the serve path.
+
+    mask = 1 where the trit is non-zero; sign = 1 where the trit is -1.
+    This is exactly the gated-XNOR encoding of §II-A.
+    """
+    t = threshold * jnp.mean(jnp.abs(x)) + 1e-8
+    mask = (jnp.abs(x) > t).astype(jnp.uint8)
+    sign = (x < -t).astype(jnp.uint8)
+    return mask, sign
+
+
+# ---------------------------------------------------------------------------
+# int8 (symmetric, per-channel scale)
+# ---------------------------------------------------------------------------
+
+def int8_scale(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    """Symmetric per-channel scale: max|x| / 127 (axis=None => per-tensor)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return amax / 127.0 + 1e-12
+
+
+def quantize_int8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quant int8 with STE: round(x/s) clipped to [-127,127], times s."""
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0) * scale
+    return _ste(q.astype(x.dtype), x)
+
+
+def int8_codes(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Integer int8 codes for the serve path."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# unified fake-quant entry point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How one tensor class (weights or activations of a layer) is quantized."""
+    precision: Precision = "none"
+    ternary_threshold: float = 0.05
+    per_channel: bool = True  # int8 only; channel = last axis
+
+    @property
+    def bits(self) -> int:
+        return BITS[self.precision]
+
+
+def fake_quant(x: jnp.ndarray, spec: QuantSpec, scale_axis=None) -> jnp.ndarray:
+    """STE fake-quantization per `spec` (training / QAT path).
+
+    binary/ternary carry the XNOR-Net alpha scale (mean|x| over `scale_axis`;
+    per-tensor when None) so the QAT forward matches the packed serve path's
+    `w_scale`/`a_alpha` algebra — without it the quantized magnitudes collapse
+    to +-1 and QAT gradients explode (measured gnorm 1e12 on the pure-ternary
+    sweep; EXPERIMENTS.md Bench qat_quality).
+    """
+    if spec.precision == "none":
+        return x
+    if spec.precision == "binary":
+        q = binarize(x)
+        alpha = jax.lax.stop_gradient(
+            jnp.mean(jnp.abs(x), axis=scale_axis, keepdims=scale_axis is not None))
+        return q * alpha
+    if spec.precision == "ternary":
+        q = ternarize(x, spec.ternary_threshold)
+        qa = jax.lax.stop_gradient(jnp.abs(q))
+        num = jnp.sum(jnp.abs(x) * qa, axis=scale_axis,
+                      keepdims=scale_axis is not None)
+        den = jnp.sum(qa, axis=scale_axis, keepdims=scale_axis is not None) + 1e-6
+        return q * jax.lax.stop_gradient(num / den)
+    if spec.precision == "int8":
+        axis = tuple(range(x.ndim - 1)) if spec.per_channel else None
+        s = jax.lax.stop_gradient(int8_scale(x, axis=axis))
+        return quantize_int8(x, s)
+    raise ValueError(f"unknown precision {spec.precision!r}")

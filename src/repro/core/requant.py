@@ -1,0 +1,61 @@
+"""Requantization — BrainTTA layer type 7 (§IV-A) and the "as early as
+possible" principle of §IV-B.
+
+The wide accumulator (int32 for int8 GEMMs, int16-equivalent for b/t popcount
+sums) is rescaled back into the narrow operand format of the *next* layer.
+In the SoC this is a vOPS instruction fused right after the vMAC; here it is
+an epilogue fused into the GEMM kernels (see kernels/*.py) and, for the QAT
+path, a float op.
+
+Requantization for residual addition (layer type 6) requires both addends to
+share a scale; `match_scales` produces the common scale and the two integer
+rescale factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+from .quantize import Precision
+
+
+@dataclasses.dataclass(frozen=True)
+class RequantParams:
+    """Per-output-channel affine requant: y = clip(round(acc * scale + bias))."""
+    out_precision: Precision  # target format of the next layer's operands
+
+
+def requantize(
+    acc: jnp.ndarray,
+    scale: jnp.ndarray,
+    bias: jnp.ndarray | None,
+    out_precision: Precision,
+    ternary_threshold: float = 0.5,
+) -> jnp.ndarray:
+    """Rescale a wide accumulator into the narrow operand format.
+
+    acc:   int32 (or float) accumulator, channels on the last axis.
+    scale: per-channel (broadcastable) float scale.
+    bias:  optional per-channel float bias (folded BN / layer bias).
+    """
+    y = acc.astype(jnp.float32) * scale
+    if bias is not None:
+        y = y + bias
+    if out_precision == "binary":
+        return jnp.where(y >= 0, 1.0, -1.0)
+    if out_precision == "ternary":
+        return jnp.where(y > ternary_threshold, 1.0, jnp.where(y < -ternary_threshold, -1.0, 0.0))
+    if out_precision == "int8":
+        return jnp.clip(jnp.round(y), -127, 127)
+    return y  # "none": hand back the rescaled float (residual stream)
+
+
+def match_scales(scale_a: jnp.ndarray, scale_b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Common scale + per-addend multipliers for residual addition (§IV-A).
+
+    a*scale_a + b*scale_b == (a*ma + b*mb) * common, common = max(sa, sb).
+    """
+    common = jnp.maximum(scale_a, scale_b)
+    return common, scale_a / common, scale_b / common

@@ -1,0 +1,3 @@
+"""Deterministic, shardable, restartable data pipelines."""
+from . import pipeline  # noqa: F401
+from .pipeline import PipelineConfig, SyntheticLM, make_source, Prefetcher  # noqa: F401

@@ -1,0 +1,114 @@
+"""Data pipeline: deterministic, shardable, restartable token streams.
+
+Sources:
+  * SyntheticLM — seeded Zipfian token stream (self-contained; what the
+    examples/benchmarks train on).
+  * PackedFileSource — memory-mapped uint16/uint32 token files (the
+    production path: tokenize offline, mmap here).
+
+The pipeline is *step-indexed*: `batch_at(step)` is a pure function of
+(seed, step), so a restarted job resumes the exact stream position from the
+checkpointed step — no iterator state to persist (fault-tolerance substrate).
+Per-host sharding: each host materializes only its slice of the global batch
+(`host_slice`), which feeds jax.make_array_from_process_local_data on real
+multi-host pods; on this container host_count=1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_index: int = 0
+    host_count: int = 1
+    zipf_a: float = 1.2          # synthetic source skew
+
+
+class SyntheticLM:
+    """Deterministic Zipfian LM stream with a repeated-ngram structure so a
+    model can actually learn (loss decreases measurably within ~100 steps)."""
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        base = np.random.default_rng(cfg.seed)
+        # fixed "motifs" reused across the stream: learnable structure
+        self.motifs = base.integers(
+            0, cfg.vocab, size=(64, 16)).astype(np.int32)
+
+    def host_slice(self) -> tuple[int, int]:
+        per = self.cfg.global_batch // self.cfg.host_count
+        return self.cfg.host_index * per, per
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        start, per = self.host_slice()
+        rng = np.random.default_rng((cfg.seed, step))
+        t = cfg.seq_len + 1
+        n_mot = t // 16 + 1
+        idx = rng.integers(0, len(self.motifs), size=(per, n_mot))
+        stream = self.motifs[idx].reshape(per, -1)[:, :t]
+        # sprinkle Zipf noise at 20% positions
+        noise_mask = rng.random((per, t)) < 0.2
+        noise = (rng.zipf(cfg.zipf_a, size=(per, t)) - 1) % cfg.vocab
+        stream = np.where(noise_mask, noise.astype(np.int32), stream)
+        return {"tokens": stream[:, :-1], "targets": stream[:, 1:]}
+
+
+class PackedFileSource:
+    """mmap'd token file -> fixed-length rows; step-indexed like SyntheticLM."""
+
+    def __init__(self, cfg: PipelineConfig, path: str, dtype=np.uint16):
+        self.cfg = cfg
+        self.data = np.memmap(path, dtype=dtype, mode="r")
+        self.rows = (len(self.data) - 1) // cfg.seq_len
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        per = cfg.global_batch // cfg.host_count
+        rng = np.random.default_rng((cfg.seed, step))
+        rows = rng.integers(0, self.rows, size=(per,))
+        offs = rows * cfg.seq_len
+        t = cfg.seq_len
+        toks = np.stack([self.data[o:o + t + 1] for o in offs]).astype(np.int32)
+        return {"tokens": toks[:, :-1] % cfg.vocab,
+                "targets": toks[:, 1:] % cfg.vocab}
+
+
+def make_source(cfg: PipelineConfig, path: str | None = None):
+    return PackedFileSource(cfg, path) if path else SyntheticLM(cfg)
+
+
+class Prefetcher:
+    """One-batch-ahead prefetch on a worker thread (overlap host data prep
+    with device compute — the data-pipeline half of comm/compute overlap)."""
+
+    def __init__(self, source, start_step: int = 0):
+        import queue
+        import threading
+        self.source = source
+        self.q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._stop = threading.Event()
+
+        def work():
+            step = start_step
+            while not self._stop.is_set():
+                try:
+                    self.q.put((step, source.batch_at(step)), timeout=0.5)
+                    step += 1
+                except Exception:
+                    continue
+        self.thread = threading.Thread(target=work, daemon=True)
+        self.thread.start()
+
+    def next(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for BrainTTA's compute hot-spot: the mixed-precision GEMM.
+
+bgemm — binary XNOR+popcount (vBMAC), + beyond-paper MXU variant
+tgemm — ternary gated-XNOR+popcount (vTMAC)
+i8gemm — int8 MXU GEMM with fused requant epilogue (8-bit vMAC)
+ops   — jit'd model-facing wrappers; ref — pure-jnp oracles.
+"""
+from . import bgemm, i8gemm, ops, ref, tgemm  # noqa: F401
+from . import flash_attn  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas GEMM kernels.
+
+These define the exact semantics each kernel must reproduce; the kernel tests
+sweep shapes/dtypes and assert_allclose against these. All three GEMMs share
+the BrainTTA contract (DESIGN.md §6):
+
+  out[m, n] = requant( sum_k x[m, k] * w[n, k] )   with the fused epilogue
+  requant(acc) = acc * w_scale[n] * a_scale[m]  (+ bias[n])        -> bf16
+
+Operand encodings match `repro.core.pack`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack
+
+
+def binary_gemm_ref(x_packed: jnp.ndarray, w_packed: jnp.ndarray, k: int,
+                    w_scale: jnp.ndarray, a_scale: jnp.ndarray) -> jnp.ndarray:
+    """XNOR-popcount GEMM oracle.
+
+    x_packed: (M, K/32) uint32, w_packed: (N, K/32) uint32,
+    w_scale: (N,) f32, a_scale: (M,) f32 -> (M, N) bf16.
+    """
+    x = pack.unpack_binary(x_packed, k)          # (M, K) in {-1,+1}
+    w = pack.unpack_binary(w_packed, k)          # (N, K)
+    acc = x @ w.T                                # exact in f32 (values ±K)
+    return (acc * w_scale[None, :] * a_scale[:, None]).astype(jnp.bfloat16)
+
+
+def ternary_gemm_ref(x_mask, x_sign, w_mask, w_sign, k: int,
+                     w_scale, a_scale) -> jnp.ndarray:
+    """Gated-XNOR popcount GEMM oracle (trit planes)."""
+    x = pack.unpack_ternary(x_mask, x_sign, k)   # (M, K) in {-1,0,+1}
+    w = pack.unpack_ternary(w_mask, w_sign, k)   # (N, K)
+    acc = x @ w.T
+    return (acc * w_scale[None, :] * a_scale[:, None]).astype(jnp.bfloat16)
+
+
+def i8_gemm_ref(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                w_scale: jnp.ndarray, a_scale: jnp.ndarray,
+                bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """int8 GEMM oracle with fused requant epilogue.
+
+    x_q: (M, K) int8, w_q: (K, N) int8, w_scale: (N,), a_scale: (M,) -> bf16.
+    """
+    acc = jax.lax.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    y = acc.astype(jnp.float32) * w_scale[None, :] * a_scale[:, None]
+    if bias is not None:
+        y = y + bias[None, :]
+    return y.astype(jnp.bfloat16)
+
+
+def binary_gemm_mxu_ref(x_packed, w_packed, k: int, w_scale, a_scale) -> jnp.ndarray:
+    """Oracle for the beyond-paper MXU formulation — semantics identical to
+    binary_gemm_ref (the formulations must agree bit-exactly on the int acc)."""
+    return binary_gemm_ref(x_packed, w_packed, k, w_scale, a_scale)

@@ -1,0 +1,85 @@
+"""Ternary gated-XNOR+popcount GEMM — the vTMAC unit as a Pallas TPU kernel.
+
+Trits are stored as two bit-planes (mask, sign) per `repro.core.pack`:
+16 trits per 32-bit word-pair (v_C=16, §IV-B). The gated-XNOR algebra
+(§II-A): a lane contributes only when both operands are non-zero
+(mask AND), the product sign is the XOR of the sign bits:
+
+    active   = xm & wm
+    disagree = active & (xs ^ ws)
+    dot     += popcount(active) − 2·popcount(disagree)
+
+Same output-stationary skeleton and fused requant epilogue as bgemm; two
+int32 VMEM accumulators (active count, disagree count).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD = 32
+
+
+def _tgemm_kernel(xm_ref, xs_ref, wm_ref, ws_ref, wsc_ref, asc_ref,
+                  o_ref, act_ref, dis_ref, *, bkw):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        act_ref[...] = jnp.zeros_like(act_ref)
+        dis_ref[...] = jnp.zeros_like(dis_ref)
+
+    xm, xs = xm_ref[...], xs_ref[...]   # (bm, bkw)
+    wm, ws = wm_ref[...], ws_ref[...]   # (bn, bkw)
+
+    def body(i, carry):
+        act, dis = carry
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, axis=1)
+        xmi, xsi = sl(xm), sl(xs)                     # (bm, 1)
+        wmi, wsi = sl(wm).T, sl(ws).T                 # (1, bn)
+        active = jnp.bitwise_and(xmi, wmi)            # (bm, bn)
+        disagree = jnp.bitwise_and(active, jnp.bitwise_xor(xsi, wsi))
+        act = act + jax.lax.population_count(active).astype(jnp.int32)
+        dis = dis + jax.lax.population_count(disagree).astype(jnp.int32)
+        return act, dis
+
+    act, dis = jax.lax.fori_loop(0, bkw, body, (act_ref[...], dis_ref[...]))
+    act_ref[...], dis_ref[...] = act, dis
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        dot = act_ref[...] - 2 * dis_ref[...]
+        y = dot.astype(jnp.float32) * wsc_ref[...][None, :] * asc_ref[...][:, None]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bkw", "interpret"))
+def tgemm(x_mask, x_sign, w_mask, w_sign, w_scale, a_scale, *, k: int,
+          bm: int = 128, bn: int = 128, bkw: int = 16,
+          interpret: bool = True) -> jnp.ndarray:
+    """Packed ternary GEMM: planes (M, K/32)u32 × (N, K/32)u32 → (M, N) bf16."""
+    m, kw = x_mask.shape
+    n, kw2 = w_mask.shape
+    assert kw == kw2 and kw * WORD == k
+    bm, bn, bkw = min(bm, m), min(bn, n), min(bkw, kw)
+    assert m % bm == 0 and n % bn == 0 and kw % bkw == 0
+
+    grid = (m // bm, n // bn, kw // bkw)
+    return pl.pallas_call(
+        functools.partial(_tgemm_kernel, bkw=bkw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bkw), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bkw), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bkw), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bkw), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32), pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_mask, x_sign, w_mask, w_sign, w_scale, a_scale)

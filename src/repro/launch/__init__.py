@@ -1,0 +1,3 @@
+"""Distributed launch layer: production meshes, sharding rules, the multi-pod
+dry-run, roofline analysis, and the fault-tolerant train/serve drivers."""
+from . import mesh, roofline, sharding, step  # noqa: F401

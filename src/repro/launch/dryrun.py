@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh) cell
+against 512 placeholder CPU devices, prove the sharding is coherent, and
+extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k [--multi-pod] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the device
+count on first init) — and must NOT leak into tests/benches, which see one
+device (hence: only here, never in conftest).
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.configs.base import SHAPES        # noqa: E402
+from repro.launch import roofline as rl      # noqa: E402
+from repro.launch import step as step_mod    # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def calibrate_cost_scope(mesh) -> str:
+    """Determine whether compiled.cost_analysis() reports per-device or global
+    FLOPs under SPMD partitioning, by lowering a known matmul."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = 1024
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    sh = NamedSharding(mesh, P("data", "model"))
+    c = (jax.jit(lambda a, b: a @ b, in_shardings=(sh, sh))
+         .lower(x, x).compile())
+    cost = c.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0))
+    global_flops = 2 * n ** 3
+    return "global" if flops > 0.5 * global_flops else "per_device"
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, cost_scope: str,
+             verbose: bool = True, fsdp: bool = True, overrides: dict | None = None):
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    chips = mesh.size
+    t0 = time.time()
+    step, args, in_sh, out_sh, donate = step_mod.cell_lowering_args(
+        cfg, shape_name, mesh, fsdp=fsdp)
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    r = rl.analyse(arch, shape_name, mesh_name, chips, compiled, cfg,
+                   cost_scope=cost_scope)
+    out = r.to_json()
+    out["lower_s"] = round(t_lower, 1)
+    out["compile_s"] = round(t_compile, 1)
+    out["policy"] = cfg.policy
+    if verbose:
+        ma = out["memory_per_device"]
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        print(f"  memory/device: args {ma.get('argument_size_in_bytes', 0)/2**30:.2f} GiB, "
+              f"temp {ma.get('temp_size_in_bytes', 0)/2**30:.2f} GiB, "
+              f"out {ma.get('output_size_in_bytes', 0)/2**30:.2f} GiB "
+              f"(alias {ma.get('alias_size_in_bytes', 0)/2**30:.2f})")
+        print(f"  roofline[s]: compute {r.t_compute:.4f}  memory {r.t_memory:.4f} "
+              f" collective {r.t_collective:.4f}  -> {r.bottleneck}-bound, "
+              f"useful-ratio {r.useful_ratio:.2f}, roofline-frac {r.roofline_fraction:.3f}")
+        pk = {k: round(v / 2**20, 1) for k, v in out['coll_detail']['per_kind'].items() if v}
+        print(f"  collectives (MiB): {pk}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every supported (arch, shape) cell")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--policy", default=None, help="override precision policy")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (bool/int/str inferred)")
+    ap.add_argument("--out", default=None, help="JSON output file")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    assert mesh.size == (512 if args.multi_pod else 256), mesh
+    cost_scope = calibrate_cost_scope(mesh)
+    print(f"devices: {len(jax.devices())}, mesh {dict(mesh.shape)}, "
+          f"cost_analysis scope: {cost_scope}")
+
+    overrides = {}
+    if args.policy:
+        overrides["policy"] = args.policy
+    if args.microbatches:
+        overrides["microbatches"] = args.microbatches
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("true", "false"):
+            v = v == "true"
+        elif v.lstrip("-").isdigit():
+            v = int(v)
+        overrides[k] = v
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in get_config(a).supported_shapes:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results, failures = [], []
+    for a, s in cells:
+        try:
+            results.append(run_cell(a, s, multi_pod=args.multi_pod,
+                                    cost_scope=cost_scope,
+                                    fsdp=not args.no_fsdp,
+                                    overrides=overrides or None))
+        except Exception as e:  # a failing cell is a bug — surface loudly
+            traceback.print_exc()
+            failures.append({"arch": a, "shape": s, "error": repr(e)})
+    if args.out:
+        payload = {"multi_pod": args.multi_pod, "cost_scope": cost_scope,
+                   "results": results, "failures": failures}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.out}")
+    print(f"{len(results)} cells OK, {len(failures)} failed")
+    if failures:
+        for f in failures:
+            print("FAILED:", f["arch"], f["shape"], f["error"][:200])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,352 @@
+"""Trip-count-aware HLO cost model.
+
+`compiled.cost_analysis()` counts a `while` (lax.scan) body ONCE, ignoring the
+trip count — useless for scan-over-layers/microbatch models (verified: an
+8-step scanned matmul reports 1/8 the FLOPs of its unrolled twin). This module
+parses the post-SPMD optimized HLO text and computes:
+
+    flops             dot ops: 2 * result_elems * contracted_elems
+                      (elementwise ops: 1 flop/result element, XLA convention)
+    bytes             per top-level op: operands + result at fusion boundaries
+                      (dynamic-slice/update-slice count sliced bytes only —
+                      the in-place KV-cache update costs its update, not the
+                      whole cache)
+    collective bytes  result bytes of all-reduce / all-gather / reduce-scatter
+                      / all-to-all / collective-permute, by kind
+
+with every op's cost multiplied by the product of enclosing while-loop trip
+counts (canonical scan conditions: `compare(counter, constant(N))`).
+
+This is the project's dry-run profiler: §Roofline and §Perf read from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|[a-z0-9\[\],{} ]+?))\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+@dataclasses.dataclass
+class Shape:
+    parts: list[tuple[str, tuple[int, ...]]]
+
+    @property
+    def bytes(self) -> int:
+        total = 0
+        for dt, dims in self.parts:
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES.get(dt, 4)
+        return total
+
+    @property
+    def elems(self) -> int:
+        return sum(int(__import__("numpy").prod(d)) if d else 1
+                   for _, d in self.parts)
+
+
+def _parse_shape(text: str) -> Shape:
+    parts = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        if dt in _DTYPE_BYTES or dt in ("s4", "u4"):
+            dims_t = tuple(int(x) for x in dims.split(",") if x)
+            parts.append((dt, dims_t))
+    return Shape(parts)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    shape: Shape
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict  # name -> Op
+    order: list
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+    coll_count: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + v * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+# ops that move no data / are free
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator"}
+# pure data movement (bytes, no flops)
+_MOVE = {"copy", "reshape", "transpose", "broadcast", "slice", "concatenate",
+         "pad", "reverse", "convert"}
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1), {}, [])
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        om = _OPCODE_RE.match(rest)
+        if not om:
+            continue
+        shape_txt, opcode = om.groups()
+        # operand list: inside the first (...) after opcode
+        paren = rest[om.end() - 1:]
+        depth, end = 0, len(paren)
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND_RE.findall(paren[:end + 1])
+        cur.ops[name] = Op(name, opcode, _parse_shape(shape_txt), operands, rest)
+        cur.order.append(name)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops.values():
+        if op.opcode == "constant" or "constant(" in op.attrs:
+            pass
+    # scan constants in the raw attr text of all ops
+    for op in cond.ops.values():
+        for m in _CONST_RE.finditer(op.attrs):
+            best = max(best, int(m.group(1)))
+        if op.opcode == "constant":
+            m = _CONST_RE.search(op.attrs) or None
+    return best
+
+
+def _dot_flops(op: Op, table: dict[str, Shape]) -> float:
+    lhs = table.get(op.operands[0] if op.operands else "", None)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    result_elems = op.shape.elems
+    if lhs is None or not lhs.parts or m is None:
+        return 2.0 * result_elems  # fallback
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    contracted = 1
+    for d in cdims:
+        if d < len(lhs.parts[0][1]):
+            contracted *= lhs.parts[0][1][d]
+    return 2.0 * result_elems * contracted
+
+
+def _fusion_bytes(comps, callee: str | None, op: "Op", table: dict) -> float:
+    """Bytes moved at a fusion boundary: result + effective operand reads.
+
+    An operand whose only consumers inside the fused computation are
+    dynamic-slice / gather ops contributes the *slice* bytes, not the full
+    array (critical under lax.scan: the stacked layer params and the
+    microbatched batch are operands of every body fusion but only one slice
+    is read per trip). The fused root being a dynamic-update-slice writes its
+    update, not the whole (aliased) buffer.
+    """
+    result_bytes = op.shape.bytes
+    if callee is None or callee not in comps:
+        return result_bytes + sum(table[o].bytes for o in op.operands
+                                  if o in table)
+    comp = comps[callee]
+    # map parameter index -> consumers
+    param_ops = {}
+    for name in comp.order:
+        o = comp.ops[name]
+        if o.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", o.attrs)
+            if m:
+                param_ops[int(m.group(1))] = name
+    consumers: dict[str, list] = {}
+    root = None
+    for name in comp.order:
+        o = comp.ops[name]
+        if "ROOT" in o.attrs or name == comp.order[-1]:
+            root = o
+        for opd in o.operands:
+            consumers.setdefault(opd, []).append(o)
+    total = 0.0
+    for i, opd in enumerate(op.operands):
+        if opd not in table:
+            continue
+        full = table[opd].bytes
+        pname = param_ops.get(i)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(c.opcode in ("dynamic-slice", "gather") for c in cons):
+            total += sum(c.shape.bytes for c in cons)
+        else:
+            total += full
+    if root is not None and root.opcode == "dynamic-update-slice":
+        # aliased in-place update: write the update, not the whole buffer
+        upd_name = root.operands[1] if len(root.operands) > 1 else None
+        upd = comp.ops.get(upd_name)
+        result_bytes = (upd.shape.bytes if upd is not None else result_bytes)
+    return result_bytes + total
+
+
+def _comp_cost(comps, cname: str, memo: dict, *, top_level: bool,
+               fusion_ctx: bool = False) -> Cost:
+    key = (cname, top_level, fusion_ctx)
+    if key in memo:
+        return memo[key]
+    comp = comps[cname]
+    total = Cost()
+    table = {name: op.shape for name, op in comp.ops.items()}
+
+    for name in comp.order:
+        op = comp.ops[name]
+        oc = op.opcode
+        c = Cost()
+        if oc in _FREE:
+            pass
+        elif oc == "while":
+            body = _BODY_RE.search(op.attrs)
+            cond = _COND_RE.search(op.attrs)
+            trips = _trip_count(comps[cond.group(1)]) if cond else 1
+            if body:
+                c.add(_comp_cost(comps, body.group(1), memo, top_level=True),
+                      mult=trips)
+        elif oc == "fusion":
+            callee = _CALLS_RE.search(op.attrs)
+            cname_in = callee.group(1) if callee else None
+            if cname_in:
+                inner = _comp_cost(comps, cname_in, memo,
+                                   top_level=False, fusion_ctx=True)
+                c.flops += inner.flops
+                c.add(Cost(coll=dict(inner.coll), coll_count=dict(inner.coll_count)))
+            # bytes at the fusion boundary — but an operand consumed only via
+            # dynamic-slice/gather inside the fusion is read sliced, not whole
+            # (scan bodies slice one layer from the stacked params per trip!)
+            c.bytes += _fusion_bytes(comps, cname_in, op, table)
+        elif oc in ("call", "conditional", "custom-call", "async-start"):
+            callee = _CALLS_RE.search(op.attrs)
+            if callee and callee.group(1) in comps:
+                c.add(_comp_cost(comps, callee.group(1), memo, top_level=True))
+            c.bytes += op.shape.bytes
+        elif any(oc.startswith(k) for k in COLLECTIVES):
+            kind = next(k for k in COLLECTIVES if oc.startswith(k))
+            if not oc.endswith("-done"):           # async pairs: start only
+                # wire bytes per device (ring algorithms):
+                #   all-reduce      ~2x tensor   (reduce-scatter + all-gather)
+                #   reduce-scatter  ~1x input    (result is 1/N of it)
+                #   all-gather      ~1x result
+                #   all-to-all / permute ~1x result
+                if kind == "all-reduce":
+                    wire = 2.0 * op.shape.bytes
+                elif kind == "reduce-scatter":
+                    ops_in = [table[o] for o in op.operands if o in table]
+                    wire = float(sum(sh.bytes for sh in ops_in)) or op.shape.bytes
+                else:
+                    wire = float(op.shape.bytes)
+                c.coll[kind] = c.coll.get(kind, 0.0) + wire
+                c.coll_count[kind] = c.coll_count.get(kind, 0.0) + 1
+                c.bytes += op.shape.bytes * 2
+        elif oc == "dot":
+            c.flops += _dot_flops(op, table)
+            if top_level and not fusion_ctx:
+                c.bytes += op.shape.bytes + sum(
+                    table[o].bytes for o in op.operands if o in table)
+        elif oc == "convolution":
+            c.flops += 2.0 * op.shape.elems  # conservative (no conv in hot path)
+            if top_level and not fusion_ctx:
+                c.bytes += op.shape.bytes * 2
+        elif oc in ("dynamic-slice", "gather"):
+            c.bytes += op.shape.bytes * (2 if (top_level and not fusion_ctx) else 0)
+        elif oc == "dynamic-update-slice":
+            upd = (table[op.operands[1]].bytes
+                   if len(op.operands) > 1 and op.operands[1] in table
+                   else op.shape.bytes)
+            c.bytes += 2 * upd if (top_level and not fusion_ctx) else 0
+        elif oc == "scatter":
+            c.bytes += op.shape.bytes * (2 if (top_level and not fusion_ctx) else 0)
+        elif oc in _MOVE:
+            if top_level and not fusion_ctx:
+                c.bytes += op.shape.bytes + sum(
+                    table[o].bytes for o in op.operands if o in table)
+        elif oc in ("reduce", "reduce-window", "sort", "map", "select-and-scatter"):
+            ins = sum(table[o].elems for o in op.operands if o in table)
+            c.flops += float(ins)
+            if top_level and not fusion_ctx:
+                c.bytes += op.shape.bytes + sum(
+                    table[o].bytes for o in op.operands if o in table)
+        else:
+            # elementwise & friends: 1 flop per result element
+            c.flops += float(op.shape.elems)
+            if top_level and not fusion_ctx:
+                c.bytes += op.shape.bytes + sum(
+                    table[o].bytes for o in op.operands if o in table)
+        total.add(c)
+    memo[key] = total
+    return total
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    comps = parse_module(hlo_text)
+    if "__entry__" not in comps:
+        # fall back: last computation is usually entry
+        if not comps:
+            return Cost()
+        comps["__entry__"] = comps[list(comps)[-1]]
+    memo: dict = {}
+    return _comp_cost(comps, comps["__entry__"].name, memo, top_level=True)
+
+
+def analyze_compiled(compiled) -> Cost:
+    return analyze_text(compiled.as_text())

@@ -1,0 +1,194 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Three terms per (arch × shape × mesh) cell — all in seconds:
+
+    compute    = HLO_FLOPs      / (chips × 197e12)          [bf16 MXU peak]
+    memory     = HLO_bytes      / (chips × 819e9)           [HBM BW]
+    collective = collective_B   / (chips × 50e9)            [ICI link BW]
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(). collective bytes are
+parsed out of the HLO text: the result-shape bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute op (per-kind
+breakdown kept; replica-group sizes recorded to attribute pod-axis traffic).
+
+Also derives MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE for train;
+2·N·D for prefill; 2·N_active·B for decode) and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste shows up here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.1 = bf16[16,1024]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES)
+                       + r")(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of collective ops, by kind, plus group-size stats."""
+    per_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            per_kind[kind] += _shape_bytes(dtype, dims)
+            count[kind] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            inner, kind = m.groups()
+            for dm in _SHAPE_RE.finditer(inner):
+                per_kind[kind] += _shape_bytes(*dm.groups())
+            count[kind] += 1
+    total = sum(per_kind.values())
+    return {"total": total, "per_kind": per_kind, "count": count}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig | str) -> float:
+    """Analytic useful FLOPs per step (the numerator of the useful ratio)."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    n_act = cfg.n_active_params()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * d
+    return 2.0 * n_act * shape.global_batch        # decode: one token
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_detail: dict
+    model_fl: float
+    memory_per_device: dict
+    cost_scope: str = "global"   # "global": divide by chips; "per_device": don't
+
+    @property
+    def _div(self) -> int:
+        return self.chips if self.cost_scope == "global" else 1
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self._div * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self._div * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self._div * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (hlo is per-device under SPMD)."""
+        global_hlo = self.hlo_flops * (self.chips if self.cost_scope == "per_device" else 1)
+        return self.model_fl / max(global_hlo, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time: how close the cell is to the
+        (compute) roofline given its dominant term."""
+        t_useful = self.model_fl / (self.chips * PEAK_FLOPS_BF16)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / max(t_bound, 1e-12)
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes, "coll_detail": self.coll_detail,
+            "model_flops": self.model_fl,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "cost_scope": self.cost_scope,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_per_device": self.memory_per_device,
+        }
+
+
+def analyse(arch: str, shape: str, mesh_name: str, chips: int, compiled,
+            cfg: ArchConfig, cost_scope: str = "global") -> Roofline:
+    """Roofline terms via the trip-count-aware HLO cost model (hlo_cost.py).
+
+    XLA's own cost_analysis() counts scan bodies once (see hlo_cost docstring)
+    so it is recorded only as `xla_raw` for reference."""
+    from . import hlo_cost
+    xla = compiled.cost_analysis()
+    if isinstance(xla, list):
+        xla = xla[0]
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze_text(hlo)
+    hlo_flops = cost.flops
+    hlo_bytes = cost.bytes
+    coll = {"total": cost.coll_bytes, "per_kind": dict(cost.coll),
+            "count": dict(cost.coll_count),
+            "xla_raw": {"flops": float(xla.get("flops", 0.0)),
+                        "bytes": float(xla.get("bytes accessed", 0.0))}}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem[f] = int(getattr(ma, f, 0))
+        mem["total_nonalias"] = (mem.get("argument_size_in_bytes", 0)
+                                 + mem.get("output_size_in_bytes", 0)
+                                 + mem.get("temp_size_in_bytes", 0)
+                                 - mem.get("alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(arch, shape, mesh_name, chips, hlo_flops, hlo_bytes,
+                    float(coll["total"]), coll, model_flops(cfg, shape), mem,
+                    cost_scope)

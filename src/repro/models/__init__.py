@@ -1,0 +1,4 @@
+"""Model zoo: composable blocks (attention/ffn/moe/ssm/rglru) + assemblies
+for all 10 assigned architectures, with QuantizedLinear everywhere a GEMM
+lives. See registry.build / registry.input_specs."""
+from . import attention, common, ffn, moe, registry, rglru, ssm, transformer  # noqa: F401

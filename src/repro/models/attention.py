@@ -1,0 +1,340 @@
+"""GQA attention: full/causal/sliding-window, blockwise (flash-style) prefill,
+KV-cache decode (linear + ring-buffer), optional cross-attention.
+
+The QKV/O projections are `QuantizedLinear`s — in BrainTTA terms these are the
+vMAC GEMMs; the softmax/AV math stays wide (bf16/f32), mirroring the SoC's
+wide accumulator path. Blockwise attention keeps the (Tq × Tk) score matrix
+tiled (q_block × kv_block), which is mandatory at 32k+ context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.precision import PrecisionPolicy
+
+from . import common
+from .common import ModelCtx
+
+NEG_INF = -1e30
+KV_SCALE = 0.05   # static requant scale for the int8 KV cache (§Perf C)
+
+
+def _kv_quant(t, dtype):
+    """Requantize K/V for cache storage (paper §IV-A requantization applied
+    to the cache): int8 codes at a static scale, or passthrough cast."""
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(t.astype(jnp.float32) / KV_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return t.astype(dtype)
+
+
+def _kv_dequant(c, compute_dtype):
+    if c.dtype == jnp.int8:
+        return (c.astype(jnp.float32) * KV_SCALE).astype(compute_dtype)
+    return c.astype(compute_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpecs:
+    qkv: Any
+    out: Any
+    cross_q: Any = None
+    cross_kv: Any = None
+
+
+def attn_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False,
+               cross: bool = False) -> AttnSpecs:
+    h, hk, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    mk = lambda lc, i, o, bias=False: common.lspec(
+        pol, lc, i, o, first=first, last=last, bias=bias)
+    return AttnSpecs(
+        qkv=mk("attn_qkv", d, (h + 2 * hk) * dh, bias=cfg.qkv_bias),
+        out=mk("attn_out", h * dh, d),
+        cross_q=mk("attn_qkv", d, h * dh) if cross else None,
+        cross_kv=mk("attn_qkv", d, 2 * hk * dh) if cross else None,
+    )
+
+
+def attn_init(rng, cfg: ArchConfig, specs: AttnSpecs, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    p = {"qkv": common.linear_init(ks[0], specs.qkv, dtype),
+         "out": common.linear_init(ks[1], specs.out, dtype)}
+    if specs.cross_q is not None:
+        p["cross_q"] = common.linear_init(ks[2], specs.cross_q, dtype)
+        p["cross_kv"] = common.linear_init(ks[3], specs.cross_kv, dtype)
+    return p
+
+
+def _split_qkv(y: jnp.ndarray, cfg: ArchConfig):
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, t, _ = y.shape
+    q, k, v = jnp.split(y, [h * dh, (h + hk) * dh], axis=-1)
+    return (q.reshape(b, t, h, dh), k.reshape(b, t, hk, dh), v.reshape(b, t, hk, dh))
+
+
+def _gqa_scores_blockless(q, k, v, mask):
+    """Reference small-scale attention. q: (B,Tq,H,dh) k/v: (B,Tk,Hk,dh)."""
+    b, tq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, tq, hk, g, dh)
+    s = jnp.einsum("bthgd,bshd->bhgts", qg, k).astype(jnp.float32) / dh ** 0.5
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgts,bshd->bthgd", a, v)
+    return o.reshape(b, tq, h, dh)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        q_block: int = 512, kv_block: int = 1024,
+                        q_offset=0, cp: bool = False) -> jnp.ndarray:
+    """Flash-style blocked attention with online softmax.
+
+    q: (B, Tq, H, dh); k,v: (B, Tk, Hk, dh). `window`>0 restricts each query
+    to the last `window` keys (sliding-window / local attention), which also
+    shrinks the kv loop to the band — sub-quadratic in T.
+    `q_offset`: absolute position of q[0] (prefill continuation / decode).
+
+    Two schedules:
+      cp=False  two-level scan (q blocks x kv blocks) — bounds the score temp
+                to (B, qb, H, kvb); used on host-scale runs and window layers.
+      cp=True   context-parallel: the caller sharded Tq over the model axis,
+                so the score temp is already bounded by the T shard; a single
+                kv scan keeps every tensor's Tq dim intact (reshapes that
+                split a sharded dim break GSPMD propagation — measured 2.4x
+                compute + 200 GiB gather churn; see EXPERIMENTS.md §Perf).
+    """
+    b, tq, h, dh = q.shape
+    tk, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    q_block = min(q_block, tq)
+    kv_block = min(kv_block, tk)
+    if tq % q_block or tk % kv_block:           # fallback for odd smoke shapes
+        mask = jnp.ones((b, tq, tk), bool)
+        pos_q = jnp.arange(tq) + q_offset
+        pos_k = jnp.arange(tk)
+        if causal:
+            mask &= pos_q[None, :, None] >= pos_k[None, None, :]
+        if window:
+            mask &= pos_q[None, :, None] - pos_k[None, None, :] < window
+        return _gqa_scores_blockless(q, k, v, mask)
+
+    nq, nk = tq // q_block, tk // kv_block
+    scale = 1.0 / dh ** 0.5
+
+    # how many kv blocks each q block needs to visit
+    if window:
+        band = window + q_block                     # kv span per q block
+        nkv_visit = min(nk, (band + kv_block - 1) // kv_block + 1)
+    else:
+        nkv_visit = nk
+
+    def kv_scan(qi_blk, q_pos, start_blk, n_visit):
+        """Online-softmax sweep of kv blocks for one q block.
+        qi_blk: (B, Tq', Hk, G, dh)."""
+        tq_ = qi_blk.shape[1]
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = start_blk + j
+            ks = jax.lax.dynamic_slice_in_dim(k, kj * kv_block, kv_block, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, kj * kv_block, kv_block, axis=1)
+            s = jnp.einsum("bqhgd,bshd->bhgqs", qi_blk, ks).astype(jnp.float32) * scale
+            k_pos = kj * kv_block + jnp.arange(kv_block)
+            msk = jnp.ones((tq_, kv_block), bool)
+            if causal:
+                msk &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                msk &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqs,bshd->bhgqd", p.astype(q.dtype), vs).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hk, g, tq_), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, tq_), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, tq_, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_visit))
+        o = acc / jnp.maximum(l, 1e-20)[..., None]
+        return o.astype(q.dtype)                     # (B, Hk, G, Tq', dh)
+
+    if cp:
+        # single-level: whole (sequence-sharded) q against the kv sweep
+        qg = q.reshape(b, tq, hk, g, dh)
+        o = kv_scan(qg, q_offset + jnp.arange(tq), 0, nk)
+        o = jnp.moveaxis(o, 3, 1)                    # (B, Tq, Hk, G, dh)
+        return o.reshape(b, tq, h, dh)
+
+    qb = q.reshape(b, nq, q_block, hk, g, dh)
+
+    def q_step(_, qi):
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+        if window:
+            start_blk = jnp.clip((q_offset + qi * q_block - window) // kv_block,
+                                 0, nk - nkv_visit)
+        else:
+            start_blk = 0
+        return None, kv_scan(qb[:, qi], q_pos, start_blk, nkv_visit)
+
+    _, ob = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq, B, Hk, G, qblk, dh)
+    o = jnp.moveaxis(ob, 0, 1)                            # (B, nq, Hk, G, qblk, dh)
+    o = jnp.moveaxis(o, -2, 2)                            # (B, nq, qblk, Hk, G, dh)
+    return o.reshape(b, tq, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# block-level apply: prefill/train, decode, cross-attention
+# ---------------------------------------------------------------------------
+
+def attn_apply(p, x, specs: AttnSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
+               causal: bool = True, window: int = 0, positions=None,
+               return_cache: bool = False, cache_len: int = 0):
+    """Full-sequence attention (train / prefill). x: (B, T, D).
+
+    With return_cache: the KV cache is laid out for `attn_decode` —
+    full-attention layers get `cache_len` (>= T) linear slots; window layers
+    get a ring buffer of capacity min(window, cache_len) where position p
+    lives at slot p % capacity.
+    """
+    b, t, _ = x.shape
+    y = common.linear_apply(p["qkv"], x, specs.qkv, ctx)
+    q, k, v = _split_qkv(y, cfg)
+    if positions is None:
+        positions = jnp.arange(t)
+    q = common.rope(q, positions, cfg.rope_theta)
+    k = common.rope(k, positions, cfg.rope_theta)
+    if (ctx.backend == "pallas" and not window and t % 256 == 0
+            and ctx.attn_cp is None):
+        # TPU deployment path: fused flash-attention kernel (kernels/flash_attn)
+        from repro.kernels.flash_attn import flash_attention as _flash
+        import os as _os
+        interp = _os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+        b_, t_, h_, dh_ = q.shape
+        hk_ = k.shape[2]
+        qf = jnp.moveaxis(q, 2, 1).reshape(b_ * h_, t_, dh_)
+        kf = jnp.moveaxis(k, 2, 1).reshape(b_ * hk_, t_, dh_)
+        vf = jnp.moveaxis(v, 2, 1).reshape(b_ * hk_, t_, dh_)
+        of = _flash(qf, kf, vf, causal=causal, interpret=interp)
+        o = jnp.moveaxis(of.reshape(b_, h_, t_, dh_), 1, 2)
+        out = common.linear_apply(p["out"], o.reshape(b, t, -1), specs.out, ctx)
+        if return_cache:
+            cap = max(cache_len or t, 1)
+            if t < cap:
+                pad = ((0, 0), (0, cap - t), (0, 0), (0, 0))
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            cd = jnp.int8 if cfg.kv_cache_dtype == "int8" else k.dtype
+            return out, {"k": _kv_quant(k, cd), "v": _kv_quant(v, cd)}
+        return out
+
+    cp = bool(ctx.attn_cp) and not window and t % 512 == 0
+    if cp:
+        # context parallelism: q sequence sharded over the model axis, kv
+        # replicated within the dp group — head-count agnostic (llama 24H/8KV
+        # doesn't divide a 16-way model axis; head-TP would pad & churn).
+        q = common.shard_spec(q, ctx, ctx.attn_cp, None, None)
+        k = common.shard_spec(k, ctx, None, None, None)
+        v = common.shard_spec(v, ctx, None, None, None)
+    elif ctx.attn_cp and window:
+        # window layers: cheap (banded) — replicate over model inside the dp
+        # group rather than churn on reshapes; see DESIGN.md §Perf notes
+        q = common.shard_spec(q, ctx, None, None, None)
+        k = common.shard_spec(k, ctx, None, None, None)
+        v = common.shard_spec(v, ctx, None, None, None)
+    o = blockwise_attention(q, k, v, causal=causal, window=window, cp=cp)
+    if cp:
+        o = common.shard_spec(o, ctx, ctx.attn_cp, None, None)
+    out = common.linear_apply(p["out"], o.reshape(b, t, -1), specs.out, ctx)
+    if return_cache:
+        cap = max(cache_len or t, 1)
+        if window:
+            cap = min(window, cap)
+        if t > cap:
+            k, v = k[:, -cap:], v[:, -cap:]
+            if window:                      # ring alignment: slot = pos % cap
+                k = jnp.roll(k, t % cap, axis=1)
+                v = jnp.roll(v, t % cap, axis=1)
+        elif t < cap:
+            pad = ((0, 0), (0, cap - t), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        # int8 cache when requested; otherwise the cache follows the compute
+        # dtype (so f32 verification runs stay exact)
+        cd = jnp.int8 if cfg.kv_cache_dtype == "int8" else k.dtype
+        return out, {"k": _kv_quant(k, cd), "v": _kv_quant(v, cd)}
+    return out
+
+
+def init_cache_shapes(cfg: ArchConfig, batch: int, seq_len: int, window: int,
+                      dtype=None):
+    """Cache ShapeDtypeStructs for one attention layer."""
+    if dtype is None:
+        dtype = jnp.dtype(cfg.kv_cache_dtype)
+    s = min(window, seq_len) if window else seq_len
+    shp = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+def attn_decode(p, x, cache, pos, specs: AttnSpecs, cfg: ArchConfig,
+                ctx: ModelCtx, *, window: int = 0):
+    """One-token decode. x: (B, 1, D); cache k/v: (B, S|W, Hk, dh); pos: scalar.
+
+    Full attention: write at index `pos`, attend over valid prefix.
+    Window attention: ring buffer, write at `pos % W`, attend over the window.
+    """
+    b = x.shape[0]
+    y = common.linear_apply(p["qkv"], x, specs.qkv, ctx)
+    q, k_new, v_new = _split_qkv(y, cfg)
+    posv = jnp.full((b, 1), pos)
+    q = common.rope(q, posv, cfg.rope_theta)
+    k_new = common.rope(k_new, posv, cfg.rope_theta)
+
+    s = cache["k"].shape[1]
+    idx = (pos % s) if window else jnp.minimum(pos, s - 1)
+    cd = cache["k"].dtype
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], _kv_quant(k_new, cd), idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], _kv_quant(v_new, cd), idx, axis=1)
+
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hk
+    qg = q.reshape(b, hk, g, dh)
+    kf, vf = _kv_dequant(k, x.dtype), _kv_dequant(v, x.dtype)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qg, kf).astype(jnp.float32) / dh ** 0.5
+    slots = jnp.arange(s)
+    if window:
+        valid = (slots <= idx) | (pos >= s)   # ring full => every slot valid
+    else:
+        valid = slots <= pos
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    a = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgs,bshd->bhgd", a, vf).reshape(b, 1, h * dh)
+    out = common.linear_apply(p["out"], o, specs.out, ctx)
+    return out, {"k": k, "v": v}
+
+
+# -- cross attention (whisper decoder) ----------------------------------------
+
+def cross_attn_apply(p, x, enc_kv, specs: AttnSpecs, cfg: ArchConfig, ctx: ModelCtx):
+    """x: (B, T, D); enc_kv: precomputed (k, v) from the encoder output."""
+    b, t, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = common.linear_apply(p["cross_q"], x, specs.cross_q, ctx).reshape(b, t, h, dh)
+    k, v = enc_kv
+    o = blockwise_attention(q, k, v, causal=False)
+    return common.linear_apply(p["out"], o.reshape(b, t, -1), specs.out, ctx)
+
+
+def cross_kv(p, enc_out, specs: AttnSpecs, cfg: ArchConfig, ctx: ModelCtx):
+    b, s, _ = enc_out.shape
+    hk, dh = cfg.n_kv_heads, cfg.head_dim
+    kv = common.linear_apply(p["cross_kv"], enc_out, specs.cross_kv, ctx)
+    k, v = jnp.split(kv, 2, axis=-1)
+    return k.reshape(b, s, hk, dh), v.reshape(b, s, hk, dh)

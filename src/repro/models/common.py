@@ -1,0 +1,178 @@
+"""Shared model components: norms, RoPE, activations, embeddings, conv1d,
+and the quantized-linear helpers every block builds on.
+
+All modules are functional: `*_init(rng, ...) -> params`, `*_apply(params, ...)`.
+Compute dtype is bf16, norms/softmax/router in f32 (the "wide residual
+stream" — BrainTTA keeps accumulators wide and requantizes at operator
+egress, §IV-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.precision import LayerQuant, PrecisionPolicy
+from repro.core.qlinear import QLinearSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Execution context threaded through every block."""
+    mode: str = "train"          # "train" (QAT) | "serve" (packed)
+    backend: str = "jnp"         # "jnp" | "pallas"
+    impl: str = "popcount"       # binary/ternary GEMM formulation
+    dtype: jnp.dtype = jnp.bfloat16
+    act_dp: tuple | None = None  # dp mesh axes to pin activations' batch dim to
+    attn_cp: str | None = None   # mesh axis for context-parallel attention
+                                 # (q sequence sharded; kv replicated per dp
+                                 # group — head-count agnostic, unlike head-TP)
+    fsdp_wire: str = "dense"     # "packed": FSDP gathers move the 1/2/8-bit
+                                 # planes instead of bf16 weights (§Perf B)
+
+
+TRAIN = ModelCtx(mode="train")
+
+
+def shard_act(x, ctx: "ModelCtx"):
+    """Pin a (B, ...) activation's batch dim to the dp axes. Without this,
+    GSPMD can resolve the FSDP/TP weight shardings by replicating the batch —
+    catastrophic activation all-gathers (seen: 32 GiB logit gathers)."""
+    if ctx.act_dp is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(ctx.act_dp), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_spec(x, ctx: "ModelCtx", *dims):
+    """with_sharding_constraint with explicit trailing dims (batch first)."""
+    if ctx.act_dp is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(tuple(ctx.act_dp), *dims))
+
+
+# -- linear helper ------------------------------------------------------------
+
+def lspec(pol: PrecisionPolicy, layer_class: str, in_dim: int, out_dim: int, *,
+          first: bool = False, last: bool = False, bias: bool = False,
+          experts: int = 0, name: str = "") -> QLinearSpec:
+    lq = pol.lookup(layer_class, is_first=first, is_last=last)
+    return QLinearSpec(in_dim, out_dim, lq, use_bias=bias, experts=experts,
+                       name=name or layer_class)
+
+
+def linear_init(rng, spec: QLinearSpec, dtype=jnp.float32):
+    return qlinear.init(rng, spec, dtype)
+
+
+def linear_apply(p, x, spec: QLinearSpec, ctx: ModelCtx):
+    y = qlinear.apply(p, x, spec, mode=ctx.mode, impl=ctx.impl,
+                      backend=ctx.backend, wire=ctx.fsdp_wire)
+    return y.astype(ctx.dtype)
+
+
+def pack_linear(p, spec: QLinearSpec):
+    return qlinear.pack_params(p, spec)
+
+
+# -- norms --------------------------------------------------------------------
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_apply(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * inv * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# -- activations ----------------------------------------------------------------
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "squared_relu":                      # nemotron-4
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# -- rotary embeddings ----------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply RoPE. x: (B, T, H, dh), positions: (B, T) or (T,)."""
+    dh = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions.astype(jnp.float32)[..., None] * freqs        # (..., T, dh/2)
+    if ang.ndim == 2:                                             # (T, dh/2)
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(t: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embedding table (T, D)."""
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- embedding ------------------------------------------------------------------
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return {"w": jax.random.normal(rng, (vocab, d), dtype) * 0.02}
+
+
+def embed_apply(p, tokens: jnp.ndarray, dtype=jnp.bfloat16):
+    return jnp.take(p["w"], tokens, axis=0).astype(dtype)
+
+
+# -- causal temporal conv (xLSTM / RG-LRU frontends) -----------------------------
+
+def conv1d_init(rng, d: int, width: int = 4, dtype=jnp.float32):
+    return {"w": jax.random.normal(rng, (width, d), dtype) * (1.0 / width ** 0.5),
+            "b": jnp.zeros((d,), dtype)}
+
+
+def conv1d_apply(p, x: jnp.ndarray, state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: (B, T, D). state: (B, width-1, D) for decode.
+
+    Returns (y, new_state). Training: state=None -> zero left-pad.
+    """
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)                      # (B, T+w-1, D)
+    y = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xx[:, -(width - 1):, :] if width > 1 else state
+    return (y + p["b"].astype(x.dtype), new_state)
+
+
+# -- loss -------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-level CE. logits: (B, T, V) any float dtype, targets: (B, T) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

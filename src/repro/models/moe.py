@@ -1,0 +1,116 @@
+"""Mixture-of-Experts with GShard-style capacity dispatch + expert parallelism.
+
+Supports phi3.5-moe (16 experts, top-2) and deepseek-moe (2 shared + 64
+routed, top-6, fine-grained d_ff). Expert FFN weights carry a leading expert
+axis that `launch/sharding.py` places on the "model" mesh axis (EP); the
+dispatch/combine einsums then lower to all-to-alls — the collective-bound
+cell of the roofline study.
+
+Router stays fp32 and unquantized (core.precision.ALWAYS_WIDE): it is tiny
+and accuracy-critical — BrainTTA's "sensitive layers stay wide" rule.
+
+Dispatch uses the dense (B,S,E,C) one-hot formulation: static shapes (SPMD-
+friendly), with token dropping at capacity. Sort-based ragged dispatch is the
+documented beyond-paper alternative (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.precision import PrecisionPolicy
+
+from . import common, ffn
+from .common import ModelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpecs:
+    router: Any
+    up: Any
+    down: Any
+    shared: Any            # FFNSpecs | None
+    n_experts: int
+    top_k: int
+    capacity_factor: float
+    gated: bool
+    act: str
+
+
+def moe_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False) -> MoESpecs:
+    e, f, d = cfg.n_experts, cfg.d_ff, cfg.d_model
+    up_out = 2 * f if cfg.gated_ffn else f
+    return MoESpecs(
+        router=common.lspec(pol, "moe_router", d, e),
+        up=common.lspec(pol, "moe_expert", d, up_out, first=first, last=last, experts=e),
+        down=common.lspec(pol, "moe_expert", f, d, first=first, last=last, experts=e),
+        shared=(ffn.ffn_specs(cfg, pol, first=first, last=last,
+                              d_ff=cfg.n_shared_experts * f)
+                if cfg.n_shared_experts else None),
+        n_experts=e, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        gated=cfg.gated_ffn, act=cfg.act_fn,
+    )
+
+
+def moe_init(rng, specs: MoESpecs, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    p = {"router": common.linear_init(ks[0], specs.router, dtype),
+         "up": common.linear_init(ks[1], specs.up, dtype),
+         "down": common.linear_init(ks[2], specs.down, dtype)}
+    if specs.shared is not None:
+        p["shared"] = ffn.ffn_init(ks[3], specs.shared, dtype)
+    return p
+
+
+def _capacity(s: int, specs: MoESpecs) -> int:
+    c = int(s * specs.top_k / specs.n_experts * specs.capacity_factor)
+    return max(4, (c + 3) // 4 * 4)
+
+
+def moe_apply(p, x, specs: MoESpecs, ctx: ModelCtx):
+    """x: (B, S, D) -> (B, S, D). Dense-dispatch MoE with top-k routing."""
+    b, s, d = x.shape
+    e, k = specs.n_experts, specs.top_k
+    c = _capacity(s, specs)
+
+    logits = common.linear_apply(p["router"], x, specs.router, ctx).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                      # (B,S,E)
+    topv, topi = jax.lax.top_k(gates, k)                         # (B,S,K)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.float32)             # (B,S,K,E)
+    flat = sel.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # slots before me
+    pos = jnp.sum(flat * pos, axis=-1).reshape(b, s, k).astype(jnp.int32)  # (B,S,K)
+    keep = (pos < c).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos, c, dtype=jnp.float32)           # (B,S,K,C)
+
+    # dispatch[b,s,e,c] / combine[b,s,e,c]
+    dispatch = jnp.einsum("bske,bskc->bsec", sel * keep[..., None], pos_oh)
+    combine = jnp.einsum("bske,bskc->bsec", sel * (topv * keep)[..., None], pos_oh)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(x.dtype), x)  # (E,B,C,D)
+    xin = xin.reshape(e, b * c, d)
+    h = common.linear_apply(p["up"], xin, specs.up, ctx)
+    act = common.activation(specs.act)
+    if specs.gated:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = act(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = act(h.astype(jnp.float32)).astype(x.dtype)
+    h = common.linear_apply(p["down"], h, specs.down, ctx)
+    h = h.reshape(e, b, c, d)
+    y = jnp.einsum("ebcd,bsec->bsd", h, combine.astype(x.dtype))
+
+    if specs.shared is not None:
+        y = y + ffn.ffn_apply(p["shared"], x, specs.shared, ctx)
+
+    # aux load-balancing loss term (Switch-style), returned via metric side-car
+    density = jnp.mean(jnp.sum(sel, axis=2), axis=(0, 1))        # (E,) token frac
+    router_prob = jnp.mean(gates, axis=(0, 1))                   # (E,)
+    aux = e * jnp.sum(density * router_prob)
+    return y, aux

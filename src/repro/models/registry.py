@@ -1,0 +1,58 @@
+"""Model registry: config name -> (specs, init, step functions, input specs).
+
+`input_specs(cfg, shape)` returns the ShapeDtypeStruct stand-ins for every
+model input of a given workload shape — the dry-run lowers against these
+(weak-type-correct, shardable, no device allocation). Modality frontends are
+stubs per the assignment: the specs *are* the precomputed embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+
+from . import transformer
+from .common import ModelCtx, TRAIN
+
+
+def build(name_or_cfg) -> tuple[ArchConfig, transformer.ModelSpecs]:
+    cfg = name_or_cfg if isinstance(name_or_cfg, ArchConfig) else get_config(name_or_cfg)
+    return cfg, transformer.build_specs(cfg)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig | str) -> dict:
+    """ShapeDtypeStruct tree for the inputs of (arch x workload-shape)."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, t = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    sd = jax.ShapeDtypeStruct
+
+    def frontend():
+        if cfg.frontend == "none":
+            return {}
+        return {"frontend": sd((b, cfg.frontend_len, cfg.d_model), bf16)}
+
+    if shape.kind == "train":
+        return {"tokens": sd((b, t), i32), "targets": sd((b, t), i32), **frontend()}
+    if shape.kind == "prefill":
+        return {"tokens": sd((b, t), i32), **frontend()}
+    # decode: one new token against a cache of length t
+    return {
+        "tokens": sd((b, 1), i32),
+        "pos": sd((), i32),
+        "cache": transformer.cache_shapes(cfg, b, t),
+    }
+
+
+def make_batch(rng, cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Concrete random batch (smoke tests / CPU training)."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab, jnp.int32),
+           "targets": jax.random.randint(k2, (batch, seq), 0, cfg.vocab, jnp.int32)}
+    if cfg.frontend != "none":
+        out["frontend"] = (jax.random.normal(k3, (batch, cfg.frontend_len, cfg.d_model))
+                           * 0.02).astype(jnp.bfloat16)
+    return out

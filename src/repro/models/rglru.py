@@ -1,0 +1,136 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: in-proj -> {x-branch: causal conv1d -> RG-LRU; gate branch: GeLU} ->
+multiply -> out-proj. The RG-LRU recurrence
+
+    r_t = sigmoid(W_r b_t + c_r),  i_t = sigmoid(W_i b_t + c_i)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * b_t)
+
+is a diagonal linear recurrence -> computed with `jax.lax.associative_scan`
+(log-depth, TPU-friendly — this is Griffin's own TPU strategy, so the
+*baseline* here is already the parallel form; contrast with ssm.py's mLSTM).
+
+Projections are QuantizedLinears; the recurrent state h stays fp32
+(wide-accumulator rule, DESIGN.md §4). Decode carries (h, conv) — O(1)/token,
+qualifying recurrentgemma for long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.precision import PrecisionPolicy
+
+from . import common
+from .common import ModelCtx
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpecs:
+    in_proj: Any          # D -> 2*Dr (x branch + gate branch)
+    out: Any              # Dr -> D
+    d_rnn: int
+
+
+def rglru_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False) -> RGLRUSpecs:
+    mk = lambda i, o: common.lspec(pol, "ssm_proj", i, o, first=first, last=last)
+    return RGLRUSpecs(in_proj=mk(cfg.d_model, 2 * cfg.d_rnn),
+                      out=mk(cfg.d_rnn, cfg.d_model), d_rnn=cfg.d_rnn)
+
+
+def rglru_init(rng, cfg: ArchConfig, specs: RGLRUSpecs, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    dr = specs.d_rnn
+    # Lambda init so that a ~ U[0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[3], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))          # softplus^-1(-log u / c)
+    return {"in_proj": common.linear_init(ks[0], specs.in_proj, dtype),
+            "conv": common.conv1d_init(ks[1], dr, 4, dtype),
+            "w_gates": jax.random.normal(ks[2], (dr, 2), dtype) * 0.02,
+            "lam": lam.astype(dtype),
+            "out": common.linear_init(ks[4], specs.out, dtype)}
+
+
+def rglru_state_shapes(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    return {"h": jax.ShapeDtypeStruct((batch, cfg.d_rnn), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, 3, cfg.d_rnn), dtype)}
+
+
+def _gates(p, b):
+    """b: (..., Dr) conv output -> (log_a, gated_in), elementwise gates."""
+    bf = b.astype(jnp.float32)
+    r = jax.nn.sigmoid(bf * p["w_gates"][:, 0])
+    i = jax.nn.sigmoid(bf * p["w_gates"][:, 1])
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * bf)
+    return log_a, u
+
+
+def _pin(t, ctx):
+    """Keep the RG-LRU channel dim sharded over the model axis through the
+    associative scan (§Perf A iter-2: GSPMD loses the propagated sharding in
+    the scan's slice/concat tree and falls back to permute/all-reduce churn —
+    pinning (B, T, Dr~model) makes the scan fully local)."""
+    return common.shard_spec(t, ctx, None, "model")
+
+
+def rglru_apply(p, x, specs: RGLRUSpecs, ctx: ModelCtx):
+    """Full-sequence (train/prefill): associative scan over time."""
+    z = common.linear_apply(p["in_proj"], x, specs.in_proj, ctx)
+    xb, gate = jnp.split(z, 2, axis=-1)
+    xc, _ = common.conv1d_apply(p["conv"], xb)
+    log_a, u = _gates(p, _pin(xc, ctx))                          # (B,T,Dr) f32
+
+    def combine(c1, c2):
+        (la1, u1), (la2, u2) = c1, c2
+        return la1 + la2, u1 * jnp.exp(la2) + u2
+
+    _, h = jax.lax.associative_scan(combine, (_pin(log_a, ctx), _pin(u, ctx)),
+                                    axis=1)
+    out = _pin(h, ctx).astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    return common.linear_apply(p["out"], out, specs.out, ctx)
+
+
+def rglru_prefill(p, x, specs: RGLRUSpecs, ctx: ModelCtx):
+    """Full-sequence prefill returning the decode state — PARALLEL form.
+
+    §Perf optimization A (EXPERIMENTS.md): the baseline `_recurrent_prefill`
+    stepped the decode cell sequentially over T (32k state round-trips,
+    1132 s memory term); the associative scan already produces every h_t, so
+    the final state is h[:, -1] and the conv state is the last width-1 raw
+    inputs — same math, log-depth, ~600x less state traffic.
+    """
+    z = common.linear_apply(p["in_proj"], x, specs.in_proj, ctx)
+    xb, gate = jnp.split(z, 2, axis=-1)
+    xc, conv_state = common.conv1d_apply(p["conv"], xb)
+    log_a, u = _gates(p, _pin(xc, ctx))
+
+    def combine(c1, c2):
+        (la1, u1), (la2, u2) = c1, c2
+        return la1 + la2, u1 * jnp.exp(la2) + u2
+
+    _, h = jax.lax.associative_scan(combine, (_pin(log_a, ctx), _pin(u, ctx)),
+                                    axis=1)
+    out = _pin(h, ctx).astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    y = common.linear_apply(p["out"], out, specs.out, ctx)
+    return y, {"h": h[:, -1], "conv": conv_state}
+
+
+def rglru_decode(p, x, state, specs: RGLRUSpecs, ctx: ModelCtx):
+    """One-token decode. x: (B,1,D); state: {h (B,Dr) f32, conv}."""
+    z = common.linear_apply(p["in_proj"], x, specs.in_proj, ctx)
+    xb, gate = jnp.split(z, 2, axis=-1)
+    xc, conv_state = common.conv1d_apply(p["conv"], xb, state["conv"])
+    log_a, u = _gates(p, xc[:, 0])
+    h = state["h"] * jnp.exp(log_a) + u
+    out = h[:, None].astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    y = common.linear_apply(p["out"], out, specs.out, ctx)
+    return y, {"h": h, "conv": conv_state}

@@ -1,0 +1,306 @@
+"""xLSTM blocks (sLSTM + mLSTM) [arXiv:2405.04517] — the [ssm] architecture.
+
+Both blocks use exponential gating with the max-state stabilizer. The
+projections (in/out/gates/qkv) are QuantizedLinears ("ssm_proj" layer class);
+the recurrent state itself stays fp32 — it is the wide accumulator in
+BrainTTA terms, requantized only at block egress (DESIGN.md §4).
+
+Training/prefill runs a `lax.scan` over time (the paper-faithful sequential
+baseline; the chunkwise-parallel mLSTM is a §Perf hillclimb candidate).
+Decode carries (c, n, m) / (C, n, m) state — O(1) per token, which is what
+qualifies xlstm for the long_500k shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.precision import PrecisionPolicy
+
+from . import common
+from .common import ModelCtx
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix memory C (dh x dh) per head
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMSpecs:
+    in_proj: Any          # D -> 2*Di (x branch, output gate branch)
+    qkv: Any              # Di -> 3*Di
+    gates: Any            # Di -> 2*H  (i, f pre-activations per head)
+    out: Any              # Di -> D
+    d_inner: int
+    n_heads: int
+
+
+def mlstm_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False) -> MLSTMSpecs:
+    di = 2 * cfg.d_model
+    mk = lambda i, o: common.lspec(pol, "ssm_proj", i, o, first=first, last=last)
+    return MLSTMSpecs(in_proj=mk(cfg.d_model, 2 * di), qkv=mk(di, 3 * di),
+                      gates=mk(di, 2 * cfg.n_heads), out=mk(di, cfg.d_model),
+                      d_inner=di, n_heads=cfg.n_heads)
+
+
+def mlstm_init(rng, cfg: ArchConfig, specs: MLSTMSpecs, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    return {"in_proj": common.linear_init(ks[0], specs.in_proj, dtype),
+            "conv": common.conv1d_init(ks[1], specs.d_inner, 4, dtype),
+            "qkv": common.linear_init(ks[2], specs.qkv, dtype),
+            "gates": common.linear_init(ks[3], specs.gates, dtype),
+            "out": common.linear_init(ks[4], specs.out, dtype)}
+
+
+def _mlstm_cell(state, inp):
+    """One step. state: (C (B,H,dk,dv), n (B,H,dk), m (B,H)).
+    inp: q,k,v (B,H,dh), i_pre,f_pre (B,H)."""
+    C, n, m = state
+    q, k, v, i_pre, f_pre = inp
+    log_f = -jax.nn.softplus(-f_pre)                 # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k
+    h_num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    h_den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q))
+    h = h_num / jnp.maximum(h_den, 1.0)[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_state_shapes(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    di = 2 * cfg.d_model
+    h, dh = cfg.n_heads, di // cfg.n_heads
+    f32 = jnp.float32
+    return {"C": jax.ShapeDtypeStruct((batch, h, dh, dh), f32),
+            "n": jax.ShapeDtypeStruct((batch, h, dh), f32),
+            "m": jax.ShapeDtypeStruct((batch, h), f32),
+            "conv": jax.ShapeDtypeStruct((batch, 3, di), dtype)}
+
+
+def _mlstm_inputs(p, x, specs: MLSTMSpecs, ctx: ModelCtx, conv_state=None):
+    b, t, _ = x.shape
+    h = specs.n_heads
+    di = specs.d_inner
+    dh = di // h
+    z = common.linear_apply(p["in_proj"], x, specs.in_proj, ctx)
+    xi, og = jnp.split(z, 2, axis=-1)
+    xc, conv_state = common.conv1d_apply(p["conv"], xi, conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    qkv = common.linear_apply(p["qkv"], xc, specs.qkv, ctx)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    gates = common.linear_apply(p["gates"], xc, specs.gates, ctx).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                  # (B,T,H)
+    rs = lambda a: a.reshape(b, t, h, dh).astype(jnp.float32)
+    return rs(q) / dh ** 0.5, rs(k) / dh ** 0.5, rs(v), i_pre, f_pre, og, conv_state
+
+
+def mlstm_apply(p, x, specs: MLSTMSpecs, ctx: ModelCtx, impl: str = "scan",
+                chunk: int = 64):
+    """Full-sequence mLSTM (train/prefill).
+
+    impl="scan"      paper-faithful sequential cell (one (dh x dh) state
+                     read+write per token — the xlstm train_4k cell's 889 s
+                     memory term comes from exactly this).
+    impl="chunkwise" §Perf (beyond paper): flash-linear-attention-style
+                     chunking — intra-chunk contributions are masked matmuls,
+                     the matrix state C updates once per chunk. State traffic
+                     /chunk, MXU-friendly; validated against the sequential
+                     oracle (tests/test_mlstm_chunkwise.py).
+    """
+    b, t, _ = x.shape
+    h, di = specs.n_heads, specs.d_inner
+    dh = di // h
+    q, k, v, i_pre, f_pre, og, _ = _mlstm_inputs(p, x, specs, ctx)
+    if impl == "chunkwise" and t % chunk == 0 and t > chunk:
+        hs, _ = _mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk)
+    else:
+        tfirst = lambda a: jnp.moveaxis(a, 1, 0)
+        init = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                jnp.zeros((b, h, dh), jnp.float32),
+                jnp.full((b, h), -1e30, jnp.float32))
+        _, hs = jax.lax.scan(_mlstm_cell, init,
+                             tuple(map(tfirst, (q, k, v, i_pre, f_pre))))
+        hs = jnp.moveaxis(hs, 0, 1)
+    hs = hs.reshape(b, t, di).astype(x.dtype)
+    out = hs * jax.nn.silu(og.astype(jnp.float32)).astype(x.dtype)
+    return common.linear_apply(p["out"], out, specs.out, ctx)
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk: int):
+    """Chunkwise-parallel mLSTM forward. q,k,v: (B,T,H,dh) f32 (already
+    scaled); i_pre,f_pre: (B,T,H). Returns h: (B,T,H,dh).
+
+    Math per chunk (log-space stabilized like the sequential cell):
+        LF_t  = cumsum(log f)                (within chunk)
+        C_t   = F_t C_0 + sum_{j<=t} (F_t/F_j) i_j k_j v_j^T
+        num_t = F_t (q_t C_0) + sum_{j<=t} (F_t/F_j) i_j (q_t.k_j) v_j
+        den_t = same with v_j -> 1 (the n-state dot)
+    Stabilizer: the carried state (C_0, n_0) is stored scaled by exp(-m_0);
+    within a chunk every term is scaled by exp(-m_t) with
+    m_t = max(m_0 + LF_t, max_j(LF_t - LF_j + i_pre_j)) — the same max the
+    sequential cell tracks, evaluated blockwise.
+    """
+    b, t, h, dh = q.shape
+    nc = t // chunk
+    cs = lambda a, d: jnp.moveaxis(a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+    qc, kc, vc = cs(q, 4), cs(k, 4), cs(v, 4)          # (nc, B, c, H, dh)
+    ic, fc = cs(i_pre, 3), cs(f_pre, 3)                # (nc, B, c, H)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))      # j <= t
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry              # scaled by exp(-m0); (B,H,dh,dh) etc.
+        qb, kb, vb, ib, fb = inp        # (B, c, H, dh|)
+        log_f = -jax.nn.softplus(-fb)                   # (B, c, H)
+        lf = jnp.cumsum(log_f, axis=1)                  # LF_t
+        # stabilizer per position: candidates from carry and intra terms
+        intra_log = (lf[:, :, None, :] - lf[:, None, :, :]
+                     + ib[:, None, :, :])               # (B, t, j, H)
+        intra_log = jnp.where(tri[None, :, :, None], intra_log, -jnp.inf)
+        m_intra = jnp.max(intra_log, axis=2)            # (B, c, H)
+        m_t = jnp.maximum(m0[:, None] + lf, m_intra)    # (B, c, H)
+
+        # decay matrices
+        d_intra = jnp.exp(intra_log - m_t[:, :, None, :])   # (B, t, j, H)
+        d_inter = jnp.exp(m0[:, None] + lf - m_t)           # (B, c, H)
+
+        # scores (B, t, j, H): q_t . k_j per head
+        s = jnp.einsum("bthd,bjhd->btjh", qb, kb) * d_intra
+        num = (jnp.einsum("btjh,bjhd->bthd", s, vb)
+               + d_inter[..., None] * jnp.einsum("bthd,bhde->bthe", qb, C0))
+        den = (jnp.sum(s, axis=2)
+               + d_inter * jnp.einsum("bthd,bhd->bth", qb, n0))
+        # oracle semantics: max(|n.q|, 1) on the exp(-m_t)-scaled value, and
+        # our blockwise m_t == the sequential running max (see docstring)
+        hb = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # state update to end of chunk (scale exp(-m_new))
+        lf_tot = lf[:, -1]                               # (B, H)
+        m_new = jnp.maximum(m0 + lf_tot,
+                            jnp.max(lf_tot[:, None] - lf + ib, axis=1))
+        w_j = jnp.exp(lf_tot[:, None] - lf + ib - m_new[:, None])  # (B, c, H)
+        C_new = (jnp.exp(m0 + lf_tot - m_new)[:, :, None, None] * C0
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", w_j, kb, vb))
+        n_new = (jnp.exp(m0 + lf_tot - m_new)[:, :, None] * n0
+                 + jnp.einsum("bjh,bjhd->bhd", w_j, kb))
+        return (C_new, n_new, m_new), hb
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    state, hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    return jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, h, dh), state
+
+
+def mlstm_prefill(p, x, specs: MLSTMSpecs, ctx: ModelCtx, chunk: int = 64):
+    """Prefill returning the decode state via the chunkwise pass (§Perf:
+    the sequential-stepping prefill cost 98 s memory term on 32k; the
+    chunkwise pass computes the same (C, n, m) final state /chunk cheaper).
+    Falls back to None when T doesn't chunk (caller uses the sequential path).
+    """
+    b, t, _ = x.shape
+    if t % chunk or t <= chunk:
+        return None
+    q, k, v, i_pre, f_pre, og, conv_state = _mlstm_inputs(p, x, specs, ctx)
+    hs, (C, n, m) = _mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk)
+    hs = hs.reshape(b, t, specs.d_inner).astype(x.dtype)
+    out = hs * jax.nn.silu(og.astype(jnp.float32)).astype(x.dtype)
+    y = common.linear_apply(p["out"], out, specs.out, ctx)
+    return y, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def mlstm_decode(p, x, state, specs: MLSTMSpecs, ctx: ModelCtx):
+    """One-token decode. x: (B,1,D); state: {C,n,m,conv}."""
+    b = x.shape[0]
+    q, k, v, i_pre, f_pre, og, conv_state = _mlstm_inputs(
+        p, x, specs, ctx, conv_state=state["conv"])
+    st = (state["C"], state["n"], state["m"])
+    sq = lambda a: a[:, 0]
+    st, h = _mlstm_cell(st, (sq(q), sq(k), sq(v), sq(i_pre), sq(f_pre)))
+    h = h.reshape(b, 1, specs.d_inner).astype(x.dtype)
+    out = h * jax.nn.silu(og.astype(jnp.float32)).astype(x.dtype)
+    y = common.linear_apply(p["out"], out, specs.out, ctx)
+    return y, {"C": st[0], "n": st[1], "m": st[2], "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory per head-dim channel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMSpecs:
+    gates: Any            # D -> 4*D (i, f, z, o pre-acts)
+    rec: Any              # per-head recurrent weights (H, dh, 4*dh), non-QLinear
+    out: Any              # D -> D
+    n_heads: int
+    d_model: int
+
+
+def slstm_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False) -> SLSTMSpecs:
+    mk = lambda i, o: common.lspec(pol, "ssm_proj", i, o, first=first, last=last)
+    return SLSTMSpecs(gates=mk(cfg.d_model, 4 * cfg.d_model), rec=None,
+                      out=mk(cfg.d_model, cfg.d_model),
+                      n_heads=cfg.n_heads, d_model=cfg.d_model)
+
+
+def slstm_init(rng, cfg: ArchConfig, specs: SLSTMSpecs, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    h = specs.n_heads
+    dh = specs.d_model // h
+    return {"gates": common.linear_init(k1, specs.gates, dtype),
+            "rec": jax.random.normal(k2, (h, dh, 4 * dh), dtype) * (0.3 / dh ** 0.5),
+            "out": common.linear_init(k3, specs.out, dtype)}
+
+
+def slstm_state_shapes(cfg: ArchConfig, batch: int):
+    f32 = jnp.float32
+    d = cfg.d_model
+    return {"c": jax.ShapeDtypeStruct((batch, d), f32),
+            "n": jax.ShapeDtypeStruct((batch, d), f32),
+            "m": jax.ShapeDtypeStruct((batch, d), f32),
+            "h": jax.ShapeDtypeStruct((batch, d), f32)}
+
+
+def _slstm_cell(p_rec, n_heads, state, g_pre):
+    """state: c,n,m,h each (B,D); g_pre: (B,4D) pre-activations from x."""
+    c, n, m, h_prev = state
+    b, d = c.shape
+    dh = d // n_heads
+    hh = h_prev.reshape(b, n_heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p_rec.astype(h_prev.dtype))  # (B,H,4dh)
+    g = g_pre + rec.reshape(b, 4 * d)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_pre)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(p, x, specs: SLSTMSpecs, ctx: ModelCtx):
+    b, t, d = x.shape
+    g_pre = common.linear_apply(p["gates"], x, specs.gates, ctx).astype(jnp.float32)
+    init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + (
+        jnp.zeros((b, d), jnp.float32),)
+    init = (init[0], init[1], jnp.full((b, d), -1e30, jnp.float32), init[3])
+    cell = lambda st, g: _slstm_cell(p["rec"], specs.n_heads, st, g)
+    _, hs = jax.lax.scan(cell, init, jnp.moveaxis(g_pre, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return common.linear_apply(p["out"], hs, specs.out, ctx)
+
+
+def slstm_decode(p, x, state, specs: SLSTMSpecs, ctx: ModelCtx):
+    g_pre = common.linear_apply(p["gates"], x, specs.gates, ctx).astype(jnp.float32)
+    st = (state["c"], state["n"], state["m"], state["h"])
+    st, h = _slstm_cell(p["rec"], specs.n_heads, st, g_pre[:, 0])
+    y = common.linear_apply(p["out"], h[:, None].astype(x.dtype), specs.out, ctx)
+    return y, {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}

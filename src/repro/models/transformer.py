@@ -1,0 +1,552 @@
+"""Model assembly: decoder-only LMs (dense/MoE/SSM/hybrid/VLM) and the
+whisper encoder-decoder, from the block library.
+
+Structure (DESIGN.md §3): layer 0 and layer n-1 are *unrolled* and get the
+policy's first/last precision (the paper's mixed-precision recipe); the
+middle layers are scanned in whole block-pattern periods (`lax.scan` over
+stacked params — the compile-time analogue of BrainTTA's hardware loop
+buffer), any remainder layers are unrolled.
+
+Each block is pre-norm residual: x += mixer(norm(x)); x += ffn(norm(x)).
+Mixer kinds: attn | local (sliding-window) | slstm | mlstm | rglru.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import qlinear
+from repro.core.precision import get_policy
+
+from . import attention, common, ffn, moe, rglru, ssm
+from .common import ModelCtx
+
+# ---------------------------------------------------------------------------
+# one block
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpecs:
+    kind: str
+    mixer: Any
+    ffn: Any = None        # FFNSpecs | MoESpecs | None
+    is_moe: bool = False
+    cross: bool = False    # whisper decoder block
+
+
+def block_specs(cfg: ArchConfig, pol, kind: str, *, first=False, last=False,
+                cross=False) -> BlockSpecs:
+    if kind in ("attn", "local"):
+        mix = attention.attn_specs(cfg, pol, first=first, last=last, cross=cross)
+    elif kind == "mlstm":
+        mix = ssm.mlstm_specs(cfg, pol, first=first, last=last)
+    elif kind == "slstm":
+        mix = ssm.slstm_specs(cfg, pol, first=first, last=last)
+    elif kind == "rglru":
+        mix = rglru.rglru_specs(cfg, pol, first=first, last=last)
+    else:
+        raise ValueError(kind)
+    f = None
+    is_moe = False
+    if kind in ("attn", "local", "rglru") and cfg.d_ff > 0:
+        if cfg.n_experts:
+            f = moe.moe_specs(cfg, pol, first=first, last=last)
+            is_moe = True
+        else:
+            f = ffn.ffn_specs(cfg, pol, first=first, last=last)
+    return BlockSpecs(kind, mix, f, is_moe, cross)
+
+
+def block_init(rng, cfg: ArchConfig, bs: BlockSpecs, dtype):
+    ks = jax.random.split(rng, 4)
+    p: dict[str, Any] = {"norm1": common.norm_init(cfg.d_model, cfg.norm, dtype)}
+    if bs.kind in ("attn", "local"):
+        p["mixer"] = attention.attn_init(ks[0], cfg, bs.mixer, dtype)
+    elif bs.kind == "mlstm":
+        p["mixer"] = ssm.mlstm_init(ks[0], cfg, bs.mixer, dtype)
+    elif bs.kind == "slstm":
+        p["mixer"] = ssm.slstm_init(ks[0], cfg, bs.mixer, dtype)
+    elif bs.kind == "rglru":
+        p["mixer"] = rglru.rglru_init(ks[0], cfg, bs.mixer, dtype)
+    if bs.cross:
+        p["norm_cross"] = common.norm_init(cfg.d_model, cfg.norm, dtype)
+    if bs.ffn is not None:
+        p["norm2"] = common.norm_init(cfg.d_model, cfg.norm, dtype)
+        p["ffn"] = (moe.moe_init(ks[1], bs.ffn, dtype) if bs.is_moe
+                    else ffn.ffn_init(ks[1], bs.ffn, dtype))
+    return p
+
+
+def _mixer_window(cfg: ArchConfig, kind: str) -> int:
+    return cfg.window if kind == "local" else 0
+
+
+def block_apply(p, x, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
+                enc_out=None, causal=True):
+    """Train/prefill-without-cache path. Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = common.norm_apply(p["norm1"], x, cfg.norm)
+    if bs.kind in ("attn", "local"):
+        m = attention.attn_apply(p["mixer"], h, bs.mixer, cfg, ctx, causal=causal,
+                                 window=_mixer_window(cfg, bs.kind))
+    elif bs.kind == "mlstm":
+        m = ssm.mlstm_apply(p["mixer"], h, bs.mixer, ctx, impl=cfg.mlstm_impl)
+    elif bs.kind == "slstm":
+        m = ssm.slstm_apply(p["mixer"], h, bs.mixer, ctx)
+    else:
+        m = rglru.rglru_apply(p["mixer"], h, bs.mixer, ctx)
+    x = x + m
+    if bs.cross and enc_out is not None:
+        k, v = attention.cross_kv(p["mixer"], enc_out, bs.mixer, cfg, ctx)
+        hc = common.norm_apply(p["norm_cross"], x, cfg.norm)
+        x = x + attention.cross_attn_apply(p["mixer"], hc, (k, v), bs.mixer, cfg, ctx)
+    if bs.ffn is not None:
+        h2 = common.norm_apply(p["norm2"], x, cfg.norm)
+        if bs.is_moe:
+            y, a = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
+            aux = aux + a
+        else:
+            y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
+        x = x + y
+    return x, aux
+
+
+def block_cache_shapes(cfg: ArchConfig, bs: BlockSpecs, batch: int, seq_len: int):
+    if bs.kind in ("attn", "local"):
+        c = attention.init_cache_shapes(cfg, batch, seq_len,
+                                        _mixer_window(cfg, bs.kind))
+    elif bs.kind == "mlstm":
+        c = ssm.mlstm_state_shapes(cfg, batch)
+    elif bs.kind == "slstm":
+        c = ssm.slstm_state_shapes(cfg, batch)
+    else:
+        c = rglru.rglru_state_shapes(cfg, batch)
+    if bs.cross:
+        hk, dh = cfg.n_kv_heads, cfg.head_dim
+        shp = (batch, cfg.frontend_len, hk, dh)
+        c["cross_k"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+        c["cross_v"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+    return c
+
+
+def block_prefill(p, x, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
+                  enc_out=None, cache_len: int = 0):
+    """Prefill: like block_apply but returns the decode cache."""
+    h = common.norm_apply(p["norm1"], x, cfg.norm)
+    cache = {}
+    if bs.kind in ("attn", "local"):
+        m, cache = attention.attn_apply(
+            p["mixer"], h, bs.mixer, cfg, ctx, causal=True,
+            window=_mixer_window(cfg, bs.kind), return_cache=True,
+            cache_len=cache_len)
+        x = x + m
+    else:
+        # recurrent mixers: run full sequence then recompute final state via
+        # one-step decode chain is wasteful; instead run the scan and capture
+        # the final state by replaying decode on the last token only after
+        # processing prefix — implemented as scan-with-final-state below.
+        x_new, cache = _recurrent_prefill(p["mixer"], h, bs, cfg, ctx)
+        x = x + x_new
+    if bs.cross and enc_out is not None:
+        k, v = attention.cross_kv(p["mixer"], enc_out, bs.mixer, cfg, ctx)
+        cache["cross_k"], cache["cross_v"] = k, v
+        hc = common.norm_apply(p["norm_cross"], x, cfg.norm)
+        x = x + attention.cross_attn_apply(p["mixer"], hc, (k, v), bs.mixer, cfg, ctx)
+    if bs.ffn is not None:
+        h2 = common.norm_apply(p["norm2"], x, cfg.norm)
+        if bs.is_moe:
+            y, _ = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
+        else:
+            y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
+        x = x + y
+    return x, cache
+
+
+def _recurrent_prefill(pm, h, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx):
+    """Run a recurrent mixer over the prefix and also return its final state.
+
+    Baseline implementation: step the decode cell over time with lax.scan —
+    sequential but state-exact. (rglru's parallel apply is used for train;
+    prefill needs the state, so we scan the cell.)
+    """
+    b, t, _ = h.shape
+    if bs.kind == "rglru" and not cfg.seq_prefill:
+        # parallel prefill (§Perf A): associative scan + direct state extract
+        return rglru.rglru_prefill(pm, h, bs.mixer, ctx)
+    if bs.kind == "mlstm" and not cfg.seq_prefill:
+        out = ssm.mlstm_prefill(pm, h, bs.mixer, ctx)
+        if out is not None:            # chunkwise pass + final state (§Perf D)
+            return out
+    if bs.kind == "mlstm":
+        shapes = ssm.mlstm_state_shapes(cfg, b, h.dtype)
+        dec = functools.partial(ssm.mlstm_decode, specs=bs.mixer, ctx=ctx)
+    elif bs.kind == "slstm":
+        shapes = ssm.slstm_state_shapes(cfg, b)
+        dec = functools.partial(ssm.slstm_decode, specs=bs.mixer, ctx=ctx)
+    else:
+        shapes = rglru.rglru_state_shapes(cfg, b, h.dtype)
+        dec = functools.partial(rglru.rglru_decode, specs=bs.mixer, ctx=ctx)
+    state0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    if bs.kind in ("mlstm",):
+        state0["m"] = jnp.full_like(state0["m"], -1e30)
+    if bs.kind == "slstm":
+        state0["m"] = jnp.full_like(state0["m"], -1e30)
+
+    def step(state, xt):
+        y, state = dec(pm, xt[:, None], state)
+        return state, y[:, 0]
+
+    state, ys = jax.lax.scan(step, state0, jnp.moveaxis(h, 1, 0))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def block_decode(p, x, cache, pos, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx):
+    """One-token decode through a block. x: (B,1,D)."""
+    h = common.norm_apply(p["norm1"], x, cfg.norm)
+    if bs.kind in ("attn", "local"):
+        sub = {k: v for k, v in cache.items() if k in ("k", "v")}
+        m, sub = attention.attn_decode(p["mixer"], h, sub, pos, bs.mixer, cfg, ctx,
+                                       window=_mixer_window(cfg, bs.kind))
+        cache = {**cache, **sub}
+    elif bs.kind == "mlstm":
+        m, cache2 = ssm.mlstm_decode(p["mixer"], h, cache, bs.mixer, ctx)
+        cache = {**cache, **cache2}
+    elif bs.kind == "slstm":
+        m, cache2 = ssm.slstm_decode(p["mixer"], h, cache, bs.mixer, ctx)
+        cache = {**cache, **cache2}
+    else:
+        m, cache2 = rglru.rglru_decode(p["mixer"], h, cache, bs.mixer, ctx)
+        cache = {**cache, **cache2}
+    x = x + m
+    if bs.cross:
+        hc = common.norm_apply(p["norm_cross"], x, cfg.norm)
+        x = x + attention.cross_attn_apply(
+            p["mixer"], hc, (cache["cross_k"], cache["cross_v"]), bs.mixer, cfg, ctx)
+    if bs.ffn is not None:
+        h2 = common.norm_apply(p["norm2"], x, cfg.norm)
+        if bs.is_moe:
+            y, _ = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
+        else:
+            y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
+        x = x + y
+    return x, cache
+
+
+def block_pack(p, bs: BlockSpecs):
+    """Train-layout block params -> packed serve layout."""
+    out = {k: v for k, v in p.items() if k.startswith("norm")}
+    m = p["mixer"]
+    if bs.kind in ("attn", "local"):
+        pm = {"qkv": qlinear.pack_params(m["qkv"], bs.mixer.qkv),
+              "out": qlinear.pack_params(m["out"], bs.mixer.out)}
+        if bs.cross:
+            pm["cross_q"] = qlinear.pack_params(m["cross_q"], bs.mixer.cross_q)
+            pm["cross_kv"] = qlinear.pack_params(m["cross_kv"], bs.mixer.cross_kv)
+    elif bs.kind == "mlstm":
+        pm = {"in_proj": qlinear.pack_params(m["in_proj"], bs.mixer.in_proj),
+              "conv": m["conv"],
+              "qkv": qlinear.pack_params(m["qkv"], bs.mixer.qkv),
+              "gates": qlinear.pack_params(m["gates"], bs.mixer.gates),
+              "out": qlinear.pack_params(m["out"], bs.mixer.out)}
+    elif bs.kind == "slstm":
+        pm = {"gates": qlinear.pack_params(m["gates"], bs.mixer.gates),
+              "rec": m["rec"],
+              "out": qlinear.pack_params(m["out"], bs.mixer.out)}
+    else:
+        pm = {"in_proj": qlinear.pack_params(m["in_proj"], bs.mixer.in_proj),
+              "conv": m["conv"], "w_gates": m["w_gates"], "lam": m["lam"],
+              "out": qlinear.pack_params(m["out"], bs.mixer.out)}
+    out["mixer"] = pm
+    if bs.ffn is not None:
+        f = p["ffn"]
+        if bs.is_moe:
+            pf = {"router": qlinear.pack_params(f["router"], bs.ffn.router),
+                  "up": qlinear.pack_params(f["up"], bs.ffn.up),
+                  "down": qlinear.pack_params(f["down"], bs.ffn.down)}
+            if "shared" in f:
+                pf["shared"] = {
+                    "up": qlinear.pack_params(f["shared"]["up"], bs.ffn.shared.up),
+                    "down": qlinear.pack_params(f["shared"]["down"], bs.ffn.shared.down)}
+        else:
+            pf = {"up": qlinear.pack_params(f["up"], bs.ffn.up),
+                  "down": qlinear.pack_params(f["down"], bs.ffn.down)}
+        out["ffn"] = pf
+    return out
+
+
+# ---------------------------------------------------------------------------
+# whole-model specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpecs:
+    cfg: ArchConfig
+    first: BlockSpecs
+    mid: tuple[BlockSpecs, ...]       # one per pattern position (offset by 1)
+    rem: tuple[BlockSpecs, ...]
+    last: BlockSpecs
+    n_periods: int
+    embed_dim: int
+    lm_head: Any
+    encoder: tuple[BlockSpecs, ...] = ()
+
+
+def build_specs(cfg: ArchConfig) -> ModelSpecs:
+    pol = get_policy(cfg.policy)
+    n, P = cfg.n_layers, len(cfg.block_pattern)
+    cross = cfg.is_encdec
+    if n < 2:
+        raise ValueError("need >= 2 layers")
+    n_mid = n - 2
+    n_periods = n_mid // P if cfg.scan_layers else 0
+    n_rem = n_mid - n_periods * P
+    first = block_specs(cfg, pol, cfg.pattern_at(0), first=True, cross=cross)
+    mid = tuple(block_specs(cfg, pol, cfg.pattern_at(1 + t), cross=cross)
+                for t in range(P)) if n_periods else ()
+    rem = tuple(block_specs(cfg, pol, cfg.pattern_at(1 + n_periods * P + t), cross=cross)
+                for t in range(n_rem))
+    last = block_specs(cfg, pol, cfg.pattern_at(n - 1), last=True, cross=cross)
+    lm_head = common.lspec(pol, "lm_head", cfg.d_model, cfg.vocab, last=True)
+    encoder = tuple(block_specs(cfg, pol, "attn") for _ in range(cfg.encoder_layers))
+    return ModelSpecs(cfg, first, mid, rem, last, n_periods, cfg.d_model,
+                      lm_head, encoder)
+
+
+def init(rng, cfg: ArchConfig) -> dict:
+    """Train-layout parameters."""
+    sp = build_specs(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(rng, 8)
+    p: dict[str, Any] = {
+        "embed": common.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "first": block_init(keys[1], cfg, sp.first, dtype),
+        "last": block_init(keys[2], cfg, sp.last, dtype),
+        "final_norm": common.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.linear_init(keys[3], sp.lm_head, dtype)
+    if sp.n_periods:
+        def period_init(k):
+            kk = jax.random.split(k, len(sp.mid))
+            return {f"b{t}": block_init(kk[t], cfg, sp.mid[t], dtype)
+                    for t in range(len(sp.mid))}
+        p["mid"] = jax.vmap(period_init)(jax.random.split(keys[4], sp.n_periods))
+    for t, bs in enumerate(sp.rem):
+        p[f"rem{t}"] = block_init(jax.random.fold_in(keys[5], t), cfg, bs, dtype)
+    for t, bs in enumerate(sp.encoder):
+        p[f"enc{t}"] = block_init(jax.random.fold_in(keys[6], t), cfg, bs, dtype)
+    if sp.encoder:
+        p["enc_norm"] = common.norm_init(cfg.d_model, cfg.norm, dtype)
+    return p
+
+
+def pack_for_serve(params: dict, cfg: ArchConfig) -> dict:
+    """Convert train-layout params to the packed serve layout (bit-planes)."""
+    sp = build_specs(cfg)
+    out: dict[str, Any] = {
+        "embed": {"w": params["embed"]["w"].astype(jnp.bfloat16)},
+        "first": block_pack(params["first"], sp.first),
+        "last": block_pack(params["last"], sp.last),
+        "final_norm": params["final_norm"],
+    }
+    if "lm_head" in params:
+        out["lm_head"] = qlinear.pack_params(params["lm_head"], sp.lm_head)
+    if sp.n_periods:
+        def pp(period):
+            return {f"b{t}": block_pack(period[f"b{t}"], sp.mid[t])
+                    for t in range(len(sp.mid))}
+        out["mid"] = jax.vmap(pp)(params["mid"])
+    for t, bs in enumerate(sp.rem):
+        out[f"rem{t}"] = block_pack(params[f"rem{t}"], bs)
+    for t, bs in enumerate(sp.encoder):
+        out[f"enc{t}"] = block_pack(params[f"enc{t}"], bs)
+    if sp.encoder:
+        out["enc_norm"] = params["enc_norm"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _encode(params, sp: ModelSpecs, audio_embeds, ctx: ModelCtx):
+    cfg = sp.cfg
+    x = audio_embeds.astype(ctx.dtype)
+    x = x + common.sinusoidal_positions(x.shape[1], cfg.d_model).astype(ctx.dtype)
+    for t, bs in enumerate(sp.encoder):
+        x, _ = block_apply(params[f"enc{t}"], x, bs, cfg, ctx, causal=False)
+    return common.norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+def _stack_apply(params, x, sp: ModelSpecs, ctx: ModelCtx, *, enc_out=None):
+    """first -> scanned periods -> remainder -> last. Returns (x, aux)."""
+    cfg = sp.cfg
+    sa = lambda t: common.shard_act(t, ctx)
+    x, aux = block_apply(params["first"], sa(x), sp.first, cfg, ctx, enc_out=enc_out)
+
+    if sp.n_periods:
+        def period(xc, pp):
+            xx, a = xc
+            for t, bs in enumerate(sp.mid):
+                xx2, a2 = block_apply(pp[f"b{t}"], sa(xx), bs, cfg, ctx, enc_out=enc_out)
+                xx, a = sa(xx2), a + a2
+            return (xx, a), None
+        # remat policy: recompute activations but SAVE the gathered quantized
+        # weights (tiny per period; re-gathering them in bwd recompute was
+        # ~3x the FSDP gather volume — §Perf B iter-6)
+        body = jax.checkpoint(
+            period,
+            policy=jax.checkpoint_policies.save_only_these_names("qweight"),
+        ) if cfg.remat else period
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["mid"])
+
+    for t, bs in enumerate(sp.rem):
+        x, a = block_apply(params[f"rem{t}"], sa(x), bs, cfg, ctx, enc_out=enc_out)
+        aux = aux + a
+    x, a = block_apply(params["last"], sa(x), sp.last, cfg, ctx, enc_out=enc_out)
+    return common.shard_act(x, ctx), aux + a
+
+
+def _logits(params, x, sp: ModelSpecs, ctx: ModelCtx):
+    x = common.norm_apply(params["final_norm"], x, sp.cfg.norm)
+    if sp.cfg.tie_embeddings:
+        return (x @ params["embed"]["w"].astype(x.dtype).T).astype(jnp.float32)
+    return common.linear_apply(params["lm_head"], x, sp.lm_head, ctx).astype(jnp.float32)
+
+
+def forward(params, tokens, sp: ModelSpecs, ctx: ModelCtx, *,
+            frontend_embeds=None):
+    """Teacher-forcing forward. tokens: (B, T) -> logits (B, T(+Np), V), aux.
+
+    VLM: frontend_embeds (B, Np, D) are prepended (loss masking is the
+    caller's job via the returned prefix length).
+    Audio (enc-dec): frontend_embeds (B, Tenc, D) go through the encoder.
+    """
+    cfg = sp.cfg
+    x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
+    enc_out = None
+    prefix = 0
+    if cfg.is_encdec and frontend_embeds is not None:
+        enc_out = _encode(params, sp, frontend_embeds, ctx)
+    elif cfg.frontend == "vision" and frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(ctx.dtype), x], axis=1)
+        prefix = frontend_embeds.shape[1]
+    x, aux = _stack_apply(params, x, sp, ctx, enc_out=enc_out)
+    return _logits(params, x, sp, ctx), aux, prefix
+
+
+def loss_fn(params, batch, sp: ModelSpecs, ctx: ModelCtx):
+    """Cross-entropy next-token loss. batch: {tokens, targets[, frontend]}"""
+    logits, aux, prefix = forward(params, batch["tokens"], sp, ctx,
+                                  frontend_embeds=batch.get("frontend"))
+    if prefix:
+        logits = logits[:, prefix:]
+    loss = common.cross_entropy(logits, batch["targets"])
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq_len: int):
+    sp = build_specs(cfg)
+    shapes: dict[str, Any] = {
+        "first": block_cache_shapes(cfg, sp.first, batch, seq_len),
+        "last": block_cache_shapes(cfg, sp.last, batch, seq_len),
+    }
+    if sp.n_periods:
+        def stack(tree):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((sp.n_periods,) + s.shape, s.dtype), tree)
+        shapes["mid"] = stack({f"b{t}": block_cache_shapes(cfg, bs, batch, seq_len)
+                               for t, bs in enumerate(sp.mid)})
+    for t, bs in enumerate(sp.rem):
+        shapes[f"rem{t}"] = block_cache_shapes(cfg, bs, batch, seq_len)
+    return shapes
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         cache_shapes(cfg, batch, seq_len))
+    return _fix_m_states(cache, cfg)
+
+
+def _fix_m_states(cache, cfg):
+    """m-stabilizer states start at -inf (see ssm.py)."""
+    def fix(path, leaf):
+        names = [getattr(k, "key", "") for k in path]
+        if names and names[-1] == "m":
+            return jnp.full_like(leaf, -1e30)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def prefill(params, tokens, sp: ModelSpecs, ctx: ModelCtx, *, frontend_embeds=None,
+            cache_len: int = 0):
+    """Process the prompt, return (last-position logits, cache).
+
+    `cache_len`: KV-cache capacity to allocate (0 => prompt length; pass
+    prompt_len + max_new_tokens for generation).
+    """
+    cfg = sp.cfg
+    x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
+    enc_out = None
+    if cfg.is_encdec and frontend_embeds is not None:
+        enc_out = _encode(params, sp, frontend_embeds, ctx)
+    elif cfg.frontend == "vision" and frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(ctx.dtype), x], axis=1)
+    cache_len = cache_len or x.shape[1]
+
+    caches: dict[str, Any] = {}
+    x, caches["first"] = block_prefill(params["first"], x, sp.first, cfg, ctx,
+                                       enc_out=enc_out, cache_len=cache_len)
+    if sp.n_periods:
+        def period(xx, pp):
+            cs = {}
+            for t, bs in enumerate(sp.mid):
+                xx, cs[f"b{t}"] = block_prefill(pp[f"b{t}"], xx, bs, cfg, ctx,
+                                                enc_out=enc_out, cache_len=cache_len)
+            return xx, cs
+        x, caches["mid"] = jax.lax.scan(period, x, params["mid"])
+    for t, bs in enumerate(sp.rem):
+        x, caches[f"rem{t}"] = block_prefill(params[f"rem{t}"], x, bs, cfg, ctx,
+                                             enc_out=enc_out, cache_len=cache_len)
+    x, caches["last"] = block_prefill(params["last"], x, sp.last, cfg, ctx,
+                                      enc_out=enc_out, cache_len=cache_len)
+    logits = _logits(params, x[:, -1:], sp, ctx)
+    return logits, caches
+
+
+def decode_step(params, cache, tokens, pos, sp: ModelSpecs, ctx: ModelCtx):
+    """One decode step. tokens: (B, 1); pos: scalar int32 (current position).
+
+    This is the `serve_step` the decode_* dry-run shapes lower.
+    """
+    cfg = sp.cfg
+    x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
+    new_cache: dict[str, Any] = {}
+    x, new_cache["first"] = block_decode(params["first"], x, cache["first"], pos,
+                                         sp.first, cfg, ctx)
+    if sp.n_periods:
+        def period(xx, scanned):
+            pp, cc = scanned
+            ncs = {}
+            for t, bs in enumerate(sp.mid):
+                xx, ncs[f"b{t}"] = block_decode(pp[f"b{t}"], xx, cc[f"b{t}"], pos,
+                                                bs, cfg, ctx)
+            return xx, ncs
+        x, new_cache["mid"] = jax.lax.scan(period, x, (params["mid"], cache["mid"]))
+    for t, bs in enumerate(sp.rem):
+        x, new_cache[f"rem{t}"] = block_decode(params[f"rem{t}"], x, cache[f"rem{t}"],
+                                               pos, bs, cfg, ctx)
+    x, new_cache["last"] = block_decode(params["last"], x, cache["last"], pos,
+                                        sp.last, cfg, ctx)
+    logits = _logits(params, x, sp, ctx)
+    return logits, new_cache

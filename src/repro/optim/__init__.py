@@ -1,0 +1,4 @@
+"""Optimizers + distributed-optimization tricks (int8 moments, int8-compressed
+gradient all-reduce)."""
+from . import adamw, compress  # noqa: F401
+from .adamw import adamw as make_adamw, apply_updates, cosine_schedule, global_norm  # noqa: F401

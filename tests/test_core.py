@@ -1,0 +1,219 @@
+"""Unit + property tests for repro.core (quantize, pack, requant, qlinear)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pack, qlinear, quantize, requant
+from repro.core.precision import LayerQuant, get_policy, POLICIES
+from repro.core.quantize import QuantSpec
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# quantizers
+# ---------------------------------------------------------------------------
+
+def test_binarize_values_and_grad():
+    x = jnp.array([-2.0, -0.3, 0.0, 0.3, 2.0])
+    q = quantize.binarize(x)
+    np.testing.assert_array_equal(np.asarray(q), [-1, -1, 1, 1, 1])
+    # STE: gradient 1 inside [-1,1], 0 outside
+    g = jax.grad(lambda v: jnp.sum(quantize.binarize(v)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 0])
+
+
+def test_ternarize_values():
+    x = jnp.array([-1.0, -0.01, 0.0, 0.01, 1.0])
+    q = quantize.ternarize(x, threshold=0.1)
+    np.testing.assert_array_equal(np.asarray(q), [-1, 0, 0, 0, 1])
+
+
+def test_int8_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    s = quantize.int8_scale(x, axis=(0,))
+    q = quantize.quantize_int8(x, s)
+    assert jnp.max(jnp.abs(q - x)) <= jnp.max(s) * 0.5 + 1e-6
+
+
+@given(st.sampled_from(["binary", "ternary", "int8", "none"]))
+@settings(max_examples=8, deadline=None)
+def test_fake_quant_idempotent(precision):
+    """Property: fake-quant is idempotent (q(q(x)) == q(x))."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    spec = QuantSpec(precision)
+    q1 = quantize.fake_quant(x, spec)
+    q2 = quantize.fake_quant(q1, spec)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-5)
+
+
+def test_fake_quant_representable_values():
+    """binary -> {-a, +a}; ternary -> {-a, 0, +a} (XNOR-Net alpha scale)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (128,))
+    qb = np.asarray(quantize.fake_quant(x, QuantSpec("binary")))
+    assert len(np.unique(np.abs(qb))) == 1          # single magnitude
+    qt = np.asarray(quantize.fake_quant(x, QuantSpec("ternary")))
+    mags = np.unique(np.abs(qt))
+    assert len(mags) <= 2 and 0.0 in mags            # {0, alpha}
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4).map(lambda i: i * 32), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_roundtrip(k, seed):
+    codes = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (3, k)).astype(jnp.uint8)
+    words = pack.pack_bits(codes)
+    assert words.shape == (3, k // 32)
+    np.testing.assert_array_equal(np.asarray(pack.unpack_bits(words, k)), np.asarray(codes))
+
+
+def test_pack_binary_roundtrip():
+    v = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(3), 0.5, (5, 64)), 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(pack.unpack_binary(pack.pack_binary(v), 64)),
+                                  np.asarray(v))
+
+
+def test_pack_ternary_roundtrip():
+    v = jnp.asarray(np.random.default_rng(0).integers(-1, 2, (4, 96)).astype(np.float32))
+    m, s = pack.pack_ternary(v)
+    np.testing.assert_array_equal(np.asarray(pack.unpack_ternary(m, s, 96)), np.asarray(v))
+
+
+def test_pack_rejects_bad_k():
+    with pytest.raises(ValueError):
+        pack.pack_bits(jnp.zeros((4, 33), jnp.uint8))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3).map(lambda i: i * 32))
+@settings(max_examples=20, deadline=None)
+def test_binary_dot_matches_float(seed, k):
+    """Property: XNOR-popcount dot == float dot for ±1 vectors (paper §II-A)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jnp.where(jax.random.bernoulli(kx, 0.5, (k,)), 1.0, -1.0)
+    w = jnp.where(jax.random.bernoulli(kw, 0.5, (k,)), 1.0, -1.0)
+    got = pack.binary_dot_words(pack.pack_binary(x), pack.pack_binary(w), k)
+    assert int(got) == int(jnp.dot(x, w))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3).map(lambda i: i * 32))
+@settings(max_examples=20, deadline=None)
+def test_ternary_dot_matches_float(seed, k):
+    """Property: gated-XNOR popcount dot == float dot for trit vectors."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-1, 2, (k,)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-1, 2, (k,)).astype(np.float32))
+    xm, xs = pack.pack_ternary(x)
+    wm, ws = pack.pack_ternary(w)
+    got = pack.ternary_dot_words(xm, xs, wm, ws)
+    assert int(got) == int(jnp.dot(x, w))
+
+
+# ---------------------------------------------------------------------------
+# requant
+# ---------------------------------------------------------------------------
+
+def test_requantize_formats():
+    acc = jnp.arange(-8, 8, dtype=jnp.int32)
+    s = jnp.float32(0.25)
+    rb = np.asarray(requant.requantize(acc, s, None, "binary"))
+    assert set(np.unique(rb)) <= {-1.0, 1.0}
+    rt = np.asarray(requant.requantize(acc, s, None, "ternary"))
+    assert set(np.unique(rt)) <= {-1.0, 0.0, 1.0}
+    ri = np.asarray(requant.requantize(acc * 1000, s, None, "int8"))
+    assert ri.min() >= -127 and ri.max() <= 127
+
+
+def test_match_scales_residual_identity():
+    """Residual addition with matched scales equals float addition (§IV-A)."""
+    a, b = jnp.float32(3.0), jnp.float32(5.0)
+    sa, sb = jnp.float32(0.5), jnp.float32(0.125)
+    common, ma, mb = requant.match_scales(sa, sb)
+    np.testing.assert_allclose(float((a * ma + b * mb) * common),
+                               float(a * sa + b * sb), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# qlinear: serve backends agree with the QAT forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wprec,aprec", [
+    ("binary", "binary"), ("binary", "none"),
+    ("ternary", "ternary"), ("ternary", "none"),
+    ("int8", "int8"), ("int8", "none"), ("none", "none"),
+])
+@pytest.mark.parametrize("impl", ["popcount", "mxu"])
+def test_qlinear_serve_close_to_train(wprec, aprec, impl):
+    """Packed serve path ≈ fake-quant train path (same quantized algebra)."""
+    spec = qlinear.QLinearSpec(64, 32, LayerQuant(QuantSpec(wprec), QuantSpec(aprec)))
+    p = qlinear.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64)) * 0.1
+    ps = qlinear.pack_params(p, spec)
+    y = qlinear.apply(ps, x, spec, mode="serve", impl=impl).astype(jnp.float32)
+    assert y.shape == (4, 32)
+    assert not bool(jnp.any(jnp.isnan(y)))
+    if wprec == "binary" and aprec == "binary":
+        # exact algebra check: popcount == mxu formulation
+        y2 = qlinear.apply(ps, x, spec, mode="serve",
+                           impl="mxu" if impl == "popcount" else "popcount")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y2, np.float32), rtol=2e-2, atol=1e-3)
+
+
+def test_qlinear_serve_param_shapes_match_packed():
+    """serve_param_shapes (dry-run specs) == pack_params shapes/dtypes."""
+    for wprec in ["binary", "ternary", "int8", "none"]:
+        for experts in [0, 4]:
+            spec = qlinear.QLinearSpec(
+                64, 32, LayerQuant(QuantSpec(wprec), QuantSpec("none")),
+                use_bias=True, experts=experts)
+            p = qlinear.init(jax.random.PRNGKey(0), spec)
+            packed = qlinear.pack_params(p, spec)
+            specs = qlinear.serve_param_shapes(spec)
+            assert set(packed) == set(specs), (wprec, experts)
+            for k in packed:
+                assert packed[k].shape == specs[k].shape, (wprec, experts, k)
+                assert packed[k].dtype == specs[k].dtype, (wprec, experts, k)
+
+
+def test_qlinear_experts_vmap():
+    spec = qlinear.QLinearSpec(32, 16, LayerQuant(QuantSpec("int8"), QuantSpec("int8")),
+                               experts=3)
+    p = qlinear.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 32)) * 0.1
+    yt = qlinear.apply(p, x, spec, mode="train")
+    assert yt.shape == (3, 5, 16)
+    ps = qlinear.pack_params(p, spec)
+    ys = qlinear.apply(ps, x, spec, mode="serve")
+    assert ys.shape == (3, 5, 16)
+
+
+def test_qlinear_qat_grad_flows():
+    """STE: gradients reach the master weights through quantization."""
+    spec = qlinear.QLinearSpec(16, 8, LayerQuant(QuantSpec("binary"), QuantSpec("binary")))
+    p = qlinear.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    g = jax.grad(lambda pp: jnp.sum(qlinear.apply(pp, x, spec) ** 2))(p)
+    assert float(jnp.sum(jnp.abs(g["w"]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# precision policy
+# ---------------------------------------------------------------------------
+
+def test_policy_first_last_override():
+    pol = get_policy("mixed")
+    assert pol.lookup("ffn_up").weights.precision == "ternary"
+    assert pol.lookup("ffn_up", is_first=True).weights.precision == "int8"
+    assert pol.lookup("moe_router").weights.precision == "none"  # always wide
+
+
+def test_all_policies_resolve_all_classes():
+    from repro.core.precision import LAYER_CLASSES
+    for pol in POLICIES.values():
+        for lc in LAYER_CLASSES:
+            lq = pol.lookup(lc)
+            assert lq.weights.precision in ("binary", "ternary", "int8", "none")

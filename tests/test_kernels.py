@@ -1,0 +1,123 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pack, qlinear
+from repro.core.precision import LayerQuant
+from repro.core.quantize import QuantSpec
+from repro.kernels import bgemm, i8gemm, ref, tgemm
+
+
+def _rand_pm1(key, shape):
+    return jnp.where(jax.random.bernoulli(key, 0.5, shape), 1.0, -1.0)
+
+
+def _rand_trit(seed, shape):
+    return jnp.asarray(np.random.default_rng(seed).integers(-1, 2, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# bgemm
+# ---------------------------------------------------------------------------
+
+SHAPES = [(8, 128, 64), (16, 256, 128), (32, 512, 256), (128, 1024, 128),
+          (8, 96, 384)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("impl", ["popcount", "mxu"])
+def test_bgemm_matches_ref(m, k, n, impl):
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(m * k + n), 4)
+    xp = pack.pack_binary(_rand_pm1(k0, (m, k)))
+    wp = pack.pack_binary(_rand_pm1(k1, (n, k)))
+    ws = jax.random.uniform(k2, (n,), jnp.float32, 0.5, 2.0)
+    as_ = jax.random.uniform(k3, (m,), jnp.float32, 0.5, 2.0)
+    got = bgemm.bgemm(xp, wp, ws, as_, k=k, bm=8, bn=min(128, n),
+                      bkw=min(4, k // 32), impl=impl)
+    want = ref.binary_gemm_ref(xp, wp, k, ws, as_)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-2)
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=5, deadline=None)
+def test_bgemm_property_random_blocks(seed):
+    """Property: kernel result is block-size invariant and matches oracle."""
+    rng = np.random.default_rng(seed)
+    m, kw, n = 8 * rng.integers(1, 4), 2 * rng.integers(1, 4), 128
+    k = int(kw) * 32
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    xp = pack.pack_binary(_rand_pm1(k0, (int(m), k)))
+    wp = pack.pack_binary(_rand_pm1(k1, (n, k)))
+    ws = jnp.ones((n,), jnp.float32)
+    as_ = jnp.ones((int(m),), jnp.float32)
+    want = ref.binary_gemm_ref(xp, wp, k, ws, as_)
+    for bkw in (1, int(kw)):
+        got = bgemm.bgemm(xp, wp, ws, as_, k=k, bm=8, bn=128, bkw=bkw)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# tgemm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:4])
+def test_tgemm_matches_ref(m, k, n):
+    xm, xs = pack.pack_ternary(_rand_trit(m + k, (m, k)))
+    wm, ws_ = pack.pack_ternary(_rand_trit(n + k, (n, k)))
+    wsc = jax.random.uniform(jax.random.PRNGKey(0), (n,), jnp.float32, 0.5, 2.0)
+    asc = jax.random.uniform(jax.random.PRNGKey(1), (m,), jnp.float32, 0.5, 2.0)
+    got = tgemm.tgemm(xm, xs, wm, ws_, wsc, asc, k=k, bm=8, bn=min(128, n),
+                      bkw=min(4, k // 32))
+    want = ref.ternary_gemm_ref(xm, xs, wm, ws_, k, wsc, asc)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-2, atol=1e-2)
+
+
+def test_tgemm_sparsity_zero_block():
+    """All-zero trits must produce exactly zero (the gating in gated-XNOR)."""
+    m, k, n = 8, 128, 128
+    xm, xs = pack.pack_ternary(jnp.zeros((m, k)))
+    wm, ws_ = pack.pack_ternary(_rand_trit(0, (n, k)))
+    got = tgemm.tgemm(xm, xs, wm, ws_, jnp.ones((n,)), jnp.ones((m,)), k=k, bm=8)
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# i8gemm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_i8gemm_matches_ref(m, k, n, with_bias):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(7))
+    xq = jax.random.randint(k0, (m, k), -127, 128, jnp.int8)
+    wq = jax.random.randint(k1, (k, n), -127, 128, jnp.int8)
+    ws = jax.random.uniform(jax.random.PRNGKey(2), (n,), jnp.float32, 0.01, 0.1)
+    as_ = jax.random.uniform(jax.random.PRNGKey(3), (m,), jnp.float32, 0.01, 0.1)
+    bias = jax.random.normal(jax.random.PRNGKey(4), (n,)) if with_bias else None
+    got = i8gemm.i8gemm(xq, wq, ws, as_, bias, bm=8, bn=min(128, n), bk=min(256, k))
+    want = ref.i8_gemm_ref(xq, wq, ws, as_, bias)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# ops-level dispatch: pallas backend == jnp backend at the model interface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wprec,aprec", [("binary", "binary"), ("ternary", "ternary"),
+                                         ("int8", "int8")])
+def test_qlinear_pallas_backend_matches_jnp(wprec, aprec):
+    spec = qlinear.QLinearSpec(128, 128, LayerQuant(QuantSpec(wprec), QuantSpec(aprec)))
+    p = qlinear.init(jax.random.PRNGKey(0), spec)
+    ps = qlinear.pack_params(p, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 128)) * 0.2
+    yj = qlinear.apply(ps, x, spec, mode="serve", backend="jnp", impl="popcount")
+    yp = qlinear.apply(ps, x, spec, mode="serve", backend="pallas", impl="popcount")
+    np.testing.assert_allclose(np.asarray(yj, np.float32), np.asarray(yp, np.float32),
+                               rtol=5e-2, atol=5e-2)

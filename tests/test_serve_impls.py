@@ -1,0 +1,83 @@
+"""Serve-path equivalences: popcount vs MXU formulations at model level, and
+the precision-policy footprint ladder (the paper's Table I memory column)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import registry, transformer
+from repro.models.common import ModelCtx
+
+
+def _packed_bytes(cfg):
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(sparams))
+
+
+def test_policy_footprint_ladder():
+    """binary < ternary < int8 < none packed footprint (paper Table I)."""
+    base = get_config("llama3.2-3b").reduced()
+    sizes = {}
+    for pol in ("binary", "ternary", "w-int8", "none"):
+        sizes[pol] = _packed_bytes(dataclasses.replace(base, policy=pol))
+    assert sizes["binary"] < sizes["ternary"] < sizes["w-int8"] < sizes["none"]
+    # bit ratios: ternary ~2x binary planes; int8 ~8x binary (+ scales/embeds)
+    assert sizes["none"] / sizes["binary"] > 3.0
+
+
+@pytest.mark.parametrize("impl", ["popcount", "mxu"])
+def test_full_wa_serve_impls_agree(impl):
+    """W&A ternary serve: popcount and MXU formulations give the same logits."""
+    cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(), policy="ternary")
+    sp = transformer.build_specs(cfg)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    outs = {}
+    for i in ("popcount", "mxu"):
+        ctx = ModelCtx(mode="serve", impl=i, dtype=jnp.float32)
+        logits, _ = transformer.prefill(sparams, tokens, sp, ctx)
+        outs[i] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["popcount"], outs["mxu"], rtol=2e-2, atol=2e-2)
+
+
+def test_int8_cache_vs_bf16_cache_quality():
+    """int8 KV cache decode stays within quantization tolerance of bf16."""
+    base = get_config("llama3.2-3b").reduced()
+    sp = transformer.build_specs(base)
+    params = transformer.init(jax.random.PRNGKey(0), base)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, base.vocab)
+    ref = None
+    for cd in ("bfloat16", "int8"):
+        cfg = dataclasses.replace(base, kv_cache_dtype=cd)
+        spc = transformer.build_specs(cfg)
+        ctx = ModelCtx(mode="train", dtype=jnp.float32)
+        _, cache = transformer.prefill(params, tokens[:, :16], spc, ctx,
+                                       cache_len=20)
+        ld, _ = transformer.decode_step(params, cache, tokens[:, 16:17],
+                                        jnp.int32(16), spc, ctx)
+        if ref is None:
+            ref = np.asarray(ld)
+        else:
+            corr = np.corrcoef(np.asarray(ld).ravel(), ref.ravel())[0, 1]
+            assert corr > 0.995, corr
+
+
+def test_pallas_backend_e2e_matches_jnp():
+    """Full serve prefill through the Pallas backend (flash attention +
+    packed/weight-only GEMM dispatch) == the jnp backend, exactly in f32."""
+    cfg = get_config("llama3.2-3b").reduced()
+    sp = transformer.build_specs(cfg)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 256), 0, cfg.vocab)
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        ctx = ModelCtx(mode="serve", backend=backend, dtype=jnp.float32)
+        logits, _ = transformer.prefill(sparams, tokens, sp, ctx)
+        outs[backend] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["pallas"], outs["jnp"], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,111 @@
+"""Unit tests for the sharding rules (no multi-device needed: rules are pure
+functions of paths/shapes/mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import sharding
+from repro.launch.step import abstract_serve_params, abstract_train_state, make_optimizer
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """An abstract mesh for rule evaluation (no devices needed)."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh(shape, axes)
+
+
+def _spec_of(tree_sh, *path):
+    node = tree_sh
+    for k in path:
+        node = node[k]
+    return node.spec
+
+
+def test_param_specs_llama_train():
+    cfg = get_config("llama3.2-3b")
+    mesh = fake_mesh()
+    params, _ = abstract_train_state(cfg, make_optimizer(cfg))
+    sh = sharding.param_shardings(mesh, params)
+    # embed: vocab over model only
+    assert _spec_of(sh, "embed", "w") == P("model", None)
+    # column-parallel qkv: (in~data, out~model)
+    assert _spec_of(sh, "first", "mixer", "qkv", "w") == P("data", "model")
+    # row-parallel attn out: (in~model, out~data)
+    assert _spec_of(sh, "first", "mixer", "out", "w") == P("model", "data")
+    # scanned stack: leading period dim unsharded
+    assert _spec_of(sh, "mid", "b0", "ffn", "up", "w") == P(None, "data", "model")
+    assert _spec_of(sh, "mid", "b0", "ffn", "down", "w") == P(None, "model", "data")
+    # norms replicated
+    assert _spec_of(sh, "final_norm", "scale") == P(None)
+
+
+def test_param_specs_moe_experts():
+    cfg = get_config("deepseek-moe-16b")
+    mesh = fake_mesh()
+    params, _ = abstract_train_state(cfg, make_optimizer(cfg))
+    sh = sharding.param_shardings(mesh, params)
+    # experts: EP over model; deepseek E=64 /16 = 4 per device
+    spec = _spec_of(sh, "mid", "b0", "ffn", "up", "w")
+    assert spec[1] == "model"      # (lead, E, in, out)
+    # router replicated on expert dim
+    rspec = _spec_of(sh, "mid", "b0", "ffn", "router", "w")
+    assert rspec[-1] is None
+
+
+def test_serve_packed_specs():
+    cfg = get_config("llama3.2-3b")
+    mesh = fake_mesh()
+    params = abstract_serve_params(cfg)
+    sh = sharding.param_shardings(mesh, params, fsdp=False)
+    # first layer is int8 weight-only (first/last override of w-ternary)
+    spec = _spec_of(sh, "first", "mixer", "qkv", "w_q")
+    assert spec == P(None, "model")
+    # body: ternary planes (out, K/32) column-parallel -> out over model
+    spec = _spec_of(sh, "mid", "b0", "mixer", "qkv", "w_mask")
+    assert spec == P(None, "model", None)
+    # row-parallel packed down proj: K-words over model
+    spec = _spec_of(sh, "mid", "b0", "ffn", "down", "w_mask")
+    assert spec == P(None, None, "model")
+
+
+def test_fit_spec_drops_nondividing():
+    mesh = fake_mesh()
+    assert sharding.fit_spec(P("model", None), (51865, 384), mesh) == P(None, None)
+    assert sharding.fit_spec(P("model", None), (51872, 384), mesh) == P("model", None)
+    assert sharding.fit_spec(P(("data", "model")), (512,), mesh) == P(("data", "model"))
+    assert sharding.fit_spec(P(("data", "model")), (100,), mesh) == P(None)
+
+
+def test_opt_state_shards_like_params():
+    cfg = get_config("xlstm-125m")
+    mesh = fake_mesh()
+    opt = make_optimizer(cfg)
+    params, opt_state = abstract_train_state(cfg, opt)
+    ps = sharding.param_shardings(mesh, params)
+    os_ = sharding.opt_state_shardings(mesh, opt_state, ps)
+    flat_p = jax.tree.leaves(ps)
+    flat_m = jax.tree.leaves(os_.m)
+    assert len(flat_p) == len(flat_m)
+    for a, b in zip(flat_p, flat_m):
+        assert a.spec == b.spec
+
+
+def test_cache_specs():
+    cfg = get_config("recurrentgemma-9b")
+    from repro.models import transformer
+    mesh = fake_mesh()
+    shapes = transformer.cache_shapes(cfg, 128, 32768)
+    sh = sharding.cache_shardings(mesh, shapes, batch=128)
+    # attention kv: batch over data, seq over model
+    kspec = sh["mid"]["b1"]["k"].spec  # pattern offset 1: b1 is the "local" layer
+    assert kspec == P(None, "data", "model", None, None)  # (lead, B, S, Hk, dh)
+    # rglru state h (B, Dr): batch + model
+    hspec = sh["mid"]["b0"]["h"].spec
+    assert hspec[1] == "data"
+    # batch=1: nothing sharded on batch
+    sh1 = sharding.cache_shardings(mesh, transformer.cache_shapes(cfg, 1, 1024),
+                                   batch=1)
+    assert sh1["first"]["h"].spec[0] is None

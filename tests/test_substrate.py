@@ -1,0 +1,176 @@
+"""Tests for optimizer (incl. int8 states), gradient compression, data
+pipeline determinism, checkpoint atomicity/retention/resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import PipelineConfig, SyntheticLM, make_source
+from repro.optim import adamw as adamw_mod
+from repro.optim import compress
+from repro.optim.adamw import adamw, apply_updates, cosine_schedule
+
+
+# -- optimizer ---------------------------------------------------------------
+
+def _toy_problem():
+    params = {"w": jnp.array([2.0, -3.0]), "b": jnp.zeros((2, 2))}
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum((p["b"] - 1.0) ** 2)
+    return params, loss
+
+
+@pytest.mark.parametrize("int8_state", [False, True])
+def test_adamw_converges(int8_state):
+    params, loss = _toy_problem()
+    opt = adamw(1e-1, weight_decay=0.0, int8_state=int8_state)
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state, _ = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_int8_state_memory_is_quarter():
+    params = {"w": jnp.zeros((1024, 256))}
+    opt8 = adamw(1e-3, int8_state=True)
+    s8 = opt8.init(params)
+    b8 = sum(np.asarray(x).nbytes for x in jax.tree.leaves(s8))
+    opt32 = adamw(1e-3, int8_state=False)
+    s32 = opt32.init(params)
+    b32 = sum(np.asarray(x).nbytes for x in jax.tree.leaves(s32))
+    assert b8 < 0.3 * b32
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < float(lr(50)) < float(lr(10))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(1000,), (16, 300), (4, 4, 64)]))
+@settings(max_examples=12, deadline=None)
+def test_q8_codec_roundtrip_error(seed, shape):
+    """Property: shape-preserving int8 codec, error <= blockmax/254 elementwise."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 10
+    codes, scale = adamw_mod._q8_encode(x)
+    assert codes.shape == x.shape and codes.dtype == jnp.int8
+    back = adamw_mod._q8_decode(codes, scale, x.shape, x.size)
+    tol = float(jnp.max(jnp.abs(x))) / 127.0
+    err = float(jnp.max(jnp.abs(back - x)))
+    assert err <= tol * 0.51 + 1e-6
+
+
+# -- gradient compression ------------------------------------------------------
+
+def test_compressed_psum_matches_mean(tmp_path):
+    """int8-compressed all-reduce ~= exact psum within quantization error."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax import shard_map
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs).reshape(1,), ("d",))
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+
+    def body(gg):
+        return compress.compressed_psum(gg, "d", jax.random.PRNGKey(1))
+
+    out = shard_map(body, mesh=mesh, in_specs=(P("d"),), out_specs=P("d"))(
+        {"w": g["w"][None]})
+    got = out["w"][0]
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(got - g["w"]))) <= 2.1 * scale
+
+
+def test_quantize_grad_unbiased():
+    g = jnp.full((2000,), 0.3)
+    samples = []
+    for i in range(32):
+        codes, scale = compress.quantize_grad(g, jax.random.PRNGKey(i))
+        samples.append(np.asarray(codes, np.float32) * float(scale))
+    mean = np.mean(samples)
+    assert abs(mean - 0.3) < 2e-3
+
+
+# -- data pipeline ---------------------------------------------------------------
+
+def test_pipeline_deterministic_and_sharded():
+    cfg = PipelineConfig(vocab=1000, seq_len=64, global_batch=8)
+    src = SyntheticLM(cfg)
+    b1, b2 = src.batch_at(7), src.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 64)
+    assert (b1["tokens"] != src.batch_at(8)["tokens"]).any()
+    # host sharding partitions the global batch
+    h0 = SyntheticLM(PipelineConfig(1000, 64, 8, host_index=0, host_count=2))
+    h1 = SyntheticLM(PipelineConfig(1000, 64, 8, host_index=1, host_count=2))
+    assert h0.batch_at(0)["tokens"].shape == (4, 64)
+    assert h1.batch_at(0)["tokens"].shape == (4, 64)
+
+
+def test_pipeline_targets_shifted():
+    cfg = PipelineConfig(vocab=100, seq_len=16, global_batch=2)
+    b = SyntheticLM(cfg).batch_at(0)
+    # targets[t] is tokens[t+1] of the underlying stream: verify motif reuse
+    assert b["tokens"].max() < 100 and b["targets"].max() < 100
+
+
+def test_file_source(tmp_path):
+    path = tmp_path / "tokens.bin"
+    np.arange(10_000, dtype=np.uint16).tofile(path)
+    cfg = PipelineConfig(vocab=500, seq_len=32, global_batch=4)
+    src = make_source(cfg, str(path))
+    b = src.batch_at(3)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["targets"][:, :-1], b["tokens"][:, 1:])
+
+
+# -- checkpointing ------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "packed": jnp.arange(16, dtype=jnp.uint32)},
+            "step": jnp.int32(5)}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    ckpt.save(d, 10, tree, extra={"arch": "llama3.2-3b"})
+    assert ckpt.latest_step(d) == 10
+    got, man = ckpt.restore(d, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.manifest_extra(d)["arch"] == "llama3.2-3b"
+
+
+def test_ckpt_retention_and_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in [1, 2, 3, 4, 5]:
+        ckpt.save(d, s, _tree(s), keep_n=2)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert steps == ["step_00000004", "step_00000005"]
+    assert ckpt.latest_step(d) == 5
+
+
+def test_ckpt_crash_mid_write_ignored(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, _tree())
+    # simulate a crashed write
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    assert ckpt.latest_step(d) == 1
+    got, _ = ckpt.restore(d, _tree())
+    assert int(got["step"]) == 5
+
+
+def test_ckpt_structure_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, _tree())
+    with pytest.raises(ValueError):
+        ckpt.restore(d, {"params": {"w": jnp.zeros((8, 8))}})
