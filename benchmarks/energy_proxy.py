@@ -27,7 +27,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pack
-from repro.core.qlinear import (_binary_gemm_popcount, _ternary_gemm_popcount)
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16, PEAK_OPS_INT8
 
 # the paper's Fig. 5 layer: R=S=3, C=M=128, W=H=16 -> im2col GEMM
@@ -61,7 +60,7 @@ def run() -> list[dict]:
     xp, wp = pack.pack_binary(x_f), pack.pack_binary(w_f)
     bin_operand = xp.nbytes + wp.nbytes
     bin_bytes = bin_operand + GM * GN * 4
-    f = jax.jit(lambda a, b: _binary_gemm_popcount(a, b, GK))
+    f = jax.jit(lambda a, b: pack.binary_dot_words(a[:, None, :], b, GK))
     us = _time(f, xp, wp)
     rows.append(dict(
         precision="binary", bits=1, bytes=bin_bytes,
@@ -79,7 +78,8 @@ def run() -> list[dict]:
     wm, ws = pack.pack_ternary(wt)
     ter_operand = xm.nbytes * 2 + wm.nbytes * 2
     ter_bytes = ter_operand + GM * GN * 4
-    f = jax.jit(_ternary_gemm_popcount)
+    f = jax.jit(lambda a, b, c, d: pack.ternary_dot_words(
+        a[:, None, :], b[:, None, :], c, d))
     us = _time(f, xm, xs, wm, ws)
     rows.append(dict(
         precision="ternary", bits=2, bytes=ter_bytes,

@@ -1,9 +1,16 @@
 """Pallas kernel micro-bench: interpret-mode wall time (correctness-scale) +
 the analytic TPU tile model for each kernel's BlockSpec choice.
 
-Wall time in interpret mode is NOT TPU performance — it validates the kernels
-execute and lets us compare formulations structurally. The derived column is
-the VMEM working set of the chosen block shapes (must be << 128 MiB).
+Driven by the `repro.kernels.dispatch` registry: every registered operating
+point with a Pallas MacBody is benched through the single `qgemm` entry
+point (so the bench exercises exactly the code the serve stack runs —
+activation prep, padding, fused bias epilogue and all). Registering a new
+precision/kernel variant adds a bench row automatically.
+
+Wall time in interpret mode is NOT TPU performance — it validates the
+kernels execute and lets us compare formulations structurally. The derived
+column is the VMEM working set of the default block shapes (must be
+<< 128 MiB), from `harness.vmem_tile_bytes`.
 """
 from __future__ import annotations
 
@@ -13,60 +20,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pack
-from repro.kernels import bgemm, i8gemm, tgemm
-
-
-def _vmem_bytes(bm, bn, bkw_words, acc_dtype_bytes=4, nacc=1):
-    # x tile + w tile + acc scratch + out tile
-    return (bm * bkw_words * 4 + bn * bkw_words * 4
-            + nacc * bm * bn * acc_dtype_bytes + bm * bn * 2)
+from repro.core import qlinear
+from repro.core.precision import LayerQuant
+from repro.core.quantize import QuantSpec
+from repro.kernels import dispatch, harness
 
 
 def run():
-    rng = np.random.default_rng(2)
     m, k, n = 128, 1024, 128
     rows = []
 
-    xp = pack.pack_binary(jnp.asarray(np.sign(rng.standard_normal((m, k))) + 0.0))
-    wp = pack.pack_binary(jnp.asarray(np.sign(rng.standard_normal((n, k))) + 0.0))
-    ws = jnp.ones((n,), jnp.float32)
-    as_ = jnp.ones((m,), jnp.float32)
-    for impl in ("popcount", "mxu"):
+    for key in sorted(dispatch.cells()):
+        cell = dispatch.cells()[key]
+        if cell.body is None:        # weight-only/dense: no packed kernel
+            continue
+        spec = qlinear.QLinearSpec(
+            k, n, LayerQuant(QuantSpec(cell.wprec), QuantSpec(cell.aprec)))
+        p = qlinear.pack_params(
+            qlinear.init(jax.random.PRNGKey(0), spec), spec)
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, k)) * 0.2
+        impl = "popcount" if cell.impl == "*" else cell.impl
+        y = dispatch.qgemm(p, x, spec, impl=impl, backend="pallas")
+        jax.block_until_ready(y)                      # compile outside timing
         t0 = time.perf_counter()
-        y = bgemm.bgemm(xp, wp, ws, as_, k=k, impl=impl)
-        jax.block_until_ready(y)
+        jax.block_until_ready(
+            dispatch.qgemm(p, x, spec, impl=impl, backend="pallas"))
         dt = time.perf_counter() - t0
-        rows.append(("bgemm_" + impl, dt * 1e6,
-                     f"vmem={_vmem_bytes(128, 128, 16)/2**10:.0f}KiB"))
-
-    xt = jnp.asarray(rng.integers(-1, 2, (m, k)).astype(np.float32))
-    wt = jnp.asarray(rng.integers(-1, 2, (n, k)).astype(np.float32))
-    xm, xs = pack.pack_ternary(xt)
-    wm, wsgn = pack.pack_ternary(wt)
-    t0 = time.perf_counter()
-    y = tgemm.tgemm(xm, xs, wm, wsgn, ws, as_, k=k)
-    jax.block_until_ready(y)
-    rows.append(("tgemm", (time.perf_counter() - t0) * 1e6,
-                 f"vmem={_vmem_bytes(128, 128, 16, nacc=2)/2**10:.0f}KiB"))
+        rows.append((cell.body.name, dt * 1e6,
+                     f"vmem={harness.vmem_tile_bytes(cell.body)/2**10:.0f}KiB"))
 
     from repro.kernels.flash_attn import flash_attention
     ks3 = jax.random.split(jax.random.PRNGKey(3), 3)
     qf = jax.random.normal(ks3[0], (4, 256, 64), jnp.float32)
     kf = jax.random.normal(ks3[1], (2, 256, 64), jnp.float32)
     vf = jax.random.normal(ks3[2], (2, 256, 64), jnp.float32)
+    fa = lambda: flash_attention(qf, kf, vf, causal=True, bq=128, bk=128)
+    jax.block_until_ready(fa())                       # compile outside timing
     t0 = time.perf_counter()
-    jax.block_until_ready(flash_attention(qf, kf, vf, causal=True, bq=128, bk=128))
+    jax.block_until_ready(fa())
     rows.append(("flash_attn", (time.perf_counter() - t0) * 1e6,
                  f"vmem={(128*64*4*2 + 128*64*4 + 2*128*4)/2**10:.0f}KiB"))
-
-    xq = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
-    wq = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
-    t0 = time.perf_counter()
-    y = i8gemm.i8gemm(xq, wq, ws, as_)
-    jax.block_until_ready(y)
-    rows.append(("i8gemm", (time.perf_counter() - t0) * 1e6,
-                 f"vmem={(128*512 + 512*128 + 128*128*4 + 128*128*2)/2**10:.0f}KiB"))
     return rows
 
 

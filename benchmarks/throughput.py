@@ -19,7 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pack
-from repro.core.qlinear import _binary_gemm_popcount, _ternary_gemm_popcount
 from repro.launch.mesh import PEAK_OPS_INT8
 
 VPU_OPS = 4e12
@@ -44,7 +43,8 @@ def run() -> list[dict]:
     x = jnp.asarray(np.sign(rng.standard_normal((M, K))) + 0.0)
     w = jnp.asarray(np.sign(rng.standard_normal((N, K))) + 0.0)
     xp, wp = pack.pack_binary(x), pack.pack_binary(w)
-    dt = _bench(jax.jit(lambda a, b: _binary_gemm_popcount(a, b, K)), xp, wp)
+    dt = _bench(jax.jit(lambda a, b: pack.binary_dot_words(a[:, None, :], b, K)),
+                xp, wp)
     rows.append(dict(precision="binary",
                      tpu_peak_gops=(32 / 3) * VPU_OPS * 2 / 1e9,
                      cpu_gops=OPS / dt / 1e9, paper_gops=614.0))
@@ -53,7 +53,8 @@ def run() -> list[dict]:
     wt = jnp.asarray(rng.integers(-1, 2, (N, K)).astype(np.float32))
     xm, xs = pack.pack_ternary(xt)
     wm, ws = pack.pack_ternary(wt)
-    dt = _bench(jax.jit(_ternary_gemm_popcount), xm, xs, wm, ws)
+    dt = _bench(jax.jit(lambda a, b, c, d: pack.ternary_dot_words(
+        a[:, None, :], b[:, None, :], c, d)), xm, xs, wm, ws)
     rows.append(dict(precision="ternary",
                      tpu_peak_gops=(32 / 5) * VPU_OPS * 2 / 1e9,
                      cpu_gops=OPS / dt / 1e9, paper_gops=307.0))

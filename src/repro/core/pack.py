@@ -61,6 +61,16 @@ def unpack_binary(words: jnp.ndarray, k: int) -> jnp.ndarray:
     return jnp.where(bits == 1, 1.0, -1.0).astype(jnp.float32)
 
 
+def unpack_pm1_i8(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Unpack bit-plane words to ±1 int8 along a new last axis of length k.
+
+    The canonical plane->operand decoder for the MXU formulations (jnp and
+    Pallas tile bodies both call this — one unpack implementation total).
+    """
+    bits = unpack_bits(words, k)
+    return bits.astype(jnp.int8) * 2 - 1
+
+
 # -- ternary -----------------------------------------------------------------
 
 def pack_ternary(values: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -75,6 +85,14 @@ def unpack_ternary(mask_words: jnp.ndarray, sign_words: jnp.ndarray, k: int) -> 
     mask = unpack_bits(mask_words, k).astype(jnp.float32)
     sign = unpack_bits(sign_words, k)
     return mask * jnp.where(sign == 1, -1.0, 1.0)
+
+
+def unpack_ternary_i8(mask_words: jnp.ndarray, sign_words: jnp.ndarray,
+                      k: int) -> jnp.ndarray:
+    """Unpack trit planes to {-1,0,+1} int8 (canonical MXU-path decoder)."""
+    mask = unpack_bits(mask_words, k).astype(jnp.int8)
+    sign = unpack_bits(sign_words, k).astype(jnp.int8)
+    return mask * (1 - 2 * sign)
 
 
 # -- packed dot products (the XNOR/gated-XNOR algebra, §II-A) ----------------

@@ -15,9 +15,10 @@ projections, LM head). It has three execution backends:
                   impl="mxu"       beyond-paper: unpack packed planes to ±1
                                    int8 *in VMEM* and use the int8 MXU path —
                                    packed HBM storage, dense-rate compute.
-  backend="pallas"  serve-mode GEMMs dispatch to the Pallas TPU kernels in
-                `repro.kernels` (interpret-validated on CPU); "jnp" uses the
-                identical XLA formulations below (what the CPU dry-run lowers).
+  backend="pallas"  serve-mode GEMMs run the Pallas TPU kernels registered in
+                `repro.kernels.dispatch` (interpret-validated on CPU); "jnp"
+                runs the same registry's XLA formulations (CPU dry-run path).
+                Both backends share one qgemm entry point per operating point.
 
 Weight layout (train): w[in, out] (+ optional expert axis in front).
 Weight layout (serve): precision-dependent, produced by `pack_params`.
@@ -32,8 +33,8 @@ import jax.numpy as jnp
 
 from . import pack
 from .precision import LayerQuant
-from .quantize import (QuantSpec, binarize, binary_codes, fake_quant,
-                       int8_codes, int8_scale, ternarize, ternary_codes)
+from .quantize import (QuantSpec, binarize, fake_quant, int8_codes,
+                       int8_scale, ternarize)
 
 Params = dict[str, jnp.ndarray]
 
@@ -241,123 +242,21 @@ def serve_param_shapes(spec: QLinearSpec) -> dict[str, jax.ShapeDtypeStruct]:
 
 
 # ---------------------------------------------------------------------------
-# serve path — jnp formulations (XLA; the Pallas kernels mirror these)
+# serve path — one dispatch into the precision-keyed GEMM registry
 # ---------------------------------------------------------------------------
-
-def _binary_gemm_popcount(xp: jnp.ndarray, wp: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Paper-faithful XNOR+popcount GEMM. xp: (..., K/32) uint32 packed acts,
-    wp: (N, K/32) packed weights -> (..., N) int32."""
-    mism = jnp.sum(
-        jax.lax.population_count(xp[..., None, :] ^ wp).astype(jnp.int32), axis=-1)
-    return jnp.int32(k) - 2 * mism
-
-
-def _ternary_gemm_popcount(xm, xs, wm, ws) -> jnp.ndarray:
-    """Gated-XNOR+popcount GEMM over trit planes -> (..., N) int32."""
-    am = xm[..., None, :] & wm
-    dis = am & (xs[..., None, :] ^ ws)
-    pc = lambda v: jnp.sum(jax.lax.population_count(v).astype(jnp.int32), axis=-1)
-    return pc(am) - 2 * pc(dis)
-
-
-def _unpack_pm1_i8(words: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Unpack bit-plane words to ±1 int8 along a new last axis of length k."""
-    bits = pack.unpack_bits(words, k)
-    return (bits.astype(jnp.int8) * 2 - 1)
-
-
-def _binary_gemm_mxu(x: jnp.ndarray, wp: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Beyond-paper MXU formulation: unpack weights to ±1 and dense-dot.
-    x is bf16 acts (weight-only) or ±1 int8 (W&A binary)."""
-    w = _unpack_pm1_i8(wp, k)  # (N, K)
-    if x.dtype == jnp.int8:
-        return jax.lax.dot_general(
-            x, w, (((x.ndim - 1,), (1,)), ((), ())),
-            preferred_element_type=jnp.int32)
-    return x @ w.astype(x.dtype).T
-
-
-def _ternary_unpack_i8(wm, ws, k: int) -> jnp.ndarray:
-    mask = pack.unpack_bits(wm, k).astype(jnp.int8)
-    sign = pack.unpack_bits(ws, k).astype(jnp.int8)
-    return mask * (1 - 2 * sign)
-
 
 def apply(p: Params, x: jnp.ndarray, spec: QLinearSpec, *,
           mode: str = "train", impl: str = "popcount",
           backend: str = "jnp", wire: str = "dense") -> jnp.ndarray:
-    """Apply the quantized linear. See module docstring for modes."""
+    """Apply the quantized linear. See module docstring for modes.
+
+    Serve mode routes every (wprec, aprec, impl) operating point through
+    `repro.kernels.dispatch.qgemm` — the single owner of activation
+    packing, expert vmap and the fused bias/requant epilogue for both the
+    jnp and Pallas backends."""
     if mode == "train":
         return _apply_train(p, x, spec, wire)
     if mode != "serve":
         raise ValueError(f"mode={mode!r}")
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.qlinear_serve(p, x, spec, impl=impl)
-    return _apply_serve_jnp(p, x, spec, impl)
-
-
-def _apply_serve_jnp(p: Params, x: jnp.ndarray, spec: QLinearSpec, impl: str) -> jnp.ndarray:
-    if spec.experts:
-        # vmap the dense serve path over the expert axis; x: (E, ..., K)
-        sub = dataclasses.replace(spec, experts=0)
-        sub_p = {k: v for k, v in p.items() if k != "a_scale"}
-        fn = lambda pp, xx: _apply_serve_jnp(
-            {**pp, **({"a_scale": p["a_scale"]} if "a_scale" in p else {})}, xx, sub, impl)
-        return jax.vmap(fn)(sub_p, x)
-
-    wprec = spec.lq.weights.precision
-    aprec = spec.lq.acts.precision
-    k = spec.in_dim
-    odt = jnp.bfloat16
-
-    if wprec == "binary":
-        wscale = p["w_scale"]
-        if aprec == "binary":
-            a_alpha = jnp.mean(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
-            if impl == "popcount":
-                xp = pack.pack_binary(jnp.where(x >= 0, 1.0, -1.0))
-                acc = _binary_gemm_popcount(xp, p["w_packed"], k)
-            else:
-                xi = jnp.where(x >= 0, 1, -1).astype(jnp.int8)
-                acc = _binary_gemm_mxu(xi, p["w_packed"], k)
-            y = acc.astype(jnp.float32) * wscale * a_alpha
-        else:  # weight-only binary: bf16 acts, MXU — stay bf16 end-to-end so
-            # the row-parallel TP partial-sum reduces in bf16 (2x wire, §Perf A)
-            acc = _binary_gemm_mxu(x.astype(odt), p["w_packed"], k)
-            y = acc * wscale.astype(odt)
-    elif wprec == "ternary":
-        wscale = p["w_scale"]
-        if aprec == "ternary":
-            a_alpha = jnp.mean(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
-            xq = ternarize(x.astype(jnp.float32))
-            if impl == "popcount":
-                xm, xs = pack.pack_ternary(jax.lax.stop_gradient(xq))
-                acc = _ternary_gemm_popcount(xm, xs, p["w_mask"], p["w_sign"])
-            else:
-                xi = xq.astype(jnp.int8)
-                w = _ternary_unpack_i8(p["w_mask"], p["w_sign"], k)  # (N, K)
-                acc = jax.lax.dot_general(
-                    xi, w, (((x.ndim - 1,), (1,)), ((), ())),
-                    preferred_element_type=jnp.int32)
-            y = acc.astype(jnp.float32) * wscale * a_alpha
-        else:
-            w = _ternary_unpack_i8(p["w_mask"], p["w_sign"], k).astype(odt)
-            y = (x.astype(odt) @ w.T) * wscale.astype(odt)   # bf16 TP reduce
-    elif wprec == "int8":
-        wscale = p["w_scale"]
-        if aprec == "int8":
-            a_s = p["a_scale"]
-            xi = int8_codes(x.astype(jnp.float32), a_s)
-            acc = jax.lax.dot_general(
-                xi, p["w_q"], (((x.ndim - 1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            y = acc.astype(jnp.float32) * (wscale * a_s)
-        else:
-            y = (x.astype(odt) @ p["w_q"].astype(odt)) * wscale.astype(odt)
-    else:  # dense bf16
-        y = x.astype(odt) @ p["w"]
-
-    if "b" in p:
-        y = (y.astype(jnp.float32) + p["b"]).astype(odt)
-    return y.astype(odt)
+    from repro.kernels.dispatch import qgemm   # deferred: core must not pull
+    return qgemm(p, x, spec, impl=impl, backend=backend)   # pallas at import

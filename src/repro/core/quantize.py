@@ -49,11 +49,6 @@ def binarize(x: jnp.ndarray) -> jnp.ndarray:
     return _ste(q, jnp.clip(x, -1.0, 1.0))
 
 
-def binary_codes(x: jnp.ndarray) -> jnp.ndarray:
-    """Integer codes for the serve path: 1 for +1, 0 for -1 (uint8)."""
-    return (x >= 0).astype(jnp.uint8)
-
-
 # ---------------------------------------------------------------------------
 # ternary {-1,0,+1}
 # ---------------------------------------------------------------------------
@@ -67,18 +62,6 @@ def ternarize(x: jnp.ndarray, threshold: float = 0.05) -> jnp.ndarray:
     t = threshold * jnp.mean(jnp.abs(x)) + 1e-8
     q = jnp.where(x > t, 1.0, jnp.where(x < -t, -1.0, 0.0)).astype(x.dtype)
     return _ste(q, jnp.clip(x, -1.0, 1.0))
-
-
-def ternary_codes(x: jnp.ndarray, threshold: float = 0.05) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """(mask, sign) code planes for the serve path.
-
-    mask = 1 where the trit is non-zero; sign = 1 where the trit is -1.
-    This is exactly the gated-XNOR encoding of §II-A.
-    """
-    t = threshold * jnp.mean(jnp.abs(x)) + 1e-8
-    mask = (jnp.abs(x) > t).astype(jnp.uint8)
-    sign = (x < -t).astype(jnp.uint8)
-    return mask, sign
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,13 @@
 """Pallas TPU kernels for BrainTTA's compute hot-spot: the mixed-precision GEMM.
 
-bgemm — binary XNOR+popcount (vBMAC), + beyond-paper MXU variant
-tgemm — ternary gated-XNOR+popcount (vTMAC)
-i8gemm — int8 MXU GEMM with fused requant epilogue (8-bit vMAC)
-ops   — jit'd model-facing wrappers; ref — pure-jnp oracles.
+harness  — the ONE output-stationary tiled skeleton (grid, BlockSpecs, VMEM
+           accumulators, fused requant epilogue) every precision rides
+dispatch — precision-keyed registry + `qgemm`, the single serve entry point
+bgemm    — binary XNOR+popcount (vBMAC) + beyond-paper MXU MacBodies
+tgemm    — ternary gated-XNOR (vTMAC) + MXU MacBodies
+i8gemm   — int8 MXU dot MacBody (8-bit vMAC)
+ops      — compat shim over dispatch; ref — pure-jnp oracles.
 """
-from . import bgemm, i8gemm, ops, ref, tgemm  # noqa: F401
+from . import bgemm, dispatch, harness, i8gemm, ops, ref, tgemm  # noqa: F401
 from . import flash_attn  # noqa: F401
+from .dispatch import qgemm  # noqa: F401

@@ -1,115 +1,71 @@
-"""Binary XNOR+popcount GEMM — the vBMAC unit as a Pallas TPU kernel.
+"""Binary XNOR+popcount MAC bodies — the vBMAC unit (§III).
 
-BrainTTA's binary datapath (§III): 1024-bit vectors, 32 reduction trees of 32
-binary inputs each, output-stationary accumulation, requantization fused
-behind the MAC (§IV-B "as early as possible"). TPU mapping (DESIGN.md §6):
+Operands arrive bit-packed along K (32 MACs per uint32 word, v_C=32). Two
+formulations of the same contract, both riding `harness.gemm`'s shared
+output-stationary skeleton:
 
-  * operands arrive bit-packed along K: 32 MACs per uint32 word (v_C=32),
-  * the grid is (M/bm, N/bn, K/bkw) with K innermost → the int32 accumulator
-    tile lives in VMEM scratch across the K sweep (output-stationary),
-  * per K-word compute is XOR + population_count + add on the VPU — the
-    direct analogue of the XNOR+popcount reduction tree,
-  * the epilogue (last K step) applies the fused requant
-    (dot = K − 2·mismatches) · w_scale[n] · a_scale[m] and writes bf16 —
-    the wide accumulator never leaves VMEM.
+  BINARY_POPCOUNT — paper-faithful VPU path: XOR + population_count + add is
+                    the direct analogue of the XNOR+popcount reduction tree;
+                    the dot is recovered as K − 2·mismatches in finish().
+  BINARY_MXU      — beyond-paper: unpack both packed tiles to ±1 *in VMEM*
+                    and ride the MXU (dense-rate compute, packed HBM traffic).
 
-Two kernels are provided:
-  bgemm_popcount — paper-faithful VPU formulation above.
-  bgemm_mxu      — beyond-paper: unpack the weight tile to ±1 inside VMEM and
-                   ride the MXU (dense-rate compute, packed HBM traffic). Same
-                   contract, used by the §Perf hillclimb.
+The grid/BlockSpec/accumulator/requant-epilogue scaffold lives in
+`repro.kernels.harness`; registration into the serve stack lives in
+`repro.kernels.dispatch`.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import pack
+
+from .harness import MacBody, gemm
 
 WORD = 32
 
 
-def _bgemm_popcount_kernel(x_ref, w_ref, ws_ref, as_ref, o_ref, acc_ref, *, k_total, bkw):
-    """One (bm, bn) output tile; grid dim 2 sweeps K words (output-stationary)."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    x = x_ref[...]  # (bm, bkw) uint32
-    w = w_ref[...]  # (bn, bkw) uint32
+def _popcount_step(xs, ws, accs, *, bkq):
+    x, w = xs[0], ws[0]                     # (bm, bkq), (bn, bkq) uint32
 
     def body(i, acc):
-        xi = jax.lax.dynamic_slice_in_dim(x, i, 1, axis=1)      # (bm, 1)
-        wi = jax.lax.dynamic_slice_in_dim(w, i, 1, axis=1)      # (bn, 1)
-        mism = jax.lax.population_count(jnp.bitwise_xor(xi, wi.T))  # (bm, bn)
+        xi = jax.lax.dynamic_slice_in_dim(x, i, 1, axis=1)        # (bm, 1)
+        wi = jax.lax.dynamic_slice_in_dim(w, i, 1, axis=1)        # (bn, 1)
+        mism = jax.lax.population_count(jnp.bitwise_xor(xi, wi.T))
         return acc + mism.astype(jnp.int32)
 
-    acc_ref[...] = jax.lax.fori_loop(0, bkw, body, acc_ref[...])
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        dot = jnp.int32(k_total) - 2 * acc_ref[...]
-        y = dot.astype(jnp.float32) * ws_ref[...][None, :] * as_ref[...][:, None]
-        o_ref[...] = y.astype(o_ref.dtype)
+    return (jax.lax.fori_loop(0, bkq, body, accs[0]),)
 
 
-def _bgemm_mxu_kernel(x_ref, w_ref, ws_ref, as_ref, o_ref, acc_ref, *, k_total, bkw):
-    """MXU variant: unpack both tiles to ±1 in VMEM, dense int-dot."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    shifts = jnp.arange(WORD, dtype=jnp.uint32)
-
-    def unpack_pm1(words):  # (R, bkw) -> (R, bkw*32) float32 in {-1,+1}
-        bits = (words[..., None] >> shifts) & jnp.uint32(1)
-        bits = bits.reshape(words.shape[0], -1)
-        return bits.astype(jnp.float32) * 2.0 - 1.0
-
-    xf = unpack_pm1(x_ref[...])          # (bm, 32*bkw)
-    wf = unpack_pm1(w_ref[...])          # (bn, 32*bkw)
-    acc_ref[...] += jax.lax.dot_general(  # MXU: contract K
-        xf, wf, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(jnp.int32)
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        y = acc_ref[...].astype(jnp.float32) * ws_ref[...][None, :] * as_ref[...][:, None]
-        o_ref[...] = y.astype(o_ref.dtype)
+def _popcount_finish(accs, k_total):
+    return jnp.int32(k_total) - 2 * accs[0]        # dot = K - 2*mismatches
 
 
-@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bkw", "impl", "interpret"))
+BINARY_POPCOUNT = MacBody("bgemm_popcount", n_x=1, n_w=1, n_acc=1,
+                          k_per_q=WORD, step=_popcount_step,
+                          finish=_popcount_finish)
+
+
+def _mxu_step(xs, ws, accs, *, bkq):
+    k = bkq * WORD
+    xf = pack.unpack_pm1_i8(xs[0], k).astype(jnp.float32)   # (bm, 32*bkq)
+    wf = pack.unpack_pm1_i8(ws[0], k).astype(jnp.float32)   # (bn, 32*bkq)
+    dot = jax.lax.dot_general(xf, wf, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return (accs[0] + dot.astype(jnp.int32),)
+
+
+BINARY_MXU = MacBody("bgemm_mxu", n_x=1, n_w=1, n_acc=1, k_per_q=WORD,
+                     step=_mxu_step, finish=lambda accs, k: accs[0],
+                     unpacks_f32=True)
+
+
 def bgemm(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
           w_scale: jnp.ndarray, a_scale: jnp.ndarray, *, k: int,
           bm: int = 128, bn: int = 128, bkw: int = 16,
           impl: str = "popcount", interpret: bool = True) -> jnp.ndarray:
-    """Packed binary GEMM: (M, K/32)u32 × (N, K/32)u32 → (M, N) bf16.
-
-    Block sizes are clamped to the problem and must divide it; `ops.py`
-    handles padding/selection. `interpret=True` on CPU (validation), False on
-    real TPU.
-    """
-    m, kw = x_packed.shape
-    n, kw2 = w_packed.shape
-    assert kw == kw2 and kw * WORD == k, (x_packed.shape, w_packed.shape, k)
-    bm, bn, bkw = min(bm, m), min(bn, n), min(bkw, kw)
-    assert m % bm == 0 and n % bn == 0 and kw % bkw == 0, (m, n, kw, bm, bn, bkw)
-
-    kern = _bgemm_popcount_kernel if impl == "popcount" else _bgemm_mxu_kernel
-    grid = (m // bm, n // bn, kw // bkw)
-    return pl.pallas_call(
-        functools.partial(kern, k_total=k, bkw=bkw),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bkw), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bn, bkw), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
-            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
-    )(x_packed, w_packed, w_scale, a_scale)
+    """Packed binary GEMM: (M, K/32)u32 × (N, K/32)u32 → (M, N) bf16."""
+    body = BINARY_POPCOUNT if impl == "popcount" else BINARY_MXU
+    return gemm(body, (x_packed,), (w_packed,), w_scale, a_scale,
+                k=k, bm=bm, bn=bn, bkq=bkw, interpret=interpret)

@@ -1,0 +1,265 @@
+"""Precision-keyed GEMM dispatch — the single entry point of the serve stack.
+
+BrainTTA serves binary, ternary and int8 operands through one flexible
+datapath (§III); this module is that datapath's software twin. Every serve
+GEMM in the repo — `core.qlinear.apply(mode="serve")`, the Pallas backend
+that used to live in `kernels.ops`, the launch drivers and the benches —
+funnels through
+
+    qgemm(p, x, spec, *, impl, backend)
+
+which owns, exactly once, everything the four call sites used to copy:
+activation quantization/packing, M-padding, block-size selection, expert
+vmap, and the bias/requant epilogue (fused in-kernel on the Pallas backend,
+single f32 requant on the jnp backend — no separate bias round-trip).
+
+The registry maps operating points (wprec, aprec, impl) to `GemmCell`s.
+Each cell holds the ONE implementation of its formulation:
+
+  prep  — activation quantize/pack (shared verbatim by both backends, so
+          jnp-vs-pallas equivalence is an algebra check, not a tolerance
+          dance)
+  acc   — the jnp accumulator formulation (XLA backend / CPU dry-run)
+  body  — the Pallas `MacBody` riding `harness.gemm`'s shared skeleton
+          (None = no packed kernel; the jnp formulation serves both
+          backends, e.g. the weight-only cells whose activations stay bf16
+          on the MXU — quantizing them here would silently change the
+          algebra vs QAT)
+
+Adding a precision or kernel variant = one prep/acc/body triple + one
+`register()` call. `impl="*"` marks formulation-agnostic cells (int8 has no
+popcount/mxu split; weight-only cells ignore impl).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack
+from repro.core.quantize import int8_codes, ternarize
+
+from . import bgemm, i8gemm, tgemm
+from . import harness
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+#: Pallas kernels need M padded to the sublane multiple.
+PAD_M = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmCell:
+    """One (wprec, aprec, impl) operating point of the datapath."""
+    wprec: str
+    aprec: str
+    impl: str                       # "popcount" | "mxu" | "*" (agnostic)
+    weight_names: tuple[str, ...]   # packed-param entries feeding the GEMM
+    prep: Callable                  # (x2d, p, spec) -> (x_ops, a_scale|None)
+    acc: Callable                   # (x_ops, w_ops, k) -> (M, N) accumulator
+    body: harness.MacBody | None = None   # Pallas tile body (None = jnp only)
+    wide: bool = True               # f32 requant (W&A) vs bf16 (weight-only)
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        return (self.wprec, self.aprec, self.impl)
+
+    @property
+    def tag(self) -> str:
+        return f"w{self.wprec[:3]}/a{self.aprec[:3]}/{self.impl}"
+
+
+_REGISTRY: dict[tuple[str, str, str], GemmCell] = {}
+
+
+def register(cell: GemmCell) -> GemmCell:
+    if cell.key in _REGISTRY:
+        raise ValueError(f"duplicate GEMM registration for {cell.key}")
+    _REGISTRY[cell.key] = cell
+    return cell
+
+
+def lookup(wprec: str, aprec: str, impl: str = "popcount") -> GemmCell:
+    """Resolve an operating point; impl falls back to a '*' cell."""
+    for key in ((wprec, aprec, impl), (wprec, aprec, "*")):
+        if key in _REGISTRY:
+            return _REGISTRY[key]
+    raise KeyError(
+        f"no GEMM registered for (wprec={wprec!r}, aprec={aprec!r}, "
+        f"impl={impl!r}); have {sorted(_REGISTRY)}")
+
+
+def cells() -> dict[tuple[str, str, str], GemmCell]:
+    """Snapshot of the registry (tests / benches iterate this)."""
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# activation prep — ONE quantize+pack per activation precision
+# ---------------------------------------------------------------------------
+
+def _prep_binary(x2d, p, spec):
+    xf = x2d.astype(jnp.float32)
+    a_scale = jnp.mean(jnp.abs(xf), axis=-1)          # XNOR-Net per-row alpha
+    xp = pack.pack_binary(jnp.where(xf >= 0, 1.0, -1.0))
+    return (xp,), a_scale
+
+
+def _prep_ternary(x2d, p, spec):
+    xf = x2d.astype(jnp.float32)
+    a_scale = jnp.mean(jnp.abs(xf), axis=-1)
+    xq = jax.lax.stop_gradient(
+        ternarize(xf, spec.lq.acts.ternary_threshold))
+    xm, xs = pack.pack_ternary(xq)
+    return (xm, xs), a_scale
+
+
+def _prep_int8(x2d, p, spec):
+    a_s = p["a_scale"]     # calibrated constant; KeyError = packing bug,
+    xq = int8_codes(x2d.astype(jnp.float32), a_s)  # not a default to paper over
+    return (xq,), jnp.full((x2d.shape[0],), a_s, jnp.float32)
+
+
+def _prep_bf16(x2d, p, spec):
+    """Weight-only / dense: activations stay bf16 (MXU path)."""
+    return (x2d.astype(jnp.bfloat16),), None
+
+
+# ---------------------------------------------------------------------------
+# jnp accumulator formulations — ONE per registered cell
+# ---------------------------------------------------------------------------
+
+def _acc_binary_popcount(x_ops, w_ops, k):
+    return pack.binary_dot_words(x_ops[0][:, None, :], w_ops[0], k)
+
+
+def _acc_binary_mxu(x_ops, w_ops, k):
+    x = pack.unpack_pm1_i8(x_ops[0], k)                # (M, K) ±1 int8
+    w = pack.unpack_pm1_i8(w_ops[0], k)                # (N, K)
+    return jax.lax.dot_general(x, w, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def _acc_ternary_popcount(x_ops, w_ops, k):
+    return pack.ternary_dot_words(x_ops[0][:, None, :], x_ops[1][:, None, :],
+                                  w_ops[0], w_ops[1])
+
+
+def _acc_ternary_mxu(x_ops, w_ops, k):
+    x = pack.unpack_ternary_i8(x_ops[0], x_ops[1], k)  # (M, K) trits int8
+    w = pack.unpack_ternary_i8(w_ops[0], w_ops[1], k)  # (N, K)
+    return jax.lax.dot_general(x, w, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def _acc_int8(x_ops, w_ops, k):
+    return jax.lax.dot_general(x_ops[0], w_ops[0], (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def _acc_wonly_binary(x_ops, w_ops, k):
+    w = pack.unpack_pm1_i8(w_ops[0], k)                # (N, K)
+    return x_ops[0] @ w.astype(x_ops[0].dtype).T
+
+
+def _acc_wonly_ternary(x_ops, w_ops, k):
+    w = pack.unpack_ternary_i8(w_ops[0], w_ops[1], k)
+    return x_ops[0] @ w.astype(x_ops[0].dtype).T
+
+
+def _acc_wonly_int8(x_ops, w_ops, k):
+    return x_ops[0] @ w_ops[0].astype(x_ops[0].dtype)  # w_q is (K, N)
+
+
+def _acc_dense(x_ops, w_ops, k):
+    return x_ops[0] @ w_ops[0]
+
+
+# ---------------------------------------------------------------------------
+# the registry — every operating point of the POLICIES table
+# ---------------------------------------------------------------------------
+
+# W&A-quantized cells: packed operands, int accumulators, Pallas bodies.
+register(GemmCell("binary", "binary", "popcount", ("w_packed",),
+                  _prep_binary, _acc_binary_popcount, body=bgemm.BINARY_POPCOUNT))
+register(GemmCell("binary", "binary", "mxu", ("w_packed",),
+                  _prep_binary, _acc_binary_mxu, body=bgemm.BINARY_MXU))
+register(GemmCell("ternary", "ternary", "popcount", ("w_mask", "w_sign"),
+                  _prep_ternary, _acc_ternary_popcount,
+                  body=tgemm.TERNARY_POPCOUNT))
+register(GemmCell("ternary", "ternary", "mxu", ("w_mask", "w_sign"),
+                  _prep_ternary, _acc_ternary_mxu, body=tgemm.TERNARY_MXU))
+register(GemmCell("int8", "int8", "*", ("w_q",),
+                  _prep_int8, _acc_int8, body=i8gemm.I8_DOT))
+
+# weight-only cells: bf16 acts end-to-end so the row-parallel TP partial-sum
+# reduces in bf16 (2x wire, §Perf A); requant stays in bf16 (wide=False).
+register(GemmCell("binary", "none", "*", ("w_packed",),
+                  _prep_bf16, _acc_wonly_binary, wide=False))
+register(GemmCell("ternary", "none", "*", ("w_mask", "w_sign"),
+                  _prep_bf16, _acc_wonly_ternary, wide=False))
+register(GemmCell("int8", "none", "*", ("w_q",),
+                  _prep_bf16, _acc_wonly_int8, wide=False))
+register(GemmCell("none", "none", "*", ("w",),
+                  _prep_bf16, _acc_dense, wide=False))
+
+
+# ---------------------------------------------------------------------------
+# the entry point
+# ---------------------------------------------------------------------------
+
+def _requant_narrow(acc, w_scale, bias):
+    """Weight-only epilogue: scale in the accumulator dtype (bf16 TP wire),
+    bias folded in f32 — the one place bias touches the narrow path."""
+    y = acc if w_scale is None else acc * w_scale.astype(acc.dtype)
+    if bias is not None:
+        y = y.astype(jnp.float32) + bias
+    return y
+
+
+def qgemm(p: dict, x: jnp.ndarray, spec, *, impl: str = "popcount",
+          backend: str = "jnp") -> jnp.ndarray:
+    """The serve-mode quantized GEMM: (..., K) -> (..., N) bf16.
+
+    p: packed params from `core.qlinear.pack_params`; spec: QLinearSpec.
+    backend="pallas" routes W&A cells through `harness.gemm` (fused bias);
+    backend="jnp" (and cells with no Pallas body) run the identical
+    formulation via XLA. Both share prep and the requant algebra.
+    """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"backend={backend!r}")
+    if spec.experts:
+        sub = dataclasses.replace(spec, experts=0)
+        shared = {nm: p[nm] for nm in ("a_scale",) if nm in p}
+        per_e = {nm: v for nm, v in p.items() if nm not in shared}
+        fn = lambda pp, xx: qgemm({**pp, **shared}, xx, sub,
+                                  impl=impl, backend=backend)
+        return jax.vmap(fn)(per_e, x)
+
+    cell = lookup(spec.lq.weights.precision, spec.lq.acts.precision, impl)
+    k, n = spec.in_dim, spec.out_dim
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, k)
+    x_ops, a_scale = cell.prep(x2d, p, spec)
+    w_ops = tuple(p[nm] for nm in cell.weight_names)
+    w_scale = p.get("w_scale")
+    bias = p.get("b")
+
+    if backend == "pallas" and cell.body is not None:
+        m = x2d.shape[0]
+        padm = (-m) % PAD_M
+        if padm:
+            x_ops = tuple(jnp.pad(xo, ((0, padm), (0, 0))) for xo in x_ops)
+            a_scale = jnp.pad(a_scale, (0, padm))
+        y = harness.gemm(cell.body, x_ops, w_ops, w_scale, a_scale, bias,
+                         k=k, interpret=INTERPRET)[:m]
+    else:
+        acc = cell.acc(x_ops, w_ops, k)
+        if cell.wide:
+            y = harness.requant(acc, w_scale, a_scale, bias)
+        else:
+            y = _requant_narrow(acc, w_scale, bias)
+    return y.astype(jnp.bfloat16).reshape(*lead, n)

@@ -1,0 +1,181 @@
+"""Generic output-stationary tiled GEMM harness — one Pallas skeleton, many
+precisions.
+
+BrainTTA's point is a single flexible datapath that serves binary, ternary and
+int8 operands through the same machine (§III). The TPU translation of that is
+this module: ONE pallas_call scaffold — grid (M/bm, N/bn, Kq/bkq) with K
+innermost, int32 accumulator tiles held in VMEM scratch across the K sweep,
+and the requantization epilogue (w_scale[n] * a_scale[m] + bias[n], §IV-B
+"as early as possible") fused behind the MAC on the last K step — and a
+`MacBody` per precision that supplies ONLY the inner MAC computation
+(xnor-popcount, gated-xnor, int8-dot, mxu-unpack).
+
+`repro.kernels.{bgemm,tgemm,i8gemm}` shrink to MacBody definitions; the
+precision registry in `repro.kernels.dispatch` maps (wprec, aprec, impl)
+operating points onto bodies. Adding a kernel variant = one MacBody + one
+registry entry; the grid/BlockSpec/scratch/epilogue machinery below is never
+copied again.
+
+Kq is the *storage* K axis: K/32 packed words for the bit-plane formats
+(body.k_per_q = 32), K int8 codes for the 8-bit format (body.k_per_q = 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True)
+class MacBody:
+    """The per-precision inner MAC of the output-stationary kernel.
+
+    step(xs, ws, accs, *, bkq) -> new accs
+        one grid K-step update. xs: n_x activation tiles (bm, bkq);
+        ws: n_w weight tiles ((bn, bkq) or (bkq, bn) per w_kmajor);
+        accs: n_acc int32 (bm, bn) accumulator values.
+    finish(accs, k_total) -> (bm, bn) int32/f32 dot
+        maps the raw accumulators to the integer dot product (e.g. the
+        XNOR identity K - 2*mismatches) right before requantization.
+    """
+    name: str
+    n_x: int                 # activation operand arrays, each (M, Kq)
+    n_w: int                 # weight operand arrays
+    n_acc: int               # int32 VMEM accumulator tiles
+    k_per_q: int             # K elements per unit of the Kq storage axis
+    step: Callable
+    finish: Callable
+    w_kmajor: bool = False   # True: weights are (Kq, N) (int8 codes layout)
+    unpacks_f32: bool = False  # step materializes f32 (R, bkq*k_per_q)
+                               # unpacked operand tiles in VMEM (MXU bodies)
+    default_bkq: int = 16
+
+
+def requant(dot, w_scale, a_scale, bias):
+    """The fused requant epilogue, defined once for every backend.
+
+    out = dot * w_scale[n] * a_scale[m] + bias[n], computed in f32 so the
+    wide accumulator never round-trips through a narrow dtype (§IV-B). Any
+    scale/bias may be None (identity). Callers cast the result themselves.
+    """
+    y = dot.astype(jnp.float32)
+    if w_scale is not None:
+        y = y * w_scale[None, :]
+    if a_scale is not None:
+        y = y * a_scale[:, None]
+    if bias is not None:
+        y = y + bias[None, :]
+    return y
+
+
+def _kernel(*refs, body: MacBody, k_total: int, bkq: int):
+    """One (bm, bn) output tile; grid dim 2 sweeps Kq (output-stationary)."""
+    nx, nw = body.n_x, body.n_w
+    x_tiles = tuple(refs[i][...] for i in range(nx))
+    w_tiles = tuple(refs[nx + i][...] for i in range(nw))
+    ws_ref, as_ref, b_ref = refs[nx + nw:nx + nw + 3]
+    o_ref = refs[nx + nw + 3]
+    acc_refs = refs[nx + nw + 4:]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        for a in acc_refs:
+            a[...] = jnp.zeros_like(a)
+
+    new_accs = body.step(x_tiles, w_tiles,
+                         tuple(a[...] for a in acc_refs), bkq=bkq)
+    for a, v in zip(acc_refs, new_accs):
+        a[...] = v
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        dot = body.finish(tuple(a[...] for a in acc_refs), k_total)
+        y = requant(dot, ws_ref[...], as_ref[...], b_ref[...])
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def fit_block(requested: int, dim: int, align: int = 1) -> int:
+    """Largest block <= requested that divides dim exactly, preferring
+    multiples of `align` (TPU sublane alignment for the M block — an
+    unaligned int32 accumulator tile won't compile outside interpret mode).
+    Falls back to a plain divisor when no aligned one exists."""
+    top = max(min(requested, dim), 1)
+    for b in range(top, 0, -1):
+        if dim % b == 0 and b % align == 0:
+            return b
+    for b in range(top, 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "body", "k", "bm", "bn", "bkq", "interpret"))
+def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarray],
+         w_scale: jnp.ndarray, a_scale: jnp.ndarray,
+         bias: jnp.ndarray | None = None, *, k: int,
+         bm: int = 128, bn: int = 128, bkq: int | None = None,
+         interpret: bool = True) -> jnp.ndarray:
+    """Run `body` through the shared output-stationary skeleton.
+
+    x_ops: n_x arrays (M, Kq); w_ops: n_w arrays (N, Kq) ((Kq, N) if
+    w_kmajor); w_scale (N,) f32; a_scale (M,) f32; bias (N,) f32 or None
+    (fused in the epilogue — no separate f32 round-trip) -> (M, N) bf16.
+
+    Block sizes are clamped to the largest divisor of each dim; callers
+    (`dispatch.qgemm`) handle M padding. interpret=True on CPU (validation),
+    False on real TPU.
+    """
+    m, kq = x_ops[0].shape
+    n = w_ops[0].shape[0] if not body.w_kmajor else w_ops[0].shape[1]
+    assert kq * body.k_per_q == k, (x_ops[0].shape, body.k_per_q, k)
+    for xo in x_ops:
+        assert xo.shape == (m, kq)
+    for wo in w_ops:
+        assert wo.shape == ((n, kq) if not body.w_kmajor else (kq, n))
+    bm = fit_block(bm, m, align=8)
+    bn = fit_block(bn, n)
+    bkq = fit_block(bkq if bkq is not None else body.default_bkq, kq)
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
+
+    x_spec = pl.BlockSpec((bm, bkq), lambda i, j, kk: (i, kk))
+    if body.w_kmajor:
+        w_spec = pl.BlockSpec((bkq, bn), lambda i, j, kk: (kk, j))
+    else:
+        w_spec = pl.BlockSpec((bn, bkq), lambda i, j, kk: (j, kk))
+    grid = (m // bm, n // bn, kq // bkq)
+    return pl.pallas_call(
+        functools.partial(_kernel, body=body, k_total=k, bkq=bkq),
+        grid=grid,
+        in_specs=(
+            [x_spec] * body.n_x + [w_spec] * body.n_w + [
+                pl.BlockSpec((bn,), lambda i, j, kk: (j,)),   # w_scale
+                pl.BlockSpec((bm,), lambda i, j, kk: (i,)),   # a_scale
+                pl.BlockSpec((bn,), lambda i, j, kk: (j,)),   # bias
+            ]),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)] * body.n_acc,
+        interpret=interpret,
+    )(*x_ops, *w_ops, w_scale, a_scale, bias)
+
+
+def vmem_tile_bytes(body: MacBody, bm: int = 128, bn: int = 128,
+                    bkq: int | None = None) -> int:
+    """VMEM working set of one grid step (the kernel_bench tile model)."""
+    bkq = bkq if bkq is not None else body.default_bkq
+    q_bytes = 4 if body.k_per_q > 1 else 1          # u32 words vs int8 codes
+    unpacked = ((body.n_x * bm + body.n_w * bn) * bkq * body.k_per_q * 4
+                if body.unpacks_f32 else 0)         # f32 ±1/trit operands
+    return (body.n_x * bm * bkq * q_bytes           # activation tiles
+            + body.n_w * bn * bkq * q_bytes         # weight tiles
+            + unpacked                              # MXU-body intermediates
+            + body.n_acc * bm * bn * 4              # int32 accumulators
+            + bm * bn * 2                           # bf16 out tile
+            + (bm + 2 * bn) * 4)                    # scales + bias

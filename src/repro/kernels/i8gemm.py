@@ -1,68 +1,35 @@
-"""int8 GEMM with fused requantization epilogue — the 8-bit vMAC path.
+"""int8 MXU MAC body — the 8-bit vMAC path.
 
 BrainTTA's 8-bit mode (v_C=4 operands/word) maps directly onto the TPU MXU's
 native int8×int8→int32 path — this is where the ASIC→TPU translation is an
-upgrade, not an emulation. The BrainTTA-specific part is the *epilogue*:
-requantization fused immediately behind the MAC (§IV-B), so the int32
-accumulator is rescaled (per-output-channel w_scale × per-row a_scale,
-+ bias) inside VMEM and only the narrow result is written back to HBM.
-
-Output-stationary K-sweep like bgemm/tgemm; MXU-aligned blocks
-(multiples of (8,128); defaults 128×128×512).
+upgrade, not an emulation. The BrainTTA-specific part (the requantization
+epilogue fused immediately behind the MAC, §IV-B) lives once in
+`harness.gemm`; this module is just the dot body. Weight codes use the
+K-major (K, N) layout XLA's int8 dot prefers, hence w_kmajor=True.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .harness import MacBody, gemm
 
 
-def _i8gemm_kernel(x_ref, w_ref, ws_ref, as_ref, b_ref, o_ref, acc_ref):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        y = acc_ref[...].astype(jnp.float32) * ws_ref[...][None, :] * as_ref[...][:, None]
-        y = y + b_ref[...][None, :]
-        o_ref[...] = y.astype(o_ref.dtype)
+def _i8_step(xs, ws, accs, *, bkq):
+    dot = jax.lax.dot_general(xs[0], ws[0], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (accs[0] + dot,)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+I8_DOT = MacBody("i8gemm", n_x=1, n_w=1, n_acc=1, k_per_q=1,
+                 step=_i8_step, finish=lambda accs, k: accs[0],
+                 w_kmajor=True, default_bkq=512)
+
+
 def i8gemm(x_q: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
            a_scale: jnp.ndarray, bias: jnp.ndarray | None = None, *,
            bm: int = 128, bn: int = 128, bk: int = 512,
            interpret: bool = True) -> jnp.ndarray:
     """(M, K)i8 × (K, N)i8 → (M, N) bf16 with fused requant epilogue."""
-    m, k = x_q.shape
-    k2, n = w_q.shape
-    assert k == k2
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    if bias is None:
-        bias = jnp.zeros((n,), jnp.float32)
-
-    grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
-        _i8gemm_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
-            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
-    )(x_q, w_q, w_scale, a_scale, bias)
+    return gemm(I8_DOT, (x_q,), (w_q,), w_scale, a_scale, bias,
+                k=x_q.shape[1], bm=bm, bn=bn, bkq=bk, interpret=interpret)

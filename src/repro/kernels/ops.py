@@ -1,111 +1,57 @@
-"""jit'd wrappers: reshape/pad model-shaped tensors into kernel-shaped GEMMs.
+"""Compat shim — the model-facing serve GEMM moved to `repro.kernels.dispatch`.
 
-`qlinear_serve` is the entry point `repro.core.qlinear.apply(backend="pallas")`
-dispatches to. It quantizes+packs the activations, flattens leading dims to M,
-pads M up to the sublane multiple, calls the Pallas kernel, and unpads.
+Everything this module used to own (activation quantize/pack, M-padding,
+block-size selection, expert vmap, bias fusion) now lives exactly once in
+`dispatch.qgemm`. The wrappers below keep the old entry points alive for
+out-of-tree callers; new code should import `qgemm` directly.
 
-On this CPU container kernels run with interpret=True (set
-REPRO_PALLAS_INTERPRET=0 on real TPU).
+NOTE the interpret knob moved with the logic: rebind
+`repro.kernels.dispatch.INTERPRET` (or set REPRO_PALLAS_INTERPRET before
+import). It is deliberately NOT re-exported here — a stale
+`ops.INTERPRET = False` would be silently ignored, which is worse than the
+AttributeError you get now.
 """
 from __future__ import annotations
 
-import os
-
-import jax
 import jax.numpy as jnp
 
-from repro.core import pack
-from repro.core.quantize import int8_codes, ternarize
-
-from . import bgemm as _bgemm
-from . import i8gemm as _i8gemm
-from . import tgemm as _tgemm
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+from .dispatch import qgemm
 
 
-def _pad_rows(x: jnp.ndarray, mult: int) -> tuple[jnp.ndarray, int]:
-    m = x.shape[0]
-    pad = (-m) % mult
-    if pad:
-        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
-    return x, m
-
-
-def _block_m(m: int) -> int:
-    for bm in (128, 64, 32, 16, 8):
-        if m % bm == 0:
-            return bm
-    return m
+def _spec(k: int, n: int, wprec: str, aprec: str):
+    from repro.core.precision import LayerQuant
+    from repro.core.qlinear import QLinearSpec
+    from repro.core.quantize import QuantSpec
+    return QLinearSpec(k, n, LayerQuant(QuantSpec(wprec), QuantSpec(aprec)))
 
 
 def binary_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, w_scale: jnp.ndarray,
                   *, k: int, impl: str = "popcount") -> jnp.ndarray:
-    """bf16/f32 acts -> binarize+pack -> bgemm. x: (..., K) -> (..., N)."""
-    lead = x.shape[:-1]
-    xf = x.reshape(-1, k).astype(jnp.float32)
-    a_scale = jnp.mean(jnp.abs(xf), axis=-1)                       # XNOR-Net alpha
-    xp = pack.pack_binary(jnp.where(xf >= 0, 1.0, -1.0))
-    xp, m = _pad_rows(xp, 8)
-    a_scale = jnp.pad(a_scale, (0, xp.shape[0] - m))
-    y = _bgemm.bgemm(xp, w_packed, w_scale, a_scale, k=k,
-                     bm=_block_m(xp.shape[0]), impl=impl, interpret=INTERPRET)
-    return y[:m].reshape(*lead, -1)
+    """bf16/f32 acts -> binarize+pack -> binary GEMM. (..., K) -> (..., N)."""
+    return qgemm({"w_packed": w_packed, "w_scale": w_scale}, x,
+                 _spec(k, w_packed.shape[0], "binary", "binary"),
+                 impl=impl, backend="pallas")
 
 
 def ternary_matmul(x: jnp.ndarray, w_mask: jnp.ndarray, w_sign: jnp.ndarray,
-                   w_scale: jnp.ndarray, *, k: int) -> jnp.ndarray:
-    lead = x.shape[:-1]
-    xf = x.reshape(-1, k).astype(jnp.float32)
-    a_scale = jnp.mean(jnp.abs(xf), axis=-1)
-    xm, xs = pack.pack_ternary(jax.lax.stop_gradient(ternarize(xf)))
-    xm, m = _pad_rows(xm, 8)
-    xs, _ = _pad_rows(xs, 8)
-    a_scale = jnp.pad(a_scale, (0, xm.shape[0] - m))
-    y = _tgemm.tgemm(xm, xs, w_mask, w_sign, w_scale, a_scale, k=k,
-                     bm=_block_m(xm.shape[0]), interpret=INTERPRET)
-    return y[:m].reshape(*lead, -1)
+                   w_scale: jnp.ndarray, *, k: int,
+                   impl: str = "popcount") -> jnp.ndarray:
+    return qgemm({"w_mask": w_mask, "w_sign": w_sign, "w_scale": w_scale}, x,
+                 _spec(k, w_mask.shape[0], "ternary", "ternary"),
+                 impl=impl, backend="pallas")
 
 
 def int8_matmul(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
-                a_scale_const: jnp.ndarray, bias: jnp.ndarray | None = None) -> jnp.ndarray:
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    xq = int8_codes(x.reshape(-1, k).astype(jnp.float32), a_scale_const)
-    xq, m = _pad_rows(xq, 8)
-    a_scale = jnp.full((xq.shape[0],), a_scale_const, jnp.float32)
-    y = _i8gemm.i8gemm(xq, w_q, w_scale, a_scale, bias,
-                       bm=_block_m(xq.shape[0]), interpret=INTERPRET)
-    return y[:m].reshape(*lead, -1)
+                a_scale_const: jnp.ndarray,
+                bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    p = {"w_q": w_q, "w_scale": w_scale, "a_scale": a_scale_const}
+    if bias is not None:
+        p["b"] = bias
+    return qgemm(p, x, _spec(x.shape[-1], w_q.shape[1], "int8", "int8"),
+                 backend="pallas")
 
 
-def qlinear_serve(p: dict, x: jnp.ndarray, spec, *, impl: str = "popcount") -> jnp.ndarray:
-    """Pallas backend for repro.core.qlinear.apply(mode='serve').
-
-    The packed kernels implement the W&A-quantized GEMMs (both operands
-    narrow — the paper's operating points). Weight-only policies keep bf16
-    activations, so they take the same MXU formulation as the jnp backend
-    (quantizing acts here would silently change the algebra vs QAT — caught
-    by the jnp-vs-pallas serve equivalence check)."""
-    if spec.experts:
-        import dataclasses
-        sub = dataclasses.replace(spec, experts=0)
-        return jax.vmap(lambda pp, xx: qlinear_serve(pp, xx, sub, impl=impl))(
-            {k: v for k, v in p.items()}, x)
-    wprec = spec.lq.weights.precision
-    aprec = spec.lq.acts.precision
-    k = spec.in_dim
-    if wprec == "binary" and aprec == "binary":
-        y = binary_matmul(x, p["w_packed"], p["w_scale"], k=k, impl=impl)
-    elif wprec == "ternary" and aprec == "ternary":
-        y = ternary_matmul(x, p["w_mask"], p["w_sign"], p["w_scale"], k=k)
-    elif wprec == "int8" and aprec == "int8":
-        a_s = p.get("a_scale", jnp.float32(0.05))
-        y = int8_matmul(x, p["w_q"], p["w_scale"], a_s)
-    else:
-        # weight-only / dense: identical formulation to the jnp backend
-        from repro.core.qlinear import _apply_serve_jnp
-        return _apply_serve_jnp(p, x, spec, impl)
-    if "b" in p and wprec != "int8":
-        y = (y.astype(jnp.float32) + p["b"]).astype(jnp.bfloat16)
-    return y
+def qlinear_serve(p: dict, x: jnp.ndarray, spec, *,
+                  impl: str = "popcount") -> jnp.ndarray:
+    """Old Pallas-backend entry of `core.qlinear.apply` — now one line."""
+    return qgemm(p, x, spec, impl=impl, backend="pallas")

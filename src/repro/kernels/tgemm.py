@@ -1,4 +1,4 @@
-"""Ternary gated-XNOR+popcount GEMM — the vTMAC unit as a Pallas TPU kernel.
+"""Ternary gated-XNOR MAC bodies — the vTMAC unit.
 
 Trits are stored as two bit-planes (mask, sign) per `repro.core.pack`:
 16 trits per 32-bit word-pair (v_C=16, §IV-B). The gated-XNOR algebra
@@ -9,77 +9,68 @@ Trits are stored as two bit-planes (mask, sign) per `repro.core.pack`:
     disagree = active & (xs ^ ws)
     dot     += popcount(active) − 2·popcount(disagree)
 
-Same output-stationary skeleton and fused requant epilogue as bgemm; two
-int32 VMEM accumulators (active count, disagree count).
+TERNARY_POPCOUNT keeps two int32 accumulators (active, disagree) and
+resolves the dot in finish(); TERNARY_MXU is the beyond-paper variant that
+unpacks the trit planes to {-1,0,+1} in VMEM and rides the MXU. Both share
+`harness.gemm`'s output-stationary skeleton and fused requant epilogue.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import pack
+
+from .harness import MacBody, gemm
 
 WORD = 32
 
 
-def _tgemm_kernel(xm_ref, xs_ref, wm_ref, ws_ref, wsc_ref, asc_ref,
-                  o_ref, act_ref, dis_ref, *, bkw):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        act_ref[...] = jnp.zeros_like(act_ref)
-        dis_ref[...] = jnp.zeros_like(dis_ref)
-
-    xm, xs = xm_ref[...], xs_ref[...]   # (bm, bkw)
-    wm, ws = wm_ref[...], ws_ref[...]   # (bn, bkw)
+def _popcount_step(xs, ws, accs, *, bkq):
+    xm, xsg = xs                            # (bm, bkq) mask/sign planes
+    wm, wsg = ws                            # (bn, bkq)
 
     def body(i, carry):
         act, dis = carry
         sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, axis=1)
-        xmi, xsi = sl(xm), sl(xs)                     # (bm, 1)
-        wmi, wsi = sl(wm).T, sl(ws).T                 # (1, bn)
+        xmi, xsi = sl(xm), sl(xsg)                    # (bm, 1)
+        wmi, wsi = sl(wm).T, sl(wsg).T                # (1, bn)
         active = jnp.bitwise_and(xmi, wmi)            # (bm, bn)
         disagree = jnp.bitwise_and(active, jnp.bitwise_xor(xsi, wsi))
         act = act + jax.lax.population_count(active).astype(jnp.int32)
         dis = dis + jax.lax.population_count(disagree).astype(jnp.int32)
         return act, dis
 
-    act, dis = jax.lax.fori_loop(0, bkw, body, (act_ref[...], dis_ref[...]))
-    act_ref[...], dis_ref[...] = act, dis
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _epilogue():
-        dot = act_ref[...] - 2 * dis_ref[...]
-        y = dot.astype(jnp.float32) * wsc_ref[...][None, :] * asc_ref[...][:, None]
-        o_ref[...] = y.astype(o_ref.dtype)
+    return jax.lax.fori_loop(0, bkq, body, (accs[0], accs[1]))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bkw", "interpret"))
+def _popcount_finish(accs, k_total):
+    return accs[0] - 2 * accs[1]            # dot = active - 2*disagree
+
+
+TERNARY_POPCOUNT = MacBody("tgemm_popcount", n_x=2, n_w=2, n_acc=2,
+                           k_per_q=WORD, step=_popcount_step,
+                           finish=_popcount_finish)
+
+
+def _mxu_step(xs, ws, accs, *, bkq):
+    k = bkq * WORD
+    xf = pack.unpack_ternary_i8(xs[0], xs[1], k).astype(jnp.float32)  # (bm, k)
+    wf = pack.unpack_ternary_i8(ws[0], ws[1], k).astype(jnp.float32)  # (bn, k)
+    dot = jax.lax.dot_general(xf, wf, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return (accs[0] + dot.astype(jnp.int32),)
+
+
+TERNARY_MXU = MacBody("tgemm_mxu", n_x=2, n_w=2, n_acc=1, k_per_q=WORD,
+                      step=_mxu_step, finish=lambda accs, k: accs[0],
+                      unpacks_f32=True)
+
+
 def tgemm(x_mask, x_sign, w_mask, w_sign, w_scale, a_scale, *, k: int,
           bm: int = 128, bn: int = 128, bkw: int = 16,
-          interpret: bool = True) -> jnp.ndarray:
+          impl: str = "popcount", interpret: bool = True) -> jnp.ndarray:
     """Packed ternary GEMM: planes (M, K/32)u32 × (N, K/32)u32 → (M, N) bf16."""
-    m, kw = x_mask.shape
-    n, kw2 = w_mask.shape
-    assert kw == kw2 and kw * WORD == k
-    bm, bn, bkw = min(bm, m), min(bn, n), min(bkw, kw)
-    assert m % bm == 0 and n % bn == 0 and kw % bkw == 0
-
-    grid = (m // bm, n // bn, kw // bkw)
-    return pl.pallas_call(
-        functools.partial(_tgemm_kernel, bkw=bkw),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bkw), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bm, bkw), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bn, bkw), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((bn, bkw), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
-            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32), pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
-    )(x_mask, x_sign, w_mask, w_sign, w_scale, a_scale)
+    body = TERNARY_POPCOUNT if impl == "popcount" else TERNARY_MXU
+    return gemm(body, (x_mask, x_sign), (w_mask, w_sign), w_scale, a_scale,
+                k=k, bm=bm, bn=bn, bkq=bkw, interpret=interpret)

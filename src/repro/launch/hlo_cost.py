@@ -39,7 +39,7 @@ _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
 _OPCODE_RE = re.compile(r"^((?:\([^)]*\)|[a-z0-9\[\],{} ]+?))\s*([\w\-]+)\(")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
@@ -278,8 +278,11 @@ def _comp_cost(comps, cname: str, memo: dict, *, top_level: bool,
         elif oc in ("call", "conditional", "custom-call", "async-start"):
             callee = _CALLS_RE.search(op.attrs)
             if callee and callee.group(1) in comps:
+                # the callee's own ops are costed; adding the call result on
+                # top would double-count the root write (copy-bytes overcount)
                 c.add(_comp_cost(comps, callee.group(1), memo, top_level=True))
-            c.bytes += op.shape.bytes
+            else:
+                c.bytes += op.shape.bytes
         elif any(oc.startswith(k) for k in COLLECTIVES):
             kind = next(k for k in COLLECTIVES if oc.startswith(k))
             if not oc.endswith("-done"):           # async pairs: start only

@@ -127,6 +127,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--policy", default=None)
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
+                    help="GEMM backend for the packed serve path (both route "
+                         "through kernels.dispatch.qgemm)")
+    ap.add_argument("--impl", default="popcount", choices=("popcount", "mxu"),
+                    help="binary/ternary GEMM formulation")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -142,7 +147,9 @@ def main(argv=None):
     print(f"packed weights: {train_b/2**20:.1f} MiB -> {serve_b/2**20:.1f} MiB "
           f"({train_b/serve_b:.1f}x smaller, policy={cfg.policy})")
 
-    srv = Server(cfg, sparams, slots=args.slots)
+    srv = Server(cfg, sparams, slots=args.slots,
+                 ctx=ModelCtx(mode="serve", backend=args.backend,
+                              impl=args.impl))
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):

@@ -30,6 +30,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .mesh import dp_axes
 
+def abstract_mesh(shape=(16, 16), axes=("data", "model")):
+    """An AbstractMesh for rule evaluation — no devices needed.
+
+    jax >= 0.4.36 constructs AbstractMesh from a ((name, size), ...) shape
+    tuple; older releases took (sizes, names) positionally. Accept the
+    legacy (sizes, names) call shape here and translate."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:   # pre-0.4.36 signature
+        return AbstractMesh(tuple(shape), tuple(axes))
+
+
 # path components that mark a row-parallel linear (contraction dim sharded)
 _ROW_PARALLEL = {"out", "down"}
 # leaf names of packed/quantized weight tensors (K is packed along last axis)
@@ -221,5 +234,7 @@ def cache_shardings(mesh: Mesh, cache_tree, *, batch: int):
             pass
         if "mid" in _names(path) and shardable and len(dims) > 1 and dims[1] == ("data",):
             dims[1] = tuple(dp)
+        # singleton axis tuples are NOT equal to the bare name in PartitionSpec
+        dims = [d[0] if isinstance(d, tuple) and len(d) == 1 else d for d in dims]
         return NamedSharding(mesh, fit_spec(P(*dims), leaf.shape, mesh))
     return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -131,13 +131,16 @@ def make_compressed_train_step(cfg: ArchConfig, sp, opt, mesh: Mesh, *,
         params = apply_updates(params, updates)
         return params, opt_state, {"loss": jnp.mean(losses), **om}
 
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(P(), P(), P(tuple(dp)), P()),
-                         out_specs=(P(), P(), P()),
-                         check_vma=False)
+    return compress.shard_map(body, mesh=mesh,
+                              in_specs=(P(), P(), P(tuple(dp)), P()),
+                              out_specs=(P(), P(), P()),
+                              check_vma=False)
 
 
 def make_prefill_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
+    """Serve prefill; every quantized matmul goes through
+    kernels.dispatch.qgemm — ctx.backend/ctx.impl select the registered
+    formulation."""
     ctx = ctx or ModelCtx(mode="serve")
 
     def prefill_step(params, batch):

@@ -1,0 +1,142 @@
+"""The dispatch-layer contract: one qgemm entry point, every operating point.
+
+Two guarantees the refactor must keep forever:
+  1. jnp and Pallas backends agree for EVERY registered (wprec, aprec, impl)
+     cell — including bias fusion and the expert axis — because they share
+     one activation-prep and one requant implementation per cell.
+  2. every operating point the POLICIES table can produce resolves to a
+     registered cell (adding a policy without a kernel is a test failure,
+     not a runtime KeyError).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qlinear
+from repro.core.precision import LAYER_CLASSES, LayerQuant, POLICIES
+from repro.core.quantize import QuantSpec
+from repro.kernels import dispatch, harness
+
+CELLS = sorted(dispatch.cells())
+
+
+def _spec(wprec, aprec, *, bias=False, experts=0, k=64, n=32):
+    return qlinear.QLinearSpec(
+        k, n, LayerQuant(QuantSpec(wprec), QuantSpec(aprec)),
+        use_bias=bias, experts=experts)
+
+
+def _packed(spec, seed=0):
+    p = qlinear.init(jax.random.PRNGKey(seed), spec)
+    if spec.use_bias:
+        p["b"] = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                   p["b"].shape) * 0.1
+    return qlinear.pack_params(p, spec)
+
+
+# ---------------------------------------------------------------------------
+# 1. jnp-vs-pallas equivalence, all cells × bias × experts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wprec,aprec,impl", CELLS)
+@pytest.mark.parametrize("bias", [False, True])
+def test_qgemm_backends_agree(wprec, aprec, impl, bias):
+    impl_arg = "popcount" if impl == "*" else impl
+    spec = _spec(wprec, aprec, bias=bias)
+    p = _packed(spec)
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, spec.in_dim)) * 0.2
+    yj = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="jnp")
+    yp = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="pallas")
+    assert yj.shape == yp.shape == (5, spec.out_dim)
+    np.testing.assert_allclose(np.asarray(yj, np.float32),
+                               np.asarray(yp, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("wprec,aprec,impl", CELLS)
+def test_qgemm_expert_axis(wprec, aprec, impl):
+    impl_arg = "popcount" if impl == "*" else impl
+    spec = _spec(wprec, aprec, bias=True, experts=3)
+    p = _packed(spec)
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 4, spec.in_dim)) * 0.2
+    yj = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="jnp")
+    yp = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="pallas")
+    assert yj.shape == yp.shape == (3, 4, spec.out_dim)
+    np.testing.assert_allclose(np.asarray(yj, np.float32),
+                               np.asarray(yp, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    # expert slices differ (the vmap really maps the weights)
+    y0, y1 = np.asarray(yj, np.float32)[0], np.asarray(yj, np.float32)[1]
+    assert np.abs(y0 - y1).max() > 0
+
+
+def test_qgemm_bias_fused_matches_manual():
+    """Bias must land inside the requant epilogue, not as a post-hoc add in a
+    different dtype — fused-vs-manual must agree to bf16 resolution."""
+    spec = _spec("int8", "int8", bias=True)
+    p = _packed(spec)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, spec.in_dim)) * 0.2
+    for backend in ("jnp", "pallas"):
+        y = dispatch.qgemm(p, x, spec, backend=backend)
+        p_nob = {k: v for k, v in p.items() if k != "b"}
+        y_nob = dispatch.qgemm(p_nob, x, spec, backend=backend)
+        manual = np.asarray(y_nob, np.float32) + np.asarray(p["b"], np.float32)
+        np.testing.assert_allclose(np.asarray(y, np.float32), manual,
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_qgemm_nonaligned_rows_padded():
+    """M not a sublane multiple: dispatch pads, runs, unpads."""
+    spec = _spec("binary", "binary")
+    p = _packed(spec)
+    for m in (1, 3, 7, 13):
+        x = jax.random.normal(jax.random.PRNGKey(m), (m, spec.in_dim)) * 0.2
+        yj = dispatch.qgemm(p, x, spec, backend="jnp")
+        yp = dispatch.qgemm(p, x, spec, backend="pallas")
+        assert yj.shape == yp.shape == (m, spec.out_dim)
+        np.testing.assert_allclose(np.asarray(yj, np.float32),
+                                   np.asarray(yp, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# 2. registry completeness over the POLICIES table
+# ---------------------------------------------------------------------------
+
+def test_every_policy_operating_point_resolves():
+    seen = set()
+    for pol in POLICIES.values():
+        for lc in LAYER_CLASSES:
+            for first, last in ((False, False), (True, False), (False, True)):
+                lq = pol.lookup(lc, is_first=first, is_last=last)
+                for impl in ("popcount", "mxu"):
+                    cell = dispatch.lookup(lq.weights.precision,
+                                           lq.acts.precision, impl)
+                    seen.add(cell.key)
+    # and the W&A cells all carry a Pallas body (packed serve path exists)
+    for key, cell in dispatch.cells().items():
+        if cell.aprec != "none":
+            assert cell.body is not None, key
+    assert seen  # sanity: the sweep visited the registry
+
+
+def test_unknown_operating_point_raises():
+    with pytest.raises(KeyError, match="no GEMM registered"):
+        dispatch.lookup("int4", "int4", "popcount")
+
+
+def test_duplicate_registration_rejected():
+    cell = dispatch.lookup("binary", "binary", "popcount")
+    with pytest.raises(ValueError, match="duplicate"):
+        dispatch.register(cell)
+
+
+def test_vmem_tile_model_within_budget():
+    """Every registered Pallas body fits VMEM at default blocks (<<128 MiB)."""
+    for key, cell in dispatch.cells().items():
+        if cell.body is None:
+            continue
+        assert harness.vmem_tile_bytes(cell.body) < 16 * 2**20, key

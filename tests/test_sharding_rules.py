@@ -13,8 +13,7 @@ from repro.launch.step import abstract_serve_params, abstract_train_state, make_
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
     """An abstract mesh for rule evaluation (no devices needed)."""
-    from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, axes)
+    return sharding.abstract_mesh(shape, axes)
 
 
 def _spec_of(tree_sh, *path):

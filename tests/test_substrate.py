@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import ckpt
 from repro.data.pipeline import PipelineConfig, SyntheticLM, make_source
@@ -72,7 +72,7 @@ def test_q8_codec_roundtrip_error(seed, shape):
 def test_compressed_psum_matches_mean(tmp_path):
     """int8-compressed all-reduce ~= exact psum within quantization error."""
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    from repro.optim.compress import shard_map
     devs = jax.devices()
     mesh = Mesh(np.array(devs).reshape(1,), ("d",))
     g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
