@@ -7,6 +7,7 @@
   kernel_bench  Pallas kernels: interpret validation + VMEM tile model
   flexibility   Table I flexibility rows (arch x policy support matrix)
   qat_quality   §II-A mixed-precision motivation (QAT loss per policy)
+  serve_bench   paged vs contiguous KV serving layouts (docs/SERVING.md)
 """
 import argparse
 import sys
@@ -26,9 +27,10 @@ def main() -> None:
                ("throughput", throughput.main),
                ("kernel_bench", kernel_bench.main)]
     if not args.quick:
-        from benchmarks import qat_quality
+        from benchmarks import qat_quality, serve_bench
         benches += [("flexibility", flexibility.main),
-                    ("qat_quality", qat_quality.main)]
+                    ("qat_quality", qat_quality.main),
+                    ("serve_bench", lambda: serve_bench.main([]))]
     for name, fn in benches:
         if args.only and name != args.only:
             continue

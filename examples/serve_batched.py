@@ -2,11 +2,12 @@
 model with batched requests through the continuous-batching server, with
 ternary-packed weights.
 
-    PYTHONPATH=src python examples/serve_batched.py [--full]
+    PYTHONPATH=src python examples/serve_batched.py [--full] [--contiguous]
 
 --full uses the actual xlstm-125m config (125M params; a couple of minutes of
 CPU for weight init + a few tokens/s decode). Default uses the reduced config
-so the example finishes in seconds.
+so the example finishes in seconds. The paged KV cache (docs/SERVING.md) is
+on by default; --contiguous selects the per-slot slab reference layout.
 """
 import sys
 
@@ -16,4 +17,6 @@ args = ["--arch", "xlstm-125m", "--requests", "8", "--max-new", "12",
         "--slots", "4", "--policy", "w-ternary"]
 if "--full" not in sys.argv:
     args.append("--reduced")
+if "--contiguous" in sys.argv:
+    args.append("--contiguous")
 serve.main(args)

@@ -53,13 +53,17 @@ def binarize(x: jnp.ndarray) -> jnp.ndarray:
 # ternary {-1,0,+1}
 # ---------------------------------------------------------------------------
 
-def ternarize(x: jnp.ndarray, threshold: float = 0.05) -> jnp.ndarray:
+def ternarize(x: jnp.ndarray, threshold: float = 0.05, axis=None) -> jnp.ndarray:
     """Symmetric-threshold ternarization with STE [GXNOR-Net].
 
-    q = 0 when |x| <= t, else sign(x). `threshold` is relative to the
-    per-tensor mean absolute value, matching common TWN practice.
+    q = 0 when |x| <= t, else sign(x). `threshold` is relative to the mean
+    absolute value over `axis` (None => per-tensor, matching common TWN
+    practice). The serve-path activation prep passes axis=-1: a per-row
+    threshold keeps each batched request's quantization independent of its
+    neighbors' content — with a per-tensor threshold, continuous batching
+    would let one request perturb another's logits.
     """
-    t = threshold * jnp.mean(jnp.abs(x)) + 1e-8
+    t = threshold * jnp.mean(jnp.abs(x), axis=axis, keepdims=axis is not None) + 1e-8
     q = jnp.where(x > t, 1.0, jnp.where(x < -t, -1.0, 0.0)).astype(x.dtype)
     return _ste(q, jnp.clip(x, -1.0, 1.0))
 

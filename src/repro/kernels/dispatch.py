@@ -111,8 +111,11 @@ def _prep_binary(x2d, p, spec):
 def _prep_ternary(x2d, p, spec):
     xf = x2d.astype(jnp.float32)
     a_scale = jnp.mean(jnp.abs(xf), axis=-1)
+    # per-row threshold (axis=-1): under continuous batching a per-tensor
+    # threshold couples co-batched requests — one slot's activations would
+    # move every other slot's ternarization cut
     xq = jax.lax.stop_gradient(
-        ternarize(xf, spec.lq.acts.ternary_threshold))
+        ternarize(xf, spec.lq.acts.ternary_threshold, axis=-1))
     xm, xs = pack.pack_ternary(xq)
     return (xm, xs), a_scale
 

@@ -1,0 +1,189 @@
+"""Paged KV cache for the continuous-batching server (launch/serve.py).
+
+vLLM-style block pool, shrunk to its essentials: every full-attention layer
+stores KV in a shared `(num_pages, page_size, Hk, dh)` pool instead of a
+per-slot `(slots, cache_len, Hk, dh)` slab, and a host-side `PageTable` maps
+each slot to the ordered list of physical pages backing its logical token
+range. The model side (models/attention.attn_decode with `pages=`) gathers a
+slot's page list back into a contiguous view for the score/AV math, so the
+attention algebra is unchanged — only the storage is virtualized.
+
+Why it matters here: BrainTTA's pitch is one flexible datapath serving
+binary/ternary/int8 from the same engine; the serving layer above it only
+keeps that engine fed under mixed-length traffic if KV memory is allocated by
+demand (pages) rather than by worst case (slabs). Admission then becomes a
+free-page budget, not a free-slot count.
+
+Layout invariants (property-tested in tests/test_kv_cache.py):
+  * physical page 0 is reserved as scratch — never allocated; unassigned
+    page-table entries point at it, so inactive slots' decode writes and
+    reads beyond a slot's length land there and are masked out
+  * a page is owned by at most one slot; free + owned == num_pages - 1
+  * a slot holding n tokens owns exactly ceil(n / page_size) pages
+  * retire() returns every page to the free list
+
+Recurrent mixers (mlstm/slstm/rglru) and sliding-window rings keep per-slot
+state slabs — their state is O(1) or O(window) per slot, so there is nothing
+to page; the PageTable still meters their token budget for admission.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_PAGE = 0   # reserved scratch page: garbage writes land here, reads are masked
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold n_tokens."""
+    return -(-int(n_tokens) // page_size)
+
+
+class PageTable:
+    """Host-side block-pool allocator: per-slot ordered page lists.
+
+    The device-side mirror (`device_table()`) is a dense (slots, max_pages)
+    int32 array — a fixed shape, so the jitted decode step never retraces as
+    pages move.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, slots: int,
+                 max_pages_per_slot: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
+        if page_size < 1 or max_pages_per_slot < 1:
+            raise ValueError("page_size and max_pages_per_slot must be >= 1")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.slots = int(slots)
+        self.max_pages = int(max_pages_per_slot)
+        # LIFO free list: retired pages are reused first (cache-friendly)
+        self._free = list(range(self.num_pages - 1, 0, -1))
+        self.table = np.full((self.slots, self.max_pages), NULL_PAGE, np.int32)
+        self.held = np.zeros(self.slots, np.int32)     # pages owned per slot
+        self.tokens = np.zeros(self.slots, np.int32)   # tokens covered per slot
+        self.active = np.zeros(self.slots, bool)
+
+    # -- queries ---------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - 1
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.free_pages >= pages_for(n_tokens, self.page_size)
+
+    def slot_pages(self, slot: int) -> np.ndarray:
+        return self.table[slot, : self.held[slot]].copy()
+
+    def device_table(self) -> jnp.ndarray:
+        return jnp.asarray(self.table)
+
+    # -- mutations -------------------------------------------------------------
+
+    def _alloc(self, slot: int, n_pages: int) -> list[int]:
+        if n_pages > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n_pages}, free {len(self._free)}")
+        got = [self._free.pop() for _ in range(n_pages)]
+        h = int(self.held[slot])
+        self.table[slot, h: h + n_pages] = got
+        self.held[slot] = h + n_pages
+        return got
+
+    def admit(self, slot: int, n_tokens: int) -> np.ndarray:
+        """Claim `slot` and allocate pages covering n_tokens. Returns the
+        slot's page list."""
+        if self.active[slot]:
+            raise RuntimeError(f"slot {slot} already active")
+        if n_tokens < 1 or n_tokens > self.max_pages * self.page_size:
+            raise ValueError(
+                f"n_tokens={n_tokens} outside (0, {self.max_pages * self.page_size}]")
+        if not self.can_admit(n_tokens):
+            raise RuntimeError(
+                f"page pool exhausted: want {pages_for(n_tokens, self.page_size)},"
+                f" free {self.free_pages}")
+        self.active[slot] = True
+        self._alloc(slot, pages_for(n_tokens, self.page_size))
+        self.tokens[slot] = n_tokens
+        return self.slot_pages(slot)
+
+    def extend(self, slot: int, n_tokens: int) -> list[int]:
+        """Grow slot coverage to n_tokens; returns newly allocated pages."""
+        if not self.active[slot]:
+            raise RuntimeError(f"slot {slot} not active")
+        if n_tokens > self.max_pages * self.page_size:
+            raise ValueError(f"n_tokens={n_tokens} exceeds slot capacity")
+        if n_tokens <= self.tokens[slot]:
+            return []
+        need = pages_for(n_tokens, self.page_size) - int(self.held[slot])
+        got = self._alloc(slot, need) if need > 0 else []
+        self.tokens[slot] = n_tokens
+        return got
+
+    def retire(self, slot: int) -> list[int]:
+        """Release the slot; every page goes back to the free list."""
+        if not self.active[slot]:
+            raise RuntimeError(f"slot {slot} not active")
+        freed = [int(p) for p in self.table[slot, : self.held[slot]]]
+        self._free.extend(freed)
+        self.table[slot] = NULL_PAGE
+        self.held[slot] = 0
+        self.tokens[slot] = 0
+        self.active[slot] = False
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# cache-tree helpers (which leaves are paged, prefill scatter)
+# ---------------------------------------------------------------------------
+
+def paged_leaf_mask(cfg, slots: int, cache_len: int, num_pages: int,
+                    page_size: int):
+    """Bool pytree (same structure as the server cache): True on the KV
+    leaves that live in the page pool. Derived by diffing the slab vs paged
+    shape trees, so it tracks whatever layer mix the arch has (window rings
+    and recurrent states come back False)."""
+    from repro.models import transformer
+    slab = transformer.cache_shapes(cfg, slots, cache_len)
+    pgd = transformer.cache_shapes(cfg, slots, cache_len,
+                                   paged=(num_pages, page_size))
+    return jax.tree.map(lambda a, b: a.shape != b.shape, slab, pgd)
+
+
+def scatter_prefill(cache, req_cache, slot: int, *, paged_mask=None,
+                    page_ids=None, page_size: int = 0):
+    """Write one request's prefill cache (batch=1) into the server cache.
+
+    Slab leaves (recurrent state, window rings, cross-KV) copy into row
+    `slot`; paged leaves chop the request's contiguous KV into page_size
+    chunks and scatter them to `page_ids` (physical pages; entries equal to
+    NULL_PAGE receive this request's right-padding garbage, which is fine —
+    page 0 is scratch). Scanned mid-stack leaves carry a leading
+    (n_periods,) dim and are handled in place.
+    """
+    ids = None if page_ids is None else jnp.asarray(page_ids, jnp.int32)
+
+    def put(path, slab, req, is_paged):
+        root = getattr(path[0], "key", "") if path else ""
+        mid = root == "mid"
+        if is_paged:
+            n = ids.shape[0]
+            if mid:
+                body = req[:, 0, : n * page_size].astype(slab.dtype)
+                return slab.at[:, ids].set(
+                    body.reshape(body.shape[0], n, page_size, *body.shape[2:]))
+            body = req[0, : n * page_size].astype(slab.dtype)
+            return slab.at[ids].set(body.reshape(n, page_size, *body.shape[1:]))
+        if mid:
+            return slab.at[:, slot].set(req[:, 0].astype(slab.dtype))
+        return slab.at[slot].set(req[0].astype(slab.dtype))
+
+    if paged_mask is None:
+        paged_mask = jax.tree.map(lambda _: False, cache)
+    return jax.tree_util.tree_map_with_path(put, cache, req_cache, paged_mask)

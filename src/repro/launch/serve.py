@@ -1,16 +1,28 @@
-"""Batched serving driver: continuous-batching-lite over the packed
-(bit-plane) serve parameters.
+"""Batched serving driver: continuous batching over the packed (bit-plane)
+serve parameters, with a paged KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
-        --requests 16 --max-new 32
+        --requests 16 --max-new 32 --paged
 
 Design (vLLM-style, shrunk to its essentials):
-  * fixed `slots` decode batch; a request queue feeds free slots
-  * prefill runs per admitted request (right-sized jit cache), its KV is
-    scattered into the slot cache
-  * one fused decode step advances every active slot each tick
-  * per-slot positions & EOS retirement; slot reuse without re-jitting
+  * fixed `slots` decode batch; a request FIFO feeds free slots
+  * admission is metered by the free-page budget (paged mode), not just by
+    free slots — a long request waits until the pool can cover its whole
+    lifetime, so mid-flight page allocation can never fail
+  * prefill runs per admitted request, right-padded to one of a few bucket
+    lengths (the jit cache holds <= len(buckets) prefill signatures instead
+    of one per prompt length); its KV is scattered into the slot's pages
+    (paged) or slab row (contiguous)
+  * one fused decode step advances every active slot each tick with a
+    per-slot position vector — each slot's RoPE phase, cache-write index and
+    validity mask follow its own clock, so mixed-length traffic decodes
+    correctly (the old aligned-position decode used max(pos) for everyone)
+  * retirement frees the slot's pages back to the pool; slot reuse and page
+    churn never re-jit (the decode signature is fixed)
   * packed weights: `pack_for_serve` (binary/ternary bit-planes, int8 codes)
+
+`--contiguous` keeps the old per-slot slab layout as a reference path; both
+run the same per-slot-position decode step. See docs/SERVING.md.
 
 On a pod this wraps the decode_32k/long_500k dry-run cells: same
 decode_step, mesh sharding from launch/sharding.py.
@@ -26,7 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models import registry, transformer
+from repro.launch import kv_cache
+from repro.launch.kv_cache import NULL_PAGE, PageTable, pages_for
+from repro.models import transformer
 from repro.models.common import ModelCtx
 
 
@@ -39,47 +53,148 @@ class Request:
     done: bool = False
 
 
+def default_buckets(lo: int, hi: int) -> tuple[int, ...]:
+    """Powers-of-two prefill buckets in [lo, hi], always ending at hi."""
+    out, b = [], max(lo, 1)
+    while b < hi:
+        out.append(b)
+        b *= 2
+    return tuple(out) + (hi,)
+
+
 class Server:
     def __init__(self, cfg, params, *, slots: int = 4, cache_len: int = 256,
+                 paged: bool = True, page_size: int = 32,
+                 num_pages: int | None = None,
+                 buckets: tuple[int, ...] | None = None,
                  ctx: ModelCtx | None = None):
         self.cfg = cfg
         self.sp = transformer.build_specs(cfg)
         self.params = params
         self.ctx = ctx or ModelCtx(mode="serve")
         self.slots = slots
+        self.paged = paged
+        self.page_size = page_size
+        if paged and cache_len % page_size:
+            cache_len += page_size - cache_len % page_size
         self.cache_len = cache_len
-        self.cache = transformer.init_cache(cfg, slots, cache_len)
+        # right-padded prefill is only safe for pure full attention: padding
+        # KV would pollute recurrent state outright, and a sliding-window
+        # ring keeps the last `window` tokens of the PADDED sequence (the
+        # ring-full mask then attends the padding). Those archs bucket to
+        # the exact prompt length instead.
+        self.exact_prefill = any(k != "attn" for k in cfg.block_pattern)
+        if buckets is None:
+            buckets = default_buckets(page_size if paged else 8, cache_len)
+        self.buckets = tuple(sorted(buckets))
+
+        # pool dtype must match what prefill/decode actually store: the
+        # compute dtype, unless the int8-requant cache is configured —
+        # otherwise every scatter silently rounds the prefill KV
+        kv_dtype = None if cfg.kv_cache_dtype == "int8" else self.ctx.dtype
+        if paged:
+            self.max_pages = cache_len // page_size
+            if num_pages is None:
+                num_pages = slots * self.max_pages + 1   # +1: scratch page 0
+            self.pt = PageTable(num_pages, page_size, slots, self.max_pages)
+            self.cache = transformer.init_cache(cfg, slots, cache_len,
+                                                paged=(num_pages, page_size),
+                                                kv_dtype=kv_dtype)
+            self.paged_mask = kv_cache.paged_leaf_mask(cfg, slots, cache_len,
+                                                       num_pages, page_size)
+        else:
+            self.pt = None
+            self.cache = transformer.init_cache(cfg, slots, cache_len,
+                                                kv_dtype=kv_dtype)
+            self.paged_mask = None
+
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
         self.queue: list[Request] = []
         self.completed: list[Request] = []
+        self.pos_trace: list[np.ndarray] = []   # per-tick active-slot positions
 
-        self._decode = jax.jit(
-            lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, self.sp, self.ctx))
-        self._prefill = jax.jit(
-            lambda p, t: transformer.prefill(p, t, self.sp, self.ctx,
-                                             cache_len=self.cache_len),
-            static_argnames=())
+        self.compile_counts = {"prefill": 0, "decode": 0}
+        self._prefill = self._counted("prefill", lambda p, t, lp:
+            transformer.prefill(p, t, self.sp, self.ctx,
+                                cache_len=self.cache_len, last_pos=lp))
+        if paged:
+            self._decode = self._counted("decode", lambda p, c, t, pos, pg:
+                transformer.decode_step(p, c, t, pos, self.sp, self.ctx,
+                                        pages=pg))
+        else:
+            self._decode = self._counted("decode", lambda p, c, t, pos:
+                transformer.decode_step(p, c, t, pos, self.sp, self.ctx))
+
+    def _counted(self, key: str, fn):
+        """jit(fn) with a trace-time counter: each distinct signature traces
+        the wrapper exactly once, so compile_counts[key] == #signatures."""
+        def traced(*args):
+            self.compile_counts[key] += 1
+            return fn(*args)
+        return jax.jit(traced)
+
+    # -- request lifecycle -----------------------------------------------------
 
     def submit(self, req: Request):
+        if len(req.prompt) > self.buckets[-1]:
+            raise ValueError(f"prompt len {len(req.prompt)} exceeds max bucket "
+                             f"{self.buckets[-1]}")
+        if self.paged:
+            need = pages_for(self._need_tokens(req), self.page_size)
+            if need > self.pt.usable_pages:
+                # un-admittable head would livelock run(): admission waits
+                # for pages the pool can never have
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.pt.usable_pages} usable; raise --num-pages or "
+                    f"shrink the request")
         self.queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        if self.exact_prefill:
+            return n    # exact-length prefill (recurrent / windowed layers)
+        return next(b for b in self.buckets if b >= n)
+
+    def _need_tokens(self, req: Request) -> int:
+        """KV tokens this request can write over its whole lifetime."""
+        return min(len(req.prompt) + max(req.max_new, 1) - 1, self.cache_len)
+
+    def _outstanding_demand(self) -> int:
+        """Pages active slots may still claim (their reserved headroom)."""
+        return sum(
+            pages_for(self._need_tokens(r), self.page_size) - int(self.pt.held[s])
+            for s, r in enumerate(self.slot_req) if r is not None)
 
     def _admit(self):
         for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
-                logits, cache = self._prefill(self.params, req.prompt[None, :])
-                tok = int(jnp.argmax(logits[0, -1]))
-                req.out.append(tok)
-                # scatter this request's prefill cache into slot s
-                def put(slot_c, req_c):
-                    return slot_c.at[s if slot_c.shape[0] == self.slots else 0].set(
-                        req_c[0]) if slot_c.shape[0] == self.slots else slot_c
-                self.cache = jax.tree.map(
-                    lambda sc, rc: sc.at[s].set(rc[0].astype(sc.dtype)),
-                    self.cache, cache)
-                self.slot_req[s] = req
-                self.slot_pos[s] = len(req.prompt)
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            if self.paged:
+                need = pages_for(self._need_tokens(req), self.page_size)
+                if self.pt.free_pages - self._outstanding_demand() < need:
+                    break   # FIFO: the head waits for pages; no queue jumping
+            self.queue.pop(0)
+            n = len(req.prompt)
+            bucket = self._bucket(n)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = req.prompt
+            logits, rc = self._prefill(self.params, jnp.asarray(toks),
+                                       jnp.asarray([n - 1], jnp.int32))
+            req.out.append(int(jnp.argmax(logits[0, -1])))
+            if self.paged:
+                ids = self.pt.admit(s, n)
+                pad = pages_for(bucket, self.page_size) - len(ids)
+                ids = np.concatenate(
+                    [ids, np.full(pad, NULL_PAGE, np.int32)]) if pad else ids
+                self.cache = kv_cache.scatter_prefill(
+                    self.cache, rc, s, paged_mask=self.paged_mask,
+                    page_ids=ids, page_size=self.page_size)
+            else:
+                self.cache = kv_cache.scatter_prefill(self.cache, rc, s)
+            self.slot_req[s] = req
+            self.slot_pos[s] = n
 
     def _retire(self):
         for s, req in enumerate(self.slot_req):
@@ -88,28 +203,44 @@ class Server:
             if len(req.out) >= req.max_new or self.slot_pos[s] >= self.cache_len - 1:
                 req.done = True
                 self.completed.append(req)
+                if self.paged:
+                    self.pt.retire(s)
                 self.slot_req[s] = None
+                self.slot_pos[s] = 0
 
     def step(self):
-        """One server tick: admit -> fused decode over active slots -> retire."""
+        """One server tick: admit -> fused decode over active slots -> retire.
+
+        The pre-decode retire pass clears requests that are already complete
+        at admission (max_new == 1, or a prompt that fills the cache) so they
+        never reach the decode step with nowhere left to write.
+        """
         self._admit()
+        self._retire()
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return False
+            return bool(self.queue)
         tokens = np.zeros((self.slots, 1), np.int32)
         for s in active:
             tokens[s, 0] = self.slot_req[s].out[-1]
-        # aligned-position decode (per-slot positions kept host-side; the
-        # fused step uses the max — inactive slots' writes are harmless)
-        pos = int(self.slot_pos[active].max())
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens), jnp.int32(pos))
+        if self.paged:
+            for s in active:   # cover the write at position slot_pos[s]
+                self.pt.extend(s, int(self.slot_pos[s]) + 1)
+        self.pos_trace.append(self.slot_pos[active].copy())
+        pos = jnp.asarray(self.slot_pos)                    # (slots,) per-slot
+        if self.paged:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens), pos,
+                                              self.pt.device_table())
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens), pos)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for s in active:
             self.slot_req[s].out.append(int(nxt[s]))
             self.slot_pos[s] += 1
         self._retire()
-        return bool(self.slot_req != [None] * self.slots or self.queue)
+        return bool(any(r is not None for r in self.slot_req) or self.queue)
 
     def run(self):
         ticks = 0
@@ -126,12 +257,22 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--policy", default=None)
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
                     help="GEMM backend for the packed serve path (both route "
                          "through kernels.dispatch.qgemm)")
     ap.add_argument("--impl", default="popcount", choices=("popcount", "mxu"),
                     help="binary/ternary GEMM formulation")
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--paged", dest="paged", action="store_true", default=True,
+                     help="paged KV cache (default): block pool + page table")
+    grp.add_argument("--contiguous", dest="paged", action="store_false",
+                     help="per-slot slab KV cache (reference layout)")
+    ap.add_argument("--page-size", type=int, default=32)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool size; < slots*cache_len/page_size oversubscribes "
+                         "and admission throttles on the page budget")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -147,7 +288,9 @@ def main(argv=None):
     print(f"packed weights: {train_b/2**20:.1f} MiB -> {serve_b/2**20:.1f} MiB "
           f"({train_b/serve_b:.1f}x smaller, policy={cfg.policy})")
 
-    srv = Server(cfg, sparams, slots=args.slots,
+    srv = Server(cfg, sparams, slots=args.slots, cache_len=args.cache_len,
+                 paged=args.paged, page_size=args.page_size,
+                 num_pages=args.num_pages,
                  ctx=ModelCtx(mode="serve", backend=args.backend,
                               impl=args.impl))
     rng = np.random.default_rng(0)
@@ -158,8 +301,15 @@ def main(argv=None):
     ticks = srv.run()
     dt = time.time() - t0
     total_new = sum(len(r.out) for r in srv.completed)
+    layout = "paged" if args.paged else "contiguous"
     print(f"served {len(srv.completed)} requests, {total_new} tokens, "
-          f"{ticks} ticks, {dt:.1f}s ({total_new/dt:.1f} tok/s on CPU)")
+          f"{ticks} ticks, {dt:.1f}s ({total_new/dt:.1f} tok/s on CPU, "
+          f"{layout} cache)")
+    print(f"jit signatures: prefill={srv.compile_counts['prefill']} "
+          f"(buckets={list(srv.buckets)}), decode={srv.compile_counts['decode']}")
+    if args.paged:
+        print(f"page pool: {srv.pt.usable_pages} usable pages x "
+              f"{srv.pt.page_size} tokens, {srv.pt.free_pages} free at exit")
     return srv
 
 

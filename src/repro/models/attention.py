@@ -273,47 +273,85 @@ def attn_apply(p, x, specs: AttnSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
 
 
 def init_cache_shapes(cfg: ArchConfig, batch: int, seq_len: int, window: int,
-                      dtype=None):
-    """Cache ShapeDtypeStructs for one attention layer."""
+                      dtype=None, paged: tuple[int, int] | None = None):
+    """Cache ShapeDtypeStructs for one attention layer.
+
+    `paged=(num_pages, page_size)` switches full-attention layers to the
+    block-pool layout (num_pages, page_size, Hk, dh) shared by every slot via
+    a page table (launch/kv_cache.py). Window layers keep their per-slot ring
+    buffers — the ring is already bounded at `window` tokens, so paging it
+    buys nothing.
+    """
     if dtype is None:
         dtype = jnp.dtype(cfg.kv_cache_dtype)
-    s = min(window, seq_len) if window else seq_len
-    shp = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    if paged is not None and not window:
+        num_pages, page_size = paged
+        shp = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    else:
+        s = min(window, seq_len) if window else seq_len
+        shp = (batch, s, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jax.ShapeDtypeStruct(shp, dtype),
             "v": jax.ShapeDtypeStruct(shp, dtype)}
 
 
 def attn_decode(p, x, cache, pos, specs: AttnSpecs, cfg: ArchConfig,
-                ctx: ModelCtx, *, window: int = 0):
-    """One-token decode. x: (B, 1, D); cache k/v: (B, S|W, Hk, dh); pos: scalar.
+                ctx: ModelCtx, *, window: int = 0, pages=None):
+    """One-token decode. x: (B, 1, D); pos: scalar or per-row (B,) int32.
 
-    Full attention: write at index `pos`, attend over valid prefix.
-    Window attention: ring buffer, write at `pos % W`, attend over the window.
+    Per-row positions drive RoPE phases, the cache-write index, and the
+    validity mask independently per slot (continuous batching: slots decode
+    at unrelated positions).
+
+    Layouts:
+      contiguous  cache k/v: (B, S|W, Hk, dh); full attention writes at
+                  index pos[b], window layers ring-write at pos[b] % W.
+      paged       cache k/v: (num_pages, page_size, Hk, dh) + `pages`
+                  (B, max_pages) page table; writes go to
+                  pages[b, pos[b]//P] at offset pos[b] % P, reads gather the
+                  row's page list back into a (B, max_pages*P, Hk, dh) view.
+                  Unallocated table entries point at page 0 (scratch); reads
+                  from it are masked by `valid`, writes to it are discarded
+                  garbage by construction.
     """
     b = x.shape[0]
     y = common.linear_apply(p["qkv"], x, specs.qkv, ctx)
     q, k_new, v_new = _split_qkv(y, cfg)
-    posv = jnp.full((b, 1), pos)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))       # (B,)
+    posv = posb[:, None]
     q = common.rope(q, posv, cfg.rope_theta)
     k_new = common.rope(k_new, posv, cfg.rope_theta)
 
-    s = cache["k"].shape[1]
-    idx = (pos % s) if window else jnp.minimum(pos, s - 1)
     cd = cache["k"].dtype
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], _kv_quant(k_new, cd), idx, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], _kv_quant(v_new, cd), idx, axis=1)
+    kq, vq = _kv_quant(k_new, cd)[:, 0], _kv_quant(v_new, cd)[:, 0]  # (B,Hk,dh)
+    rows = jnp.arange(b)
+    if pages is not None and not window:
+        page_size = cache["k"].shape[1]
+        pid = pages[rows, posb // page_size]
+        off = posb % page_size
+        k = cache["k"].at[pid, off].set(kq)
+        v = cache["v"].at[pid, off].set(vq)
+        s = pages.shape[1] * page_size
+        kf = _kv_dequant(k[pages].reshape(b, s, *k.shape[2:]), x.dtype)
+        vf = _kv_dequant(v[pages].reshape(b, s, *v.shape[2:]), x.dtype)
+        valid = jnp.arange(s)[None, :] <= posb[:, None]               # (B, S)
+    else:
+        s = cache["k"].shape[1]
+        idx = (posb % s) if window else jnp.minimum(posb, s - 1)      # (B,)
+        k = cache["k"].at[rows, idx].set(kq)
+        v = cache["v"].at[rows, idx].set(vq)
+        kf, vf = _kv_dequant(k, x.dtype), _kv_dequant(v, x.dtype)
+        slots = jnp.arange(s)
+        if window:
+            # ring full => every slot valid
+            valid = (slots[None, :] <= idx[:, None]) | (posv >= s)
+        else:
+            valid = slots[None, :] <= posv
 
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = h // hk
     qg = q.reshape(b, hk, g, dh)
-    kf, vf = _kv_dequant(k, x.dtype), _kv_dequant(v, x.dtype)
     sc = jnp.einsum("bhgd,bshd->bhgs", qg, kf).astype(jnp.float32) / dh ** 0.5
-    slots = jnp.arange(s)
-    if window:
-        valid = (slots <= idx) | (pos >= s)   # ring full => every slot valid
-    else:
-        valid = slots <= pos
-    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
     a = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
     o = jnp.einsum("bhgs,bshd->bhgd", a, vf).reshape(b, 1, h * dh)
     out = common.linear_apply(p["out"], o, specs.out, ctx)

@@ -117,10 +117,12 @@ def block_apply(p, x, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
     return x, aux
 
 
-def block_cache_shapes(cfg: ArchConfig, bs: BlockSpecs, batch: int, seq_len: int):
+def block_cache_shapes(cfg: ArchConfig, bs: BlockSpecs, batch: int, seq_len: int,
+                       paged: tuple[int, int] | None = None, kv_dtype=None):
     if bs.kind in ("attn", "local"):
         c = attention.init_cache_shapes(cfg, batch, seq_len,
-                                        _mixer_window(cfg, bs.kind))
+                                        _mixer_window(cfg, bs.kind),
+                                        dtype=kv_dtype, paged=paged)
     elif bs.kind == "mlstm":
         c = ssm.mlstm_state_shapes(cfg, batch)
     elif bs.kind == "slstm":
@@ -206,13 +208,15 @@ def _recurrent_prefill(pm, h, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx):
     return jnp.moveaxis(ys, 0, 1), state
 
 
-def block_decode(p, x, cache, pos, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx):
-    """One-token decode through a block. x: (B,1,D)."""
+def block_decode(p, x, cache, pos, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx,
+                 *, pages=None):
+    """One-token decode through a block. x: (B,1,D); pos: scalar or (B,)."""
     h = common.norm_apply(p["norm1"], x, cfg.norm)
     if bs.kind in ("attn", "local"):
         sub = {k: v for k, v in cache.items() if k in ("k", "v")}
         m, sub = attention.attn_decode(p["mixer"], h, sub, pos, bs.mixer, cfg, ctx,
-                                       window=_mixer_window(cfg, bs.kind))
+                                       window=_mixer_window(cfg, bs.kind),
+                                       pages=pages)
         cache = {**cache, **sub}
     elif bs.kind == "mlstm":
         m, cache2 = ssm.mlstm_decode(p["mixer"], h, cache, bs.mixer, ctx)
@@ -455,26 +459,39 @@ def loss_fn(params, batch, sp: ModelSpecs, ctx: ModelCtx):
 # prefill / decode
 # ---------------------------------------------------------------------------
 
-def cache_shapes(cfg: ArchConfig, batch: int, seq_len: int):
+def cache_shapes(cfg: ArchConfig, batch: int, seq_len: int,
+                 paged: tuple[int, int] | None = None, kv_dtype=None):
+    """Decode-cache ShapeDtypeStructs. `paged=(num_pages, page_size)` puts
+    full-attention KV into the shared block pool (see launch/kv_cache.py);
+    window rings and recurrent states stay per-slot slabs.
+
+    `kv_dtype` overrides the attention KV storage dtype (None =>
+    cfg.kv_cache_dtype). The serve loop passes its compute dtype so the pool
+    matches what `attn_apply`/`attn_decode` actually store — prefill caches
+    follow the compute dtype unless the int8-requant cache is on.
+    """
     sp = build_specs(cfg)
     shapes: dict[str, Any] = {
-        "first": block_cache_shapes(cfg, sp.first, batch, seq_len),
-        "last": block_cache_shapes(cfg, sp.last, batch, seq_len),
+        "first": block_cache_shapes(cfg, sp.first, batch, seq_len, paged, kv_dtype),
+        "last": block_cache_shapes(cfg, sp.last, batch, seq_len, paged, kv_dtype),
     }
     if sp.n_periods:
         def stack(tree):
             return jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((sp.n_periods,) + s.shape, s.dtype), tree)
-        shapes["mid"] = stack({f"b{t}": block_cache_shapes(cfg, bs, batch, seq_len)
+        shapes["mid"] = stack({f"b{t}": block_cache_shapes(cfg, bs, batch, seq_len,
+                                                           paged, kv_dtype)
                                for t, bs in enumerate(sp.mid)})
     for t, bs in enumerate(sp.rem):
-        shapes[f"rem{t}"] = block_cache_shapes(cfg, bs, batch, seq_len)
+        shapes[f"rem{t}"] = block_cache_shapes(cfg, bs, batch, seq_len, paged,
+                                               kv_dtype)
     return shapes
 
 
-def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               paged: tuple[int, int] | None = None, kv_dtype=None):
     cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                         cache_shapes(cfg, batch, seq_len))
+                         cache_shapes(cfg, batch, seq_len, paged, kv_dtype))
     return _fix_m_states(cache, cfg)
 
 
@@ -489,11 +506,15 @@ def _fix_m_states(cache, cfg):
 
 
 def prefill(params, tokens, sp: ModelSpecs, ctx: ModelCtx, *, frontend_embeds=None,
-            cache_len: int = 0):
+            cache_len: int = 0, last_pos=None):
     """Process the prompt, return (last-position logits, cache).
 
     `cache_len`: KV-cache capacity to allocate (0 => prompt length; pass
     prompt_len + max_new_tokens for generation).
+    `last_pos`: (B,) index of each row's final *real* token when `tokens` is
+    right-padded to a bucket length (continuous-batching prefill); None =>
+    the literal last column. Causal masking keeps real positions from
+    attending to the padding, so the cache below `last_pos` is unaffected.
     """
     cfg = sp.cfg
     x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
@@ -520,12 +541,23 @@ def prefill(params, tokens, sp: ModelSpecs, ctx: ModelCtx, *, frontend_embeds=No
                                              enc_out=enc_out, cache_len=cache_len)
     x, caches["last"] = block_prefill(params["last"], x, sp.last, cfg, ctx,
                                       enc_out=enc_out, cache_len=cache_len)
-    logits = _logits(params, x[:, -1:], sp, ctx)
+    if last_pos is None:
+        x_last = x[:, -1:]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32).reshape(-1, 1, 1)
+        x_last = jnp.take_along_axis(x, idx, axis=1)
+    logits = _logits(params, x_last, sp, ctx)
     return logits, caches
 
 
-def decode_step(params, cache, tokens, pos, sp: ModelSpecs, ctx: ModelCtx):
-    """One decode step. tokens: (B, 1); pos: scalar int32 (current position).
+def decode_step(params, cache, tokens, pos, sp: ModelSpecs, ctx: ModelCtx, *,
+                pages=None):
+    """One decode step. tokens: (B, 1); pos: scalar int32 (aligned decode) or
+    (B,) int32 — one position per slot (continuous batching).
+
+    `pages`: (B, max_pages) int32 page table when the cache was built with
+    `init_cache(..., paged=(num_pages, page_size))`; full-attention layers
+    then write/read through the page lists (see launch/kv_cache.py).
 
     This is the `serve_step` the decode_* dry-run shapes lower.
     """
@@ -533,20 +565,20 @@ def decode_step(params, cache, tokens, pos, sp: ModelSpecs, ctx: ModelCtx):
     x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
     new_cache: dict[str, Any] = {}
     x, new_cache["first"] = block_decode(params["first"], x, cache["first"], pos,
-                                         sp.first, cfg, ctx)
+                                         sp.first, cfg, ctx, pages=pages)
     if sp.n_periods:
         def period(xx, scanned):
             pp, cc = scanned
             ncs = {}
             for t, bs in enumerate(sp.mid):
                 xx, ncs[f"b{t}"] = block_decode(pp[f"b{t}"], xx, cc[f"b{t}"], pos,
-                                                bs, cfg, ctx)
+                                                bs, cfg, ctx, pages=pages)
             return xx, ncs
         x, new_cache["mid"] = jax.lax.scan(period, x, (params["mid"], cache["mid"]))
     for t, bs in enumerate(sp.rem):
         x, new_cache[f"rem{t}"] = block_decode(params[f"rem{t}"], x, cache[f"rem{t}"],
-                                               pos, bs, cfg, ctx)
+                                               pos, bs, cfg, ctx, pages=pages)
     x, new_cache["last"] = block_decode(params["last"], x, cache["last"], pos,
-                                        sp.last, cfg, ctx)
+                                        sp.last, cfg, ctx, pages=pages)
     logits = _logits(params, x, sp, ctx)
     return logits, new_cache

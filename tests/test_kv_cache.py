@@ -1,0 +1,115 @@
+"""PageTable invariants under random admit/extend/retire traces.
+
+The page pool is the correctness foundation of the paged serving path: a
+double-owned page silently cross-contaminates two requests' KV, a leaked
+page shrinks capacity forever, and a coverage mismatch (pages != tokens)
+makes the decode write index run off the slot's page list. Property-test all
+of it with random traces (hypothesis, or the deterministic fallback shim).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.launch.kv_cache import NULL_PAGE, PageTable, pages_for
+
+
+def _check_invariants(pt: PageTable, model: dict):
+    owned = [int(p) for s in range(pt.slots) for p in pt.table[s, : pt.held[s]]]
+    # the scratch page is never handed out
+    assert NULL_PAGE not in owned
+    # no page owned twice
+    assert len(owned) == len(set(owned)), owned
+    # free + used == pool (minus the reserved scratch page)
+    assert pt.free_pages + len(owned) == pt.num_pages - 1
+    for s in range(pt.slots):
+        if pt.active[s]:
+            # per-slot pages cover exactly the slot's tokens (pos + 1)
+            assert int(pt.tokens[s]) == model[s]
+            assert int(pt.held[s]) == pages_for(model[s], pt.page_size)
+        else:
+            assert s not in model
+            assert int(pt.held[s]) == 0 and int(pt.tokens[s]) == 0
+        # table entries beyond the held count all point at scratch
+        assert (pt.table[s, pt.held[s]:] == NULL_PAGE).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_random_traces_maintain_invariants(seed):
+    rng = random.Random(seed)
+    page_size = rng.choice([1, 2, 4, 8])
+    slots = rng.randint(1, 5)
+    max_pages = rng.randint(1, 8)
+    # sometimes oversubscribed (pool < slots * max_pages), sometimes ample
+    num_pages = rng.randint(2, slots * max_pages + 3)
+    pt = PageTable(num_pages, page_size, slots, max_pages)
+    cap = max_pages * page_size
+    model: dict[int, int] = {}
+
+    for _ in range(60):
+        s = rng.randrange(slots)
+        op = rng.random()
+        if not pt.active[s] and op < 0.55:
+            n = rng.randint(1, cap)
+            if pt.can_admit(n):
+                ids = pt.admit(s, n)
+                assert len(ids) == pages_for(n, page_size)
+                assert NULL_PAGE not in ids
+                model[s] = n
+            else:
+                with pytest.raises(RuntimeError):
+                    pt.admit(s, n)
+        elif pt.active[s] and op < 0.75:
+            n = rng.randint(1, cap)
+            need = pages_for(n, page_size) - int(pt.held[s])
+            if n <= model[s]:
+                assert pt.extend(s, n) == []          # no-op growth
+            elif need <= pt.free_pages:
+                got = pt.extend(s, n)
+                assert len(got) == max(need, 0)
+                model[s] = n
+            else:
+                with pytest.raises(RuntimeError):
+                    pt.extend(s, n)
+        elif pt.active[s]:
+            held = int(pt.held[s])
+            free_before = pt.free_pages
+            freed = pt.retire(s)
+            # retire returns all pages to the pool
+            assert len(freed) == held
+            assert pt.free_pages == free_before + held
+            model.pop(s)
+        _check_invariants(pt, model)
+
+
+def test_admit_rejects_bad_sizes():
+    pt = PageTable(9, 4, 2, 2)
+    with pytest.raises(ValueError):
+        pt.admit(0, 0)
+    with pytest.raises(ValueError):
+        pt.admit(0, 9)      # > max_pages * page_size
+    pt.admit(0, 5)
+    with pytest.raises(RuntimeError):
+        pt.admit(0, 1)      # already active
+    with pytest.raises(ValueError):
+        pt.extend(0, 9)
+    with pytest.raises(RuntimeError):
+        pt.extend(1, 1)     # not active
+    with pytest.raises(RuntimeError):
+        pt.retire(1)
+
+
+def test_lifo_reuse_and_full_cycle():
+    pt = PageTable(5, 2, 2, 2)
+    a = pt.admit(0, 4)
+    assert pt.free_pages == 2
+    freed = pt.retire(0)
+    assert sorted(freed) == sorted(int(p) for p in a)
+    b = pt.admit(1, 4)
+    # LIFO free list: the just-freed pages come back first
+    assert set(int(p) for p in b) == set(freed)
+    assert pt.device_table().shape == (2, 2)
+    assert (np.asarray(pt.device_table())[0] == NULL_PAGE).all()

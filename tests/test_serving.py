@@ -1,0 +1,201 @@
+"""Serving-layer lockdown: continuous batching with per-slot positions and
+the paged KV cache must be token-for-token identical to one-request-at-a-time
+decode.
+
+The batched-equals-sequential oracle is the test that catches the
+aligned-position bug class: if the fused decode step shares one position
+across slots, every slot that isn't at max(pos) rotates its query/key with
+the wrong RoPE phase and writes KV at the wrong index — outputs still look
+plausible, only an exact-token comparison notices. Run in f32 so both paths
+compute identical algebra (row-wise ops only, so batch size cannot change
+per-row results).
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import Request, Server
+from repro.models import transformer
+from repro.models.common import ModelCtx
+
+# mixed lengths spanning several prefill buckets (buckets: 4/8/16/32)
+PROMPT_LENS = (3, 9, 14)
+MAX_NEW = 4
+CACHE_LEN = 32
+PAGE_SIZE = 4
+
+
+@functools.lru_cache(maxsize=None)
+def _built(policy: str):
+    cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(), policy=policy)
+    sp = transformer.build_specs(cfg)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    return cfg, sp, sparams
+
+
+def _prompts(cfg, lens=PROMPT_LENS, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32) for n in lens]
+
+
+def _greedy_reference(cfg, sp, sparams, ctx, prompt, max_new):
+    """Single-request decode on the seed-validated contiguous scalar-pos path."""
+    logits, cache = transformer.prefill(sparams, jnp.asarray(prompt)[None], sp,
+                                        ctx, cache_len=CACHE_LEN)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(out) < max_new:
+        l, cache = transformer.decode_step(
+            sparams, cache, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.int32(pos), sp, ctx)
+        out.append(int(jnp.argmax(l[0, 0])))
+        pos += 1
+    return out
+
+
+def _serve(cfg, sparams, ctx, prompts, *, paged, slots=2, **kw):
+    srv = Server(cfg, sparams, slots=slots, cache_len=CACHE_LEN, paged=paged,
+                 page_size=PAGE_SIZE, ctx=ctx, **kw)
+    for i, p in enumerate(prompts):
+        srv.submit(Request(i, p, MAX_NEW))
+    srv.run()
+    assert len(srv.completed) == len(prompts)
+    return srv
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("policy", ["binary", "ternary", "int8"])
+def test_batched_equals_sequential(policy, backend):
+    """N mixed-length requests through the paged continuous-batching server
+    == single-slot sequential greedy decode, token for token, for all three
+    W&A policies on both qgemm backends."""
+    cfg, sp, sparams = _built(policy)
+    ctx = ModelCtx(mode="serve", backend=backend, dtype=jnp.float32)
+    prompts = _prompts(cfg)
+    want = [_greedy_reference(cfg, sp, sparams, ctx, p, MAX_NEW)
+            for p in prompts]
+    srv = _serve(cfg, sparams, ctx, prompts, paged=True)
+    got = {r.rid: r.out for r in srv.completed}
+    for i, w in enumerate(want):
+        assert got[i] == w, (policy, backend, i, got[i], w)
+
+
+def test_contiguous_matches_paged():
+    """The --contiguous reference layout and the paged layout serve the same
+    traffic identically (per-slot positions on both)."""
+    cfg, sp, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompts = _prompts(cfg, lens=(2, 11, 7, 15), seed=3)
+    a = _serve(cfg, sparams, ctx, prompts, paged=True)
+    b = _serve(cfg, sparams, ctx, prompts, paged=False)
+    assert {r.rid: r.out for r in a.completed} == {r.rid: r.out for r in b.completed}
+
+
+def test_slots_decode_at_their_own_positions():
+    """Requests with different prompt lengths no longer share a decode
+    position: some fused tick must carry distinct per-slot positions."""
+    cfg, _, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    srv = _serve(cfg, sparams, ctx, _prompts(cfg, lens=(3, 14)), paged=True)
+    multi = [t for t in srv.pos_trace if len(t) > 1]
+    assert multi, "no tick ever decoded two slots at once"
+    assert any(len(set(t.tolist())) > 1 for t in multi), \
+        f"slots always shared one position: {srv.pos_trace}"
+
+
+def test_jit_cache_discipline():
+    """Bucketed prefill: mixed prompt lengths compile at most len(buckets)
+    prefill signatures plus one decode signature."""
+    cfg, _, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    rng = np.random.default_rng(11)
+    lens = [int(rng.integers(1, CACHE_LEN + 1)) for _ in range(10)]
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)
+               for n in lens]
+    srv = _serve(cfg, sparams, ctx, prompts, paged=True, slots=3)
+    assert srv.compile_counts["prefill"] <= len(srv.buckets), \
+        (srv.compile_counts, srv.buckets)
+    assert srv.compile_counts["decode"] == 1, srv.compile_counts
+    total = srv.compile_counts["prefill"] + srv.compile_counts["decode"]
+    assert total <= len(srv.buckets) + 1
+
+
+def test_admission_is_metered_by_page_budget():
+    """With a pool that can only back one request's lifetime, two queued
+    requests are served one at a time even though a second slot is free —
+    and every page returns to the pool at the end."""
+    cfg, _, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+               for _ in range(2)]
+    # each request needs pages_for(min(8 + 8 - 1, 32), 4) = 4 pages; 5 usable
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, num_pages=6, ctx=ctx)
+    for i, p in enumerate(prompts):
+        srv.submit(Request(i, p, 8))
+    srv.run()
+    assert len(srv.completed) == 2
+    assert all(len(t) == 1 for t in srv.pos_trace), \
+        "page budget should have kept concurrency at 1"
+    assert srv.pt.free_pages == srv.pt.usable_pages
+
+
+def test_windowed_arch_oracle():
+    """Sliding-window (local) layers: ring caches can't take padded prefill,
+    so those archs bucket to the exact prompt length — and must still match
+    the sequential reference through ring wraparound."""
+    cfg = dataclasses.replace(get_config("gemma3-4b").reduced(),
+                              policy="ternary", window=8)   # force wraparound
+    sp = transformer.build_specs(cfg)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompts = _prompts(cfg, lens=(3, 13), seed=21)
+    max_new = 6          # positions cross the window=8 ring boundary
+    want = [_greedy_reference(cfg, sp, sparams, ctx, p, max_new)
+            for p in prompts]
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, ctx=ctx)
+    for i, p in enumerate(prompts):
+        srv.submit(Request(i, p, max_new))
+    srv.run()
+    got = {r.rid: r.out for r in srv.completed}
+    for i, w in enumerate(want):
+        assert got[i] == w, (i, got[i], w)
+
+
+def test_submit_rejects_unservable_page_demand():
+    """A request whose lifetime page demand exceeds the whole pool must be
+    rejected at submit — queued, it would livelock run() forever."""
+    cfg, _, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, num_pages=3, ctx=ctx)   # 2 usable pages
+    prompt = np.arange(8, dtype=np.int32)
+    with pytest.raises(ValueError):
+        srv.submit(Request(0, prompt, 8))    # needs 4 pages, pool has 2
+    srv.submit(Request(1, prompt[:4], 3))    # 6 tokens -> 2 pages: fits
+    srv.run()
+    assert len(srv.completed) == 1
+
+
+def test_paged_long_decode_extends_pages():
+    """A request whose decode crosses several page boundaries stays exact
+    (extend-on-demand path) vs the sequential reference."""
+    cfg, sp, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompt = _prompts(cfg, lens=(5,), seed=9)[0]
+    max_new = 18     # 5 + 18 - 1 = 22 tokens -> 6 pages of 4
+    want = _greedy_reference(cfg, sp, sparams, ctx, prompt, max_new)
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, ctx=ctx)
+    srv.submit(Request(0, prompt, max_new))
+    srv.run()
+    assert srv.completed[0].out == want
