@@ -24,6 +24,22 @@ import jax.numpy as jnp
 WORD = 32  # bits per packed word
 
 
+def shardable_words(units: int, n_shards: int) -> bool:
+    """True iff a storage axis of `units` whole quanta (packed 32-operand
+    words for the bit-plane formats, int8 codes for the 8-bit format) splits
+    into `n_shards` equal whole-quantum shards.
+
+    This is THE divisibility rule for tensor-parallel K-sharding of packed
+    operands: a shard boundary may never fall inside a packed word (the
+    XNOR/gated-XNOR word algebra contracts whole words), so sharding the
+    packed axis of `w_packed`/`w_mask`/`w_sign` requires K to divide
+    pack_factor(32) x n_shards. Both `launch.sharding` (device layout) and
+    `kernels.dispatch` (shard_map compute) consult this one predicate so the
+    two can never disagree about whether a leaf is K-shardable.
+    """
+    return n_shards > 0 and units % n_shards == 0
+
+
 def _check_k(k: int) -> None:
     if k % WORD:
         raise ValueError(f"packing axis length {k} not a multiple of {WORD}")

@@ -47,6 +47,12 @@ class QLinearSpec:
     use_bias: bool = False
     experts: int = 0           # 0 = dense; >0 = leading expert axis on weights
     name: str = "qlinear"
+    #: tensor-parallel role of this layer on a ("data","model") mesh
+    #: (Megatron pairing): "column" = out-dim sharded, no collective;
+    #: "row" = packed-K sharded, one pre-requant int32 psum; "none" =
+    #: replicated. Only consulted when the caller threads a TPSpec (serve
+    #: mesh mode); train and single-device serve ignore it.
+    parallel: str = "none"
 
 
 # ---------------------------------------------------------------------------
@@ -247,16 +253,18 @@ def serve_param_shapes(spec: QLinearSpec) -> dict[str, jax.ShapeDtypeStruct]:
 
 def apply(p: Params, x: jnp.ndarray, spec: QLinearSpec, *,
           mode: str = "train", impl: str = "popcount",
-          backend: str = "jnp", wire: str = "dense") -> jnp.ndarray:
+          backend: str = "jnp", wire: str = "dense", tp=None) -> jnp.ndarray:
     """Apply the quantized linear. See module docstring for modes.
 
     Serve mode routes every (wprec, aprec, impl) operating point through
     `repro.kernels.dispatch.qgemm` — the single owner of activation
     packing, expert vmap and the fused bias/requant epilogue for both the
-    jnp and Pallas backends."""
+    jnp and Pallas backends. `tp` (a `dispatch.TPSpec`) runs the GEMM under
+    shard_map in the layer's `spec.parallel` role (tensor-parallel serve)."""
     if mode == "train":
         return _apply_train(p, x, spec, wire)
     if mode != "serve":
         raise ValueError(f"mode={mode!r}")
     from repro.kernels.dispatch import qgemm   # deferred: core must not pull
-    return qgemm(p, x, spec, impl=impl, backend=backend)   # pallas at import
+    return qgemm(p, x, spec, impl=impl, backend=backend,   # pallas at import
+                 tp=tp, parallel=spec.parallel)

@@ -34,10 +34,11 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import pack
 from repro.core.quantize import int8_codes, ternarize
@@ -211,6 +212,184 @@ register(GemmCell("none", "none", "*", ("w",),
 
 
 # ---------------------------------------------------------------------------
+# tensor parallelism: qgemm under shard_map
+# ---------------------------------------------------------------------------
+#
+# Megatron pairing over the ("data", "model") mesh:
+#
+#   column-parallel (qkv/up):  weights N-sharded over the model axis; every
+#       shard sees the full K, runs the COMPLETE plain qgemm (prep + acc +
+#       requant) on its N slice — no collective, bit-exact per slice.
+#   row-parallel (out/down):   packed K-sharded. Activation prep (per-row
+#       alpha / trit threshold / int8 codes) runs REPLICATED inside the
+#       shard_map body on the full K — the per-row statistics must see every
+#       K element, and computing them on the full row keeps the algebra
+#       identical to the single-device path. Each shard then slices its own
+#       packed-K chunk, accumulates its partial dot, and the partials are
+#       psum'd on the int32 accumulator BEFORE requant: integer addition is
+#       associative, so the TP sum is bit-exact; requantizing per-shard
+#       partials would be numerically wrong (and f32/bf16 psum inexact).
+#
+# Weight-only cells (wide=False) keep bf16 accumulators — a narrow psum is
+# NOT bit-exact, so row-parallel falls back to replicated compute for them
+# (column-parallel still shards: it needs no collective). The batch/M dim
+# additionally shards over the "data" axis when it divides.
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """The repo's one version-tolerant shard_map (optim.compress owns it),
+    with replication checking off: Pallas calls inside the body have no
+    replication rule on older jax."""
+    from repro.optim.compress import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class TPSpec:
+    """Tensor-parallel context threaded from the serve driver into qgemm."""
+    mesh: Any                       # jax.sharding.Mesh
+    axis: str = "model"             # TP (contraction/out-dim) axis name
+
+    @property
+    def size(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+
+#: per-leaf axis positions (negative = from the end; leading expert axis ok)
+_N_AXIS = {"w_packed": -2, "w_mask": -2, "w_sign": -2,
+           "w_q": -1, "w": -1, "w_scale": -1, "b": -1}
+_K_AXIS = {"w_packed": -1, "w_mask": -1, "w_sign": -1, "w_q": -2, "w": -2}
+_PACKED_NAMES = ("w_packed", "w_mask", "w_sign")
+
+
+def tp_plan(cell: GemmCell, spec, parallel: str, tp: TPSpec | None) -> str | None:
+    """Resolve the effective TP mode, or None => replicated fallback.
+
+    Guards: the axis must exist with size > 1; column needs N % shards == 0;
+    row needs a wide (integer-accumulator) cell and a K axis that splits into
+    whole packed words per shard (`pack.shardable_words` — shared with the
+    device-layout rules in launch.sharding so compute and placement agree).
+    """
+    if tp is None or parallel == "none":
+        return None
+    if parallel not in ("column", "row"):
+        raise ValueError(f"parallel={parallel!r}")
+    if tp.axis not in tp.mesh.axis_names:
+        return None
+    ns = tp.size
+    if ns <= 1:
+        return None
+    if parallel == "column":
+        return "column" if spec.out_dim % ns == 0 else None
+    if not cell.wide:
+        return None
+    packed = any(nm in _PACKED_NAMES for nm in cell.weight_names)
+    units = spec.in_dim // pack.WORD if packed else spec.in_dim
+    if packed and spec.in_dim % pack.WORD:
+        return None
+    return "row" if pack.shardable_words(units, ns) else None
+
+
+def _dp_axis(tp: TPSpec, dim: int) -> str | None:
+    """The single data axis of the mesh, when it divides `dim`."""
+    dp = [a for a in tp.mesh.axis_names if a != tp.axis]
+    if len(dp) == 1 and dim % int(tp.mesh.shape[dp[0]]) == 0:
+        return dp[0]
+    return None
+
+
+def _tp_column(cell, p, x, spec, impl, backend, tp):
+    """N-sharded qgemm: each shard runs the full plain path on its slice."""
+    mesh, ax, ns = tp.mesh, tp.axis, tp.size
+    sub = dataclasses.replace(spec, out_dim=spec.out_dim // ns)
+
+    def pspec(nm, v):
+        if v.ndim == 0 or nm not in _N_AXIS:
+            return P(*([None] * v.ndim))
+        dims = [None] * v.ndim
+        dims[_N_AXIS[nm]] = ax
+        return P(*dims)
+
+    xdims = [None] * x.ndim
+    odims = [None] * x.ndim
+    dp = _dp_axis(tp, x.shape[0]) if (not spec.experts and x.ndim >= 2) else None
+    if dp:
+        xdims[0] = odims[0] = dp
+    odims[-1] = ax
+    pspecs = {nm: pspec(nm, v) for nm, v in p.items()}
+    fn = lambda pl_, xl: qgemm(pl_, xl, sub, impl=impl, backend=backend)
+    return _shard_map(fn, mesh=mesh, in_specs=(pspecs, P(*xdims)),
+                      out_specs=P(*odims))(p, x)
+
+
+def _tp_row(cell, p, x, spec, impl, backend, tp):
+    """Packed-K-sharded qgemm: replicated full-K prep, per-shard integer
+    partial dot, ONE int32 psum per call, deferred (global) requant."""
+    mesh, ax, ns = tp.mesh, tp.axis, tp.size
+    k, n = spec.in_dim, spec.out_dim
+    lead = x.shape[:-1]
+    e = spec.experts
+    x3 = x.reshape((e, -1, k) if e else (-1, k))
+    m = x3.shape[-2]
+    w_ops = tuple(p[nm] for nm in cell.weight_names)
+    shared = {nm: p[nm] for nm in ("a_scale",) if nm in p}
+    use_pallas = backend == "pallas" and cell.body is not None
+    k_loc = k // ns
+
+    def wspec(nm):
+        dims = [None] * p[nm].ndim
+        dims[_K_AXIS[nm]] = ax
+        return P(*dims)
+
+    dp = None if e else _dp_axis(tp, m)
+    xdims = [dp] + [None] * (x3.ndim - 1)
+    accdims = list(xdims)           # acc: (E,) M, N — leading dims like x3
+    asdims = xdims[:-1]             # a_scale: (E,) M
+
+    def local(x_loc, w_loc, sh):
+        idx = jax.lax.axis_index(ax)
+
+        def one(x2d, wl):
+            # full-K prep: per-row stats identical to the unsharded path
+            x_ops, a_scale = cell.prep(x2d, sh, spec)
+            kq_loc = x_ops[0].shape[-1] // ns
+            xl = tuple(jax.lax.dynamic_slice_in_dim(xo, idx * kq_loc, kq_loc,
+                                                    axis=-1) for xo in x_ops)
+            if use_pallas:
+                mm = x2d.shape[0]
+                padm = (-mm) % PAD_M
+                if padm:
+                    xl = tuple(jnp.pad(v, ((0, padm), (0, 0))) for v in xl)
+                acc = harness.gemm(cell.body, xl, wl, None, None, None,
+                                   k=k_loc, out="acc", interpret=INTERPRET)[:mm]
+            else:
+                acc = cell.acc(xl, wl, k_loc)
+            return acc, a_scale
+
+        if e:
+            acc, a_scale = jax.vmap(one)(x_loc, w_loc)
+        else:
+            acc, a_scale = one(x_loc, w_loc)
+        # THE tensor-parallel collective: integer partial sums, pre-requant
+        return jax.lax.psum(acc, ax), a_scale
+
+    acc, a_scale = _shard_map(
+        local, mesh=mesh,
+        in_specs=(P(*xdims), tuple(wspec(nm) for nm in cell.weight_names),
+                  {nm: P() for nm in shared}),
+        out_specs=(P(*accdims), P(*asdims)))(x3, w_ops, shared)
+
+    w_scale, bias = p.get("w_scale"), p.get("b")
+    if e:
+        rq = lambda a, ws, asc, b=None: harness.requant(a, ws, asc, b)
+        y = (jax.vmap(rq)(acc, w_scale, a_scale, bias) if bias is not None
+             else jax.vmap(rq)(acc, w_scale, a_scale))
+    else:
+        y = harness.requant(acc, w_scale, a_scale, bias)
+    return y.astype(jnp.bfloat16).reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
 # the entry point
 # ---------------------------------------------------------------------------
 
@@ -224,16 +403,31 @@ def _requant_narrow(acc, w_scale, bias):
 
 
 def qgemm(p: dict, x: jnp.ndarray, spec, *, impl: str = "popcount",
-          backend: str = "jnp") -> jnp.ndarray:
+          backend: str = "jnp", tp: TPSpec | None = None,
+          parallel: str = "none") -> jnp.ndarray:
     """The serve-mode quantized GEMM: (..., K) -> (..., N) bf16.
 
     p: packed params from `core.qlinear.pack_params`; spec: QLinearSpec.
     backend="pallas" routes W&A cells through `harness.gemm` (fused bias);
     backend="jnp" (and cells with no Pallas body) run the identical
     formulation via XLA. Both share prep and the requant algebra.
+
+    tp + parallel ("column" | "row") run the GEMM under shard_map on the
+    tensor-parallel mesh axis (see the TP section above): column shards N
+    with no collective; row shards the packed K and psums the int32
+    accumulator before requant. Both modes are bit-exact vs. the unsharded
+    path; non-dividing shapes (and narrow-accumulator row cells) fall back
+    to replicated compute — `tp_plan` is the single arbiter.
     """
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"backend={backend!r}")
+    if tp is not None and parallel != "none":
+        cell = lookup(spec.lq.weights.precision, spec.lq.acts.precision, impl)
+        plan = tp_plan(cell, spec, parallel, tp)
+        if plan == "column":
+            return _tp_column(cell, p, x, spec, impl, backend, tp)
+        if plan == "row":
+            return _tp_row(cell, p, x, spec, impl, backend, tp)
     if spec.experts:
         sub = dataclasses.replace(spec, experts=0)
         shared = {nm: p[nm] for nm in ("a_scale",) if nm in p}

@@ -73,7 +73,7 @@ def requant(dot, w_scale, a_scale, bias):
     return y
 
 
-def _kernel(*refs, body: MacBody, k_total: int, bkq: int):
+def _kernel(*refs, body: MacBody, k_total: int, bkq: int, acc_only: bool):
     """One (bm, bn) output tile; grid dim 2 sweeps Kq (output-stationary)."""
     nx, nw = body.n_x, body.n_w
     x_tiles = tuple(refs[i][...] for i in range(nx))
@@ -95,8 +95,14 @@ def _kernel(*refs, body: MacBody, k_total: int, bkq: int):
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _epilogue():
         dot = body.finish(tuple(a[...] for a in acc_refs), k_total)
-        y = requant(dot, ws_ref[...], as_ref[...], b_ref[...])
-        o_ref[...] = y.astype(o_ref.dtype)
+        if acc_only:
+            # tensor-parallel row shard: emit the raw integer dot so the
+            # caller can psum partial sums across K shards BEFORE requant
+            # (requantizing per-shard partials is numerically wrong)
+            o_ref[...] = dot.astype(jnp.int32)
+        else:
+            y = requant(dot, ws_ref[...], as_ref[...], b_ref[...])
+            o_ref[...] = y.astype(o_ref.dtype)
 
 
 def fit_block(requested: int, dim: int, align: int = 1) -> int:
@@ -115,22 +121,29 @@ def fit_block(requested: int, dim: int, align: int = 1) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "body", "k", "bm", "bn", "bkq", "interpret"))
+    "body", "k", "bm", "bn", "bkq", "interpret", "out"))
 def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarray],
          w_scale: jnp.ndarray, a_scale: jnp.ndarray,
          bias: jnp.ndarray | None = None, *, k: int,
          bm: int = 128, bn: int = 128, bkq: int | None = None,
-         interpret: bool = True) -> jnp.ndarray:
+         interpret: bool = True, out: str = "requant") -> jnp.ndarray:
     """Run `body` through the shared output-stationary skeleton.
 
     x_ops: n_x arrays (M, Kq); w_ops: n_w arrays (N, Kq) ((Kq, N) if
     w_kmajor); w_scale (N,) f32; a_scale (M,) f32; bias (N,) f32 or None
     (fused in the epilogue — no separate f32 round-trip) -> (M, N) bf16.
 
+    out="acc" skips the requant epilogue and returns the raw (M, N) int32
+    dot instead — the row-parallel tensor-parallel path runs the kernel per
+    K shard and psums the integer partials across the model axis before the
+    (deferred, out-of-kernel) requant. w_scale/a_scale/bias may then be None.
+
     Block sizes are clamped to the largest divisor of each dim; callers
     (`dispatch.qgemm`) handle M padding. interpret=True on CPU (validation),
     False on real TPU.
     """
+    if out not in ("requant", "acc"):
+        raise ValueError(f"out={out!r}")
     m, kq = x_ops[0].shape
     n = w_ops[0].shape[0] if not body.w_kmajor else w_ops[0].shape[1]
     assert kq * body.k_per_q == k, (x_ops[0].shape, body.k_per_q, k)
@@ -141,6 +154,12 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
     bm = fit_block(bm, m, align=8)
     bn = fit_block(bn, n)
     bkq = fit_block(bkq if bkq is not None else body.default_bkq, kq)
+    if out == "acc":
+        # scales are unused by the raw-accumulator epilogue; feed dummies so
+        # the BlockSpecs stay uniform. In requant mode None scales stay a
+        # loud error — substituting zeros would silently zero the output.
+        w_scale = jnp.zeros((n,), jnp.float32) if w_scale is None else w_scale
+        a_scale = jnp.zeros((m,), jnp.float32) if a_scale is None else a_scale
     if bias is None:
         bias = jnp.zeros((n,), jnp.float32)
 
@@ -150,8 +169,10 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
     else:
         w_spec = pl.BlockSpec((bn, bkq), lambda i, j, kk: (j, kk))
     grid = (m // bm, n // bn, kq // bkq)
+    out_dtype = jnp.int32 if out == "acc" else jnp.bfloat16
     return pl.pallas_call(
-        functools.partial(_kernel, body=body, k_total=k, bkq=bkq),
+        functools.partial(_kernel, body=body, k_total=k, bkq=bkq,
+                          acc_only=(out == "acc")),
         grid=grid,
         in_specs=(
             [x_spec] * body.n_x + [w_spec] * body.n_w + [
@@ -160,7 +181,7 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
                 pl.BlockSpec((bn,), lambda i, j, kk: (j,)),   # bias
             ]),
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)] * body.n_acc,
         interpret=interpret,
     )(*x_ops, *w_ops, w_scale, a_scale, bias)

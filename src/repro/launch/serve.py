@@ -24,6 +24,12 @@ Design (vLLM-style, shrunk to its essentials):
 `--contiguous` keeps the old per-slot slab layout as a reference path; both
 run the same per-slot-position decode step. See docs/SERVING.md.
 
+`--mesh DATA,MODEL` serves tensor-parallel: qgemm runs under shard_map
+(column-parallel qkv/up, row-parallel out/down with a pre-requant int32
+psum), packed weights and the paged pool are device-placed by
+launch/sharding.py, and the result is token-exact vs. single-device serving
+(tests/test_serving_tp.py). Admission and the PageTable stay host-global.
+
 On a pod this wraps the decode_32k/long_500k dry-run cells: same
 decode_step, mesh sharding from launch/sharding.py.
 """
@@ -67,11 +73,19 @@ class Server:
                  paged: bool = True, page_size: int = 32,
                  num_pages: int | None = None,
                  buckets: tuple[int, ...] | None = None,
-                 ctx: ModelCtx | None = None):
+                 ctx: ModelCtx | None = None, mesh=None):
         self.cfg = cfg
         self.sp = transformer.build_specs(cfg)
         self.params = params
         self.ctx = ctx or ModelCtx(mode="serve")
+        self.mesh = mesh
+        if mesh is not None:
+            # tensor-parallel serving: qgemm runs under shard_map on the
+            # "model" axis (column/row per layer spec), batch/pages shard
+            # over "data". Admission and the PageTable stay host-global.
+            from repro.kernels.dispatch import TPSpec
+            self.ctx = dataclasses.replace(
+                self.ctx, tp=TPSpec(mesh=mesh, axis="model"))
         self.slots = slots
         self.paged = paged
         self.page_size = page_size
@@ -107,6 +121,19 @@ class Server:
             self.cache = transformer.init_cache(cfg, slots, cache_len,
                                                 kv_dtype=kv_dtype)
             self.paged_mask = None
+
+        if mesh is not None:
+            # place packed weights by the serve sharding rules (column: N
+            # over "model"; row: packed-K words over "model" — guarded by
+            # pack.shardable_words) and the cache per-data-shard (pool pages
+            # / slab slots over "data"); non-dividing axes replicate. The
+            # shard_map in qgemm then consumes the shards in place.
+            from repro.launch import sharding as shardlib
+            self.params = jax.device_put(
+                self.params,
+                shardlib.param_shardings(mesh, self.params, fsdp=False))
+            self.cache = jax.device_put(
+                self.cache, shardlib.serve_cache_shardings(mesh, self.cache))
 
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
@@ -264,6 +291,12 @@ def main(argv=None):
                          "through kernels.dispatch.qgemm)")
     ap.add_argument("--impl", default="popcount", choices=("popcount", "mxu"),
                     help="binary/ternary GEMM formulation")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="tensor-parallel serving: build a ('data','model') "
+                         "mesh of this shape and run qgemm under shard_map "
+                         "(e.g. --mesh 2,4; needs data*model visible devices "
+                         "— on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     grp = ap.add_mutually_exclusive_group()
     grp.add_argument("--paged", dest="paged", action="store_true", default=True,
                      help="paged KV cache (default): block pool + page table")
@@ -281,6 +314,18 @@ def main(argv=None):
     if args.policy:
         cfg = dataclasses.replace(cfg, policy=args.policy)
 
+    mesh = None
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.split(","))
+        if d * m > len(jax.devices()):
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {d * m} devices, have "
+                f"{len(jax.devices())} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={d * m} on CPU)")
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        print(f"mesh: data={d} x model={m} ({d * m} devices); "
+              f"qgemm under shard_map, paged pool sharded over data")
+
     params = transformer.init(jax.random.PRNGKey(0), cfg)
     sparams = transformer.pack_for_serve(params, cfg)
     train_b = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
@@ -290,7 +335,7 @@ def main(argv=None):
 
     srv = Server(cfg, sparams, slots=args.slots, cache_len=args.cache_len,
                  paged=args.paged, page_size=args.page_size,
-                 num_pages=args.num_pages,
+                 num_pages=args.num_pages, mesh=mesh,
                  ctx=ModelCtx(mode="serve", backend=args.backend,
                               impl=args.impl))
     rng = np.random.default_rng(0)

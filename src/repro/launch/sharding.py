@@ -28,6 +28,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import pack
 from .mesh import dp_axes
 
 def abstract_mesh(shape=(16, 16), axes=("data", "model")):
@@ -176,10 +177,42 @@ def fit_spec(spec: P, shape, mesh: Mesh) -> P:
     return P(*out)
 
 
+def _guard_packed_k(spec: P, path, leaf, mesh) -> P:
+    """Packed-weight guard: the serve rules shard the *packed* last axis of
+    `w_packed`/`w_mask`/`w_sign` (K/32-bit words). A shard boundary must
+    never fall inside a packed word, so the axis is only shardable when each
+    shard keeps a whole number of words — i.e. the unpacked K divides
+    pack_factor(32) x shard_count; a non-dividing packed K falls back to
+    replicated instead of a mid-word split.
+
+    Today `fit_spec`'s generic element-count check happens to drop the same
+    axes (the packed dim IS counted in words), so this guard exists for two
+    other reasons: it names the whole-word invariant explicitly, and it
+    routes through `core.pack.shardable_words` — the exact predicate
+    `kernels.dispatch.tp_plan` uses — so if `fit_spec` is ever relaxed
+    (e.g. to allow GSPMD's padded uneven sharding), packed leaves still
+    refuse mid-word splits and the device layout can never disagree with
+    the shard_map compute."""
+    names = _names(path)
+    if not names or names[-1] not in _PACKED:
+        return spec
+    dims = list(spec) + [None] * (leaf.ndim - len(spec))
+    d = dims[-1]
+    if d is None:
+        return spec
+    axes = d if isinstance(d, tuple) else (d,)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    if not pack.shardable_words(leaf.shape[-1], n):
+        dims[-1] = None
+    return P(*dims)
+
+
 def param_shardings(mesh: Mesh, param_tree, *, fsdp: bool = True):
     """NamedSharding tree for parameters (train or serve layout)."""
     def one(path, leaf):
-        spec = fit_spec(param_spec(path, leaf, fsdp=fsdp), leaf.shape, mesh)
+        spec = _guard_packed_k(param_spec(path, leaf, fsdp=fsdp),
+                               path, leaf, mesh)
+        spec = fit_spec(spec, leaf.shape, mesh)
         return NamedSharding(mesh, spec)
     return jax.tree_util.tree_map_with_path(one, param_tree)
 
@@ -217,6 +250,31 @@ def batch_shardings(mesh: Mesh, batch_tree, *, global_batch: int):
         spec = P(axes if axes else None, *([None] * (leaf.ndim - 1)))
         return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
     return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def serve_cache_shardings(mesh: Mesh, cache_tree):
+    """NamedSharding tree for the continuous-batching server's cache.
+
+    Every leaf shards its leading content axis over "data": for paged pool
+    leaves (num_pages, page_size, Hk, dh) that is the *page* axis — whole
+    pages per shard, so a page's tokens stay device-local and the decode
+    gather/scatter through the page table is exact — and for slab leaves
+    (window rings, recurrent state, cross-KV) it is the *slot* axis — whole
+    requests per shard. The host PageTable (admission, free list) stays
+    global numpy; scanned mid-stack leaves carry a leading (n_periods,) dim
+    that stays unsharded. Axes the mesh does not divide fall back to
+    replicated (fit_spec), e.g. the default pool of slots*max_pages+1 pages
+    (the +1 scratch page makes it odd).
+    """
+    def one(path, leaf):
+        names = _names(path)
+        lead = 1 if "mid" in names else 0
+        dims = [None] * leaf.ndim
+        if leaf.ndim > lead and "data" in mesh.axis_names:
+            dims[lead] = "data"        # page axis (pool) or slot axis (slab)
+        return NamedSharding(mesh, fit_spec(P(*dims), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
 
 
 def cache_shardings(mesh: Mesh, cache_tree, *, batch: int):

@@ -49,14 +49,19 @@ class AttnSpecs:
 
 def attn_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False,
                cross: bool = False) -> AttnSpecs:
+    # Megatron pairing for serve TP: qkv is column-parallel (head/out dim
+    # sharded, no collective), the out projection is row-parallel (packed-K
+    # sharded, one pre-requant psum) — so each attention block costs exactly
+    # one TP collective. Only active when a serve mesh threads ctx.tp.
     h, hk, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
-    mk = lambda lc, i, o, bias=False: common.lspec(
-        pol, lc, i, o, first=first, last=last, bias=bias)
+    mk = lambda lc, i, o, bias=False, par="none": common.lspec(
+        pol, lc, i, o, first=first, last=last, bias=bias, parallel=par)
     return AttnSpecs(
-        qkv=mk("attn_qkv", d, (h + 2 * hk) * dh, bias=cfg.qkv_bias),
-        out=mk("attn_out", h * dh, d),
-        cross_q=mk("attn_qkv", d, h * dh) if cross else None,
-        cross_kv=mk("attn_qkv", d, 2 * hk * dh) if cross else None,
+        qkv=mk("attn_qkv", d, (h + 2 * hk) * dh, bias=cfg.qkv_bias,
+               par="column"),
+        out=mk("attn_out", h * dh, d, par="row"),
+        cross_q=mk("attn_qkv", d, h * dh, par="column") if cross else None,
+        cross_kv=mk("attn_qkv", d, 2 * hk * dh, par="column") if cross else None,
     )
 
 
@@ -212,6 +217,13 @@ def attn_apply(p, x, specs: AttnSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
         positions = jnp.arange(t)
     q = common.rope(q, positions, cfg.rope_theta)
     k = common.rope(k, positions, cfg.rope_theta)
+    # serve TP: heads arrive model-sharded from the column-parallel qkv
+    # shard_map (its out_specs put the fused head dim on the model axis) and
+    # GSPMD propagates that through split/rope into the per-head score/AV
+    # einsums. Do NOT re-pin the head axis with an explicit
+    # with_sharding_constraint here: on the CPU SPMD backend that constraint
+    # miscompiles the blocked-attention scan (wrong values, not just layout
+    # churn) — the serving TP oracle in tests/test_serving_tp.py catches it.
     if (ctx.backend == "pallas" and not window and t % 256 == 0
             and ctx.attn_cp is None):
         # TPU deployment path: fused flash-attention kernel (kernels/flash_attn)
@@ -320,6 +332,8 @@ def attn_decode(p, x, cache, pos, specs: AttnSpecs, cfg: ArchConfig,
     posv = posb[:, None]
     q = common.rope(q, posv, cfg.rope_theta)
     k_new = common.rope(k_new, posv, cfg.rope_theta)
+    # serve TP: head-sharded decode falls out of the column-parallel qkv
+    # shard_map out_specs (see attn_apply — no explicit head re-pin here)
 
     cd = cache["k"].dtype
     kq, vq = _kv_quant(k_new, cd)[:, 0], _kv_quant(v_new, cd)[:, 0]  # (B,Hk,dh)

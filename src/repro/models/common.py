@@ -31,6 +31,10 @@ class ModelCtx:
                                  # group — head-count agnostic, unlike head-TP)
     fsdp_wire: str = "dense"     # "packed": FSDP gathers move the 1/2/8-bit
                                  # planes instead of bf16 weights (§Perf B)
+    tp: object | None = None     # kernels.dispatch.TPSpec: serve-mode tensor
+                                 # parallelism — qgemm runs under shard_map in
+                                 # each layer's spec.parallel role (set by the
+                                 # --mesh serving driver; None everywhere else)
 
 
 TRAIN = ModelCtx(mode="train")
@@ -55,14 +59,24 @@ def shard_spec(x, ctx: "ModelCtx", *dims):
     return jax.lax.with_sharding_constraint(x, P(tuple(ctx.act_dp), *dims))
 
 
+# NOTE (serve TP): there is deliberately no "pin this activation axis to the
+# model mesh axis" helper for the serve path. Head sharding flows from the
+# column-parallel qkv shard_map out_specs; an explicit
+# with_sharding_constraint on the head axis made the CPU SPMD partitioner
+# miscompile the blocked-attention scan (value-level divergence caught by
+# tests/test_serving_tp.py's token-exact oracle). Let the shard_map
+# boundaries dictate placement instead.
+
+
 # -- linear helper ------------------------------------------------------------
 
 def lspec(pol: PrecisionPolicy, layer_class: str, in_dim: int, out_dim: int, *,
           first: bool = False, last: bool = False, bias: bool = False,
-          experts: int = 0, name: str = "") -> QLinearSpec:
+          experts: int = 0, name: str = "",
+          parallel: str = "none") -> QLinearSpec:
     lq = pol.lookup(layer_class, is_first=first, is_last=last)
     return QLinearSpec(in_dim, out_dim, lq, use_bias=bias, experts=experts,
-                       name=name or layer_class)
+                       name=name or layer_class, parallel=parallel)
 
 
 def linear_init(rng, spec: QLinearSpec, dtype=jnp.float32):
@@ -71,7 +85,7 @@ def linear_init(rng, spec: QLinearSpec, dtype=jnp.float32):
 
 def linear_apply(p, x, spec: QLinearSpec, ctx: ModelCtx):
     y = qlinear.apply(p, x, spec, mode=ctx.mode, impl=ctx.impl,
-                      backend=ctx.backend, wire=ctx.fsdp_wire)
+                      backend=ctx.backend, wire=ctx.fsdp_wire, tp=ctx.tp)
     return y.astype(ctx.dtype)
 
 

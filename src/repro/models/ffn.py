@@ -31,11 +31,16 @@ class FFNSpecs:
 
 def ffn_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False,
               d_ff: int = 0) -> FFNSpecs:
+    # serve TP (Megatron pairing): up is column-parallel (hidden dim sharded,
+    # no collective), down is row-parallel (packed-K sharded, one
+    # pre-requant int32 psum per block)
     f = d_ff or cfg.d_ff
     up_out = 2 * f if cfg.gated_ffn else f
     return FFNSpecs(
-        up=common.lspec(pol, "ffn_up", cfg.d_model, up_out, first=first, last=last),
-        down=common.lspec(pol, "ffn_down", f, cfg.d_model, first=first, last=last),
+        up=common.lspec(pol, "ffn_up", cfg.d_model, up_out, first=first,
+                        last=last, parallel="column"),
+        down=common.lspec(pol, "ffn_down", f, cfg.d_model, first=first,
+                          last=last, parallel="row"),
         gated=cfg.gated_ffn,
         act=cfg.act_fn,
     )

@@ -44,10 +44,17 @@ class MoESpecs:
 def moe_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False) -> MoESpecs:
     e, f, d = cfg.n_experts, cfg.d_ff, cfg.d_model
     up_out = 2 * f if cfg.gated_ffn else f
+    # serve TP: Megatron pairing *within* each expert — the expert axis stays
+    # unsharded (leading None in the shard_map specs) while each expert's
+    # up/down shard N / packed-K over the model axis; the row-parallel psum
+    # covers the whole expert stack in one collective (dispatch/combine
+    # einsums stay global). The router is tiny and replicated.
     return MoESpecs(
         router=common.lspec(pol, "moe_router", d, e),
-        up=common.lspec(pol, "moe_expert", d, up_out, first=first, last=last, experts=e),
-        down=common.lspec(pol, "moe_expert", f, d, first=first, last=last, experts=e),
+        up=common.lspec(pol, "moe_expert", d, up_out, first=first, last=last,
+                        experts=e, parallel="column"),
+        down=common.lspec(pol, "moe_expert", f, d, first=first, last=last,
+                          experts=e, parallel="row"),
         shared=(ffn.ffn_specs(cfg, pol, first=first, last=last,
                               d_ff=cfg.n_shared_experts * f)
                 if cfg.n_shared_experts else None),

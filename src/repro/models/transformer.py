@@ -316,7 +316,10 @@ def build_specs(cfg: ArchConfig) -> ModelSpecs:
     rem = tuple(block_specs(cfg, pol, cfg.pattern_at(1 + n_periods * P + t), cross=cross)
                 for t in range(n_rem))
     last = block_specs(cfg, pol, cfg.pattern_at(n - 1), last=True, cross=cross)
-    lm_head = common.lspec(pol, "lm_head", cfg.d_model, cfg.vocab, last=True)
+    # lm_head is column-parallel under serve TP: vocab-sharded logits, no
+    # collective (argmax over the sharded vocab axis is exact)
+    lm_head = common.lspec(pol, "lm_head", cfg.d_model, cfg.vocab, last=True,
+                           parallel="column")
     encoder = tuple(block_specs(cfg, pol, "attn") for _ in range(cfg.encoder_layers))
     return ModelSpecs(cfg, first, mid, rem, last, n_periods, cfg.d_model,
                       lm_head, encoder)

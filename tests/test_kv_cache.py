@@ -102,6 +102,73 @@ def test_admit_rejects_bad_sizes():
         pt.retire(1)
 
 
+def test_pool_device_sharded_over_data_host_table_global():
+    """Paged-KV + sharding interaction: the PageTable admit/extend/retire
+    invariants are pure host-side bookkeeping and must hold unchanged when
+    the page pool itself is device-put with a ("data",) sharding (the
+    tensor-parallel server's per-data-shard pool layout) — and KV written
+    through the table into the sharded pool must read back exactly.
+
+    The host table stays global numpy throughout: device placement of the
+    pool is invisible to the allocator. Runs on however many devices the
+    process has (1 in the tier-1 suite; the 8-device TP suite exercises the
+    genuinely-distributed case end to end in tests/test_serving_tp.py)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("data",))
+    page_size, slots, max_pages = 4, 3, 4
+    num_pages = max(8, 4 * ndev)              # divides the data axis exactly
+    pool = jnp.zeros((num_pages, page_size, 2, 8), jnp.float32)
+    pool = jax.device_put(pool, NamedSharding(mesh, P("data")))
+    assert pool.sharding.spec == P("data")
+
+    pt = PageTable(num_pages, page_size, slots, max_pages)
+    model: dict[int, int] = {}
+
+    def write_tokens(slot, lo, hi):
+        """Store a recognizable value per (slot, logical token) through the
+        page table, exercising cross-shard page ids."""
+        nonlocal pool
+        for tok in range(lo, hi):
+            pid = int(pt.table[slot, tok // page_size])
+            val = float(slot * 1000 + tok + 1)
+            pool = pool.at[pid, tok % page_size].set(val)
+
+    ids = pt.admit(0, 6)
+    model[0] = 6
+    write_tokens(0, 0, 6)
+    pt.admit(1, 3)
+    model[1] = 3
+    write_tokens(1, 0, 3)
+    _check_invariants(pt, model)
+
+    pt.extend(0, 11)                          # grows across a page boundary
+    model[0] = 11
+    write_tokens(0, 6, 11)
+    _check_invariants(pt, model)
+
+    # gather each slot's logical view back from the sharded pool: exact
+    for slot, n in model.items():
+        view = np.asarray(pool[pt.table[slot]]).reshape(-1, 2, 8)
+        for tok in range(n):
+            assert view[tok, 0, 0] == slot * 1000 + tok + 1, (slot, tok)
+
+    freed = pt.retire(0)
+    model.pop(0)
+    assert len(freed) == pages_for(11, page_size)
+    _check_invariants(pt, model)
+    pt.retire(1)
+    model.pop(1)
+    _check_invariants(pt, model)
+    assert pt.free_pages == pt.usable_pages
+    # the table is host numpy, untouched by device placement
+    assert isinstance(pt.table, np.ndarray)
+    assert pool.sharding.spec == P("data")    # placement survived the writes
+
+
 def test_lifo_reuse_and_full_cycle():
     pt = PageTable(5, 2, 2, 2)
     a = pt.admit(0, 4)

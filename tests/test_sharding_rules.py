@@ -70,6 +70,77 @@ def test_serve_packed_specs():
     assert spec == P(None, None, "model")
 
 
+def test_packed_k_rules_guard_non_dividing_pack_factor():
+    """Serve packed-weight rules shard the *packed* last axis of
+    w_packed/w_mask/w_sign (K/32-bit words). A shard boundary must never
+    fall inside a packed word: K must divide pack_factor(32) x shard_count.
+    K=96 -> 3 words does NOT split over a 2-way model axis — the rule must
+    fall back to replicated, not shard mid-word; K=128 -> 4 words does."""
+    from repro.core import pack
+    from repro.core.precision import LayerQuant
+    from repro.core.quantize import QuantSpec
+    from repro.core.qlinear import QLinearSpec, init as qinit, pack_params
+
+    # the shared predicate itself (kernels.dispatch.tp_plan uses the same one)
+    assert pack.shardable_words(4, 2)
+    assert not pack.shardable_words(3, 2)       # 96 ops / (32 * 2): mid-word
+    assert not pack.shardable_words(4, 0)
+
+    mesh = fake_mesh((2, 2))
+    lq = LayerQuant(QuantSpec("ternary"), QuantSpec("ternary"))
+
+    def packed_down(k):
+        spec = QLinearSpec(k, 64, lq)
+        return {"ffn": {"down": pack_params(
+            qinit(jax.random.PRNGKey(0), spec), spec)}}
+
+    ok = sharding.param_shardings(mesh, packed_down(128), fsdp=False)
+    bad = sharding.param_shardings(mesh, packed_down(96), fsdp=False)
+    # dividing packed K: row-parallel words over "model"
+    assert ok["ffn"]["down"]["w_mask"].spec == P(None, "model")
+    assert ok["ffn"]["down"]["w_sign"].spec == P(None, "model")
+    # non-dividing packed K: replicated fallback on the packed axis
+    assert bad["ffn"]["down"]["w_mask"].spec == P(None, None)
+    assert bad["ffn"]["down"]["w_sign"].spec == P(None, None)
+    # and the kernels-side arbiter agrees (layout and compute can't diverge)
+    from repro.kernels import dispatch
+    cell = dispatch.lookup("ternary", "ternary", "popcount")
+    tp = dispatch.TPSpec(sharding.abstract_mesh((2, 2)))
+    assert dispatch.tp_plan(cell, QLinearSpec(128, 64, lq, parallel="row"),
+                            "row", tp) == "row"
+    assert dispatch.tp_plan(cell, QLinearSpec(96, 64, lq, parallel="row"),
+                            "row", tp) is None
+
+
+def test_serve_cache_shardings_pool_over_data():
+    """Paged pool leaves shard the page axis over "data" (whole pages per
+    shard); slab leaves shard the slot axis; non-dividing pools replicate."""
+    from repro.models import transformer
+    from repro.launch import kv_cache
+
+    cfg = get_config("gemma3-4b").reduced()    # windowed: pool + ring slabs
+    mesh = fake_mesh((2, 2))
+    slots, cache_len, num_pages, page_size = 4, 64, 16, 8
+    shapes = transformer.cache_shapes(cfg, slots, cache_len,
+                                      paged=(num_pages, page_size))
+    mask = kv_cache.paged_leaf_mask(cfg, slots, cache_len, num_pages, page_size)
+    sh = sharding.serve_cache_shardings(mesh, shapes)
+    flat_sh, flat_mask = jax.tree.leaves(sh), jax.tree.leaves(mask)
+    assert any(flat_mask) and not all(flat_mask)
+    for s, is_paged in zip(flat_sh, flat_mask):
+        lead = s.spec[0] if len(s.spec) else None
+        assert lead in ("data", None)
+    # the pool (page axis 16 % 2 == 0) really shards; an odd pool doesn't
+    paged_leaf = [s for s, m_ in zip(flat_sh, flat_mask) if m_][0]
+    assert paged_leaf.spec[0] == "data"
+    odd = transformer.cache_shapes(cfg, slots, cache_len, paged=(17, page_size))
+    mask_odd = kv_cache.paged_leaf_mask(cfg, slots, cache_len, 17, page_size)
+    sh_odd = sharding.serve_cache_shardings(mesh, odd)
+    odd_leaf = [s for s, m_ in zip(jax.tree.leaves(sh_odd),
+                                   jax.tree.leaves(mask_odd)) if m_][0]
+    assert odd_leaf.spec[0] is None
+
+
 def test_fit_spec_drops_nondividing():
     mesh = fake_mesh()
     assert sharding.fit_spec(P("model", None), (51865, 384), mesh) == P(None, None)
