@@ -20,7 +20,8 @@ from repro.core.quantize import PACK_FACTOR
 from repro.models import registry, transformer
 from repro.models.common import TRAIN
 
-POLICIES = ("none", "int8", "w-ternary", "mixed", "binary")
+POLICIES = ("none", "int8", "w-ternary", "mixed", "binary",
+            "wt-a8", "w4a8", "het")
 
 
 def run(quick: bool = True) -> dict:
@@ -46,8 +47,12 @@ def main():
     print("# flexibility (paper Table I rows: full-utilization conditions + support)")
     print("## utilization conditions (v_C analogue)")
     print("precision,packing(ops/word),K_multiple_of,TP_axis_multiple")
+    # K granularity = the storage-word quantum (pack.K_QUANTUM): 32 for the
+    # bit-plane formats (a trit spans two 32-bit planes), 8 for s4 nibbles,
+    # 4 for int8's native byte layout
+    k_mult = {"binary": 32, "ternary": 32, "int4": 8, "int8": 4}
     for p, f in PACK_FACTOR.items():
-        print(f"{p},{f},{32 if p != 'int8' else 4},16")
+        print(f"{p},{f},{k_mult[p]},16")
     sup = run()
     print("## arch x policy support matrix")
     print("arch," + ",".join(POLICIES))

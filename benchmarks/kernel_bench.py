@@ -1,73 +1,171 @@
-"""Pallas kernel micro-bench: interpret-mode wall time (correctness-scale) +
-the analytic TPU tile model for each kernel's BlockSpec choice.
+"""Dispatch-registry micro-bench: interpret-mode wall time (correctness-scale)
++ the analytic TPU tile model, for EVERY registered operating point.
 
-Driven by the `repro.kernels.dispatch` registry: every registered operating
-point with a Pallas MacBody is benched through the single `qgemm` entry
-point (so the bench exercises exactly the code the serve stack runs —
-activation prep, padding, fused bias epilogue and all). Registering a new
-precision/kernel variant adds a bench row automatically.
+Driven by the `repro.kernels.dispatch` registry: each cell is benched through
+the single `qgemm` entry point keyed by its `OperatingPoint` (so the bench
+exercises exactly the code the serve stack runs — activation prep, padding,
+TuneTable tile resolution, fused bias epilogue and all). Cells with a Pallas
+MacBody run on the pallas backend; weight-only/dense cells run their jnp
+formulation. Registering a new precision/kernel variant adds a bench row
+automatically.
 
 Wall time in interpret mode is NOT TPU performance — it validates the
 kernels execute and lets us compare formulations structurally. The derived
-column is the VMEM working set of the default block shapes (must be
-<< 128 MiB), from `harness.vmem_tile_bytes`.
+column is the VMEM working set of the resolved tile (must be << 128 MiB),
+from `harness.vmem_tile_bytes`.
+
+Outputs:
+  * a CSV-ish table on stdout (the `benchmarks.run` report format)
+  * `BENCH_dispatch.json` — the machine-readable per-operating-point
+    baseline the perf trajectory tracks across PRs (--out to relocate)
+  * `--retune` — sweep candidate `Tile`s per cell and rewrite the shipped
+    `kernels/tune_cpu.json` TuneTable (the "autotune per operating point"
+    data file; rerun on real TPU hardware with interpret off)
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import qlinear
 from repro.core.precision import LayerQuant
 from repro.core.quantize import QuantSpec
 from repro.kernels import dispatch, harness
+from repro.kernels.dispatch import OperatingPoint, Tile, TuneTable
+
+M, K, N = 128, 1024, 128
+
+
+def _cell_problem(cell, seed=0):
+    spec = qlinear.QLinearSpec(
+        K, N, LayerQuant(QuantSpec(cell.wprec), QuantSpec(cell.aprec)))
+    p = qlinear.pack_params(
+        qlinear.init(jax.random.PRNGKey(seed), spec), spec)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, K)) * 0.2
+    return spec, p, x
+
+
+def _cell_op(cell, tile: Tile | None = None) -> OperatingPoint:
+    impl = "popcount" if cell.impl == "*" else cell.impl
+    backend = "pallas" if cell.body is not None else "jnp"
+    return OperatingPoint(cell.wprec, cell.aprec, impl, backend, tile=tile)
+
+
+def _time_us(fn, reps: int = 3) -> float:
+    jax.block_until_ready(fn())                       # compile outside timing
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def run():
-    m, k, n = 128, 1024, 128
     rows = []
-
     for key in sorted(dispatch.cells()):
         cell = dispatch.cells()[key]
-        if cell.body is None:        # weight-only/dense: no packed kernel
-            continue
-        spec = qlinear.QLinearSpec(
-            k, n, LayerQuant(QuantSpec(cell.wprec), QuantSpec(cell.aprec)))
-        p = qlinear.pack_params(
-            qlinear.init(jax.random.PRNGKey(0), spec), spec)
-        x = jax.random.normal(jax.random.PRNGKey(1), (m, k)) * 0.2
-        impl = "popcount" if cell.impl == "*" else cell.impl
-        y = dispatch.qgemm(p, x, spec, impl=impl, backend="pallas")
-        jax.block_until_ready(y)                      # compile outside timing
-        t0 = time.perf_counter()
-        jax.block_until_ready(
-            dispatch.qgemm(p, x, spec, impl=impl, backend="pallas"))
-        dt = time.perf_counter() - t0
-        rows.append((cell.body.name, dt * 1e6,
-                     f"vmem={harness.vmem_tile_bytes(cell.body)/2**10:.0f}KiB"))
+        spec, p, x = _cell_problem(cell)
+        op = _cell_op(cell)
+        us = _time_us(lambda: dispatch.qgemm(p, x, spec, op))
+        tile = op.tile or dispatch.default_tune().tile_for(op) or Tile()
+        vmem = (harness.vmem_tile_bytes(cell.body, tile)
+                if cell.body is not None else None)
+        rows.append({
+            "op": {"wprec": op.wprec, "aprec": op.aprec, "impl": op.impl,
+                   "backend": op.backend},
+            "name": cell.body.name if cell.body is not None else cell.tag,
+            "us_per_call": round(us, 1),
+            "tile": {"bm": tile.bm, "bn": tile.bn, "bkq": tile.bkq},
+            "vmem_tile_bytes": vmem,
+        })
 
     from repro.kernels.flash_attn import flash_attention
     ks3 = jax.random.split(jax.random.PRNGKey(3), 3)
     qf = jax.random.normal(ks3[0], (4, 256, 64), jnp.float32)
     kf = jax.random.normal(ks3[1], (2, 256, 64), jnp.float32)
     vf = jax.random.normal(ks3[2], (2, 256, 64), jnp.float32)
-    fa = lambda: flash_attention(qf, kf, vf, causal=True, bq=128, bk=128)
-    jax.block_until_ready(fa())                       # compile outside timing
-    t0 = time.perf_counter()
-    jax.block_until_ready(fa())
-    rows.append(("flash_attn", (time.perf_counter() - t0) * 1e6,
-                 f"vmem={(128*64*4*2 + 128*64*4 + 2*128*4)/2**10:.0f}KiB"))
+    fa_us = _time_us(lambda: flash_attention(qf, kf, vf, causal=True,
+                                             bq=128, bk=128))
+    rows.append({"op": None, "name": "flash_attn",
+                 "us_per_call": round(fa_us, 1), "tile": None,
+                 "vmem_tile_bytes": 128 * 64 * 4 * 2 + 128 * 64 * 4 + 2 * 128 * 4})
     return rows
 
 
-def main():
+def retune(out_path: str, reps: int = 2) -> TuneTable:
+    """Sweep candidate Tiles per Pallas cell, keep the fastest, save a
+    TuneTable. Interpret-mode-on-CPU numbers — a structural baseline; rerun
+    with REPRO_PALLAS_INTERPRET=0 on real hardware for production tables."""
+    tiles: dict[tuple, Tile] = {}
+    for key in sorted(dispatch.cells()):
+        cell = dispatch.cells()[key]
+        if cell.body is None:
+            continue
+        spec, p, x = _cell_problem(cell)
+        dflt = cell.body.default_bkq
+        candidates = [Tile(128, 128, dflt), Tile(64, 128, dflt),
+                      Tile(128, 128, max(dflt // 2, 1)),
+                      Tile(128, 128, dflt * 2)]
+        best, best_us = None, float("inf")
+        for tile in candidates:
+            op = _cell_op(cell, tile=tile)
+            us = _time_us(lambda: dispatch.qgemm(p, x, spec, op), reps=reps)
+            if us < best_us:
+                best, best_us = tile, us
+        tiles[cell.key] = best
+        print(f"  {cell.tag:24s} -> bm={best.bm} bn={best.bn} "
+              f"bkq={best.bkq} ({best_us:.0f}us)")
+    table = TuneTable(
+        tiles=tiles,
+        source=f"kernel_bench --retune: interpret-mode CPU, m{M} k{K} n{N}, "
+               f"jax {jax.__version__}")
+    table.save(out_path)
+    print(f"wrote {len(tiles)} cell tiles to {out_path}")
+    return table
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_dispatch.json",
+                    help="per-operating-point baseline JSON (perf trajectory)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="stdout table only (benchmarks.run aggregate mode)")
+    ap.add_argument("--retune", action="store_true",
+                    help="sweep Tiles per cell and rewrite the shipped "
+                         "TuneTable instead of benching")
+    ap.add_argument("--tune-out", default=dispatch.DEFAULT_TUNE_PATH)
+    args = ap.parse_args(argv)
+
+    if args.retune:
+        print("# kernel_bench --retune (per-cell Tile sweep)")
+        retune(args.tune_out)
+        return
+
     print("# kernel_bench (interpret-mode validation + VMEM tile model)")
-    print("name,us_per_call,derived")
-    for name, us, d in run():
-        print(f"{name},{us:.0f},{d}")
+    print("op,name,us_per_call,tile,vmem")
+    rows = run()
+    for r in rows:
+        op = r["op"]
+        optag = (f"w{op['wprec']}/a{op['aprec']}/{op['impl']}@{op['backend']}"
+                 if op else "-")
+        tile = r["tile"]
+        tstr = f"{tile['bm']}x{tile['bn']}x{tile['bkq']}" if tile else "-"
+        vm = (f"{r['vmem_tile_bytes']/2**10:.0f}KiB"
+              if r["vmem_tile_bytes"] else "-")
+        print(f"{optag},{r['name']},{r['us_per_call']:.0f},{tstr},{vm}")
+    if not args.no_json:
+        with open(args.out, "w") as f:
+            json.dump({"bench": "dispatch_qgemm", "m": M, "k": K, "n": N,
+                       "interpret": dispatch.INTERPRET,
+                       "tune_source": dispatch.default_tune().source,
+                       "rows": rows}, f, indent=2)
+            f.write("\n")
+        print(f"(baseline written to {args.out})")
 
 
 if __name__ == "__main__":

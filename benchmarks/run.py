@@ -25,7 +25,7 @@ def main() -> None:
 
     benches = [("energy_proxy", energy_proxy.main),
                ("throughput", throughput.main),
-               ("kernel_bench", kernel_bench.main)]
+               ("kernel_bench", lambda: kernel_bench.main(["--no-json"]))]
     if not args.quick:
         from benchmarks import qat_quality, serve_bench
         benches += [("flexibility", flexibility.main),

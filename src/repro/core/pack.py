@@ -22,6 +22,14 @@ import jax
 import jax.numpy as jnp
 
 WORD = 32  # bits per packed word
+NIBBLES = 8  # int4 codes per 32-bit word (v_C=8 for the s4 format)
+
+#: K elements per unit of each packed leaf's storage axis — THE pack-factor
+#: table every layer consults (`kernels.dispatch.tp_plan` for shard_map
+#: compute, `launch.sharding` for device layout). A leaf absent here is
+#: unpacked (one element per storage unit).
+K_QUANTUM = {"w_packed": WORD, "w_mask": WORD, "w_sign": WORD,
+             "w_q4": NIBBLES}
 
 
 def shardable_words(units: int, n_shards: int) -> bool:
@@ -109,6 +117,36 @@ def unpack_ternary_i8(mask_words: jnp.ndarray, sign_words: jnp.ndarray,
     mask = unpack_bits(mask_words, k).astype(jnp.int8)
     sign = unpack_bits(sign_words, k).astype(jnp.int8)
     return mask * (1 - 2 * sign)
+
+
+# -- int4 (s4 nibble codes, 8 per word) --------------------------------------
+
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack s4 codes in [-8,7] (int dtype, last axis = K) into uint32 words.
+
+    Nibble j of word i holds code[..., i*8+j] in two's complement
+    (little-endian within the word), so K/8 words per row — v_C=8.
+    """
+    k = codes.shape[-1]
+    if k % NIBBLES:
+        raise ValueError(f"int4 packing axis length {k} not a multiple of {NIBBLES}")
+    c = codes.astype(jnp.int32) & 0xF
+    c = c.reshape(*codes.shape[:-1], k // NIBBLES, NIBBLES)
+    shifts = jnp.arange(NIBBLES, dtype=jnp.uint32) * 4
+    return jnp.sum(c.astype(jnp.uint32) << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_int4_i8(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Unpack s4 nibble words to int8 codes along a last axis of length k.
+
+    The canonical word->operand decoder for the int4 MXU formulations — the
+    jnp accumulator and the Pallas MacBody both call this, so jnp-vs-pallas
+    equivalence stays an algebra check. Sign extension is arithmetic
+    (nibble >= 8 => nibble - 16), keeping the whole path integer."""
+    shifts = jnp.arange(NIBBLES, dtype=jnp.uint32) * 4
+    nib = ((words[..., None] >> shifts) & jnp.uint32(0xF)).astype(jnp.int32)
+    nib = nib.reshape(*words.shape[:-1], words.shape[-1] * NIBBLES)[..., :k]
+    return jnp.where(nib >= 8, nib - 16, nib).astype(jnp.int8)
 
 
 # -- packed dot products (the XNOR/gated-XNOR algebra, §II-A) ----------------

@@ -84,15 +84,49 @@ POLICIES: dict[str, PrecisionPolicy] = {
                             first_last=_lq("int8", "int8")),
     # mixed: the recipe the paper advocates — int8 first/last, ternary body
     "mixed": PrecisionPolicy("mixed", body=_lq("ternary", "ternary")),
+    # mixed w/a recipes (beyond the paper's matched pairs): weights in the
+    # cheap packed format, activations int8 — the regime the mixed-precision
+    # accelerator line targets (Bruschi'20, Zhao'19). Per-row requant
+    # composes the two scales; the first/last layers stay full int8.
+    "wt-a8": PrecisionPolicy("wt-a8", body=_lq("ternary", "int8")),
+    "w4a8": PrecisionPolicy("w4a8", body=_lq("int4", "int8")),
+    # heterogeneous per-layer-class demo: each layer class picks its own
+    # operating point (the serve path resolves them per layer, not from a
+    # global flag pair) — ffn_up tolerates s4 weights, attn_out keeps trits,
+    # qkv stays int8; all activations int8 so the residual stream requants
+    # uniformly.
+    "het": PrecisionPolicy("het", body=_lq("ternary", "int8"), per_class={
+        "ffn_up": _lq("int4", "int8"),
+        "ffn_down": _lq("ternary", "int8"),
+        "attn_qkv": _lq("int8", "int8"),
+        "attn_out": _lq("ternary", "int8"),
+        "moe_expert": _lq("int4", "int8"),
+    }),
     # weight-only variants (useful for LLMs: activations stay bf16)
     "w-binary": PrecisionPolicy("w-binary", body=_lq("binary", "none"),
                                 first_last=_lq("int8", "none")),
     "w-ternary": PrecisionPolicy("w-ternary", body=_lq("ternary", "none"),
                                  first_last=_lq("int8", "none")),
+    "w-int4": PrecisionPolicy("w-int4", body=_lq("int4", "none"),
+                              first_last=_lq("int8", "none")),
     "w-int8": PrecisionPolicy("w-int8", body=_lq("int8", "none")),
     # no quantization — the fp/bf16 baseline every comparison needs
     "none": PrecisionPolicy("none", body=LayerQuant(), first_last=LayerQuant()),
 }
+
+
+def policy_operating_points() -> set[tuple[str, str]]:
+    """Every (wprec, aprec) pair the POLICIES table can assign to some layer
+    — the registry-completeness tests regenerate their sweep from this, so
+    a new policy entry automatically extends the coverage obligation on the
+    dispatch registry."""
+    pts = set()
+    for pol in POLICIES.values():
+        for lc in LAYER_CLASSES:
+            for first, last in ((False, False), (True, False), (False, True)):
+                lq = pol.lookup(lc, is_first=first, is_last=last)
+                pts.add((lq.weights.precision, lq.acts.precision))
+    return pts
 
 
 def get_policy(name: str) -> PrecisionPolicy:

@@ -6,19 +6,24 @@ projections, LM head). It has three execution backends:
   mode="train"  QAT: STE fake-quant of weights/activations, bf16 MXU matmul.
                 This is what `train_step` lowers; the SoC does not train, a
                 pod framework must (DESIGN.md §2).
-  mode="serve"  packed inference: weights stored in the bit-plane format of
-                `core.pack` (32/16 operands per word for binary/ternary,
-                int8 codes for 8-bit), activations quantized on the fly.
-                Two GEMM formulations are selectable:
+  mode="serve"  packed inference: weights stored in the packed format of
+                `core.pack` (32/16/8 operands per word for
+                binary/ternary/int4, int8 codes for 8-bit), activations
+                quantized on the fly. The layer's `dispatch.OperatingPoint`
+                (`op=`) selects the registered cell and its execution:
                   impl="popcount"  paper-faithful XNOR/gated-XNOR + popcount
                                    (VPU path on TPU)
                   impl="mxu"       beyond-paper: unpack packed planes to ±1
                                    int8 *in VMEM* and use the int8 MXU path —
                                    packed HBM storage, dense-rate compute.
-  backend="pallas"  serve-mode GEMMs run the Pallas TPU kernels registered in
-                `repro.kernels.dispatch` (interpret-validated on CPU); "jnp"
-                runs the same registry's XLA formulations (CPU dry-run path).
-                Both backends share one qgemm entry point per operating point.
+                  backend="pallas" runs the Pallas TPU kernels registered in
+                                   `repro.kernels.dispatch` (interpret-
+                                   validated on CPU); "jnp" runs the same
+                                   registry's XLA formulations.
+                  tile             optional harness.Tile block override
+                                   (else the per-cell TuneTable).
+                Weight and activation precisions may differ per layer
+                (mixed w/a cells — see docs/DISPATCH.md).
 
 Weight layout (train): w[in, out] (+ optional expert axis in front).
 Weight layout (serve): precision-dependent, produced by `pack_params`.
@@ -33,8 +38,8 @@ import jax.numpy as jnp
 
 from . import pack
 from .precision import LayerQuant
-from .quantize import (QuantSpec, binarize, fake_quant, int8_codes,
-                       int8_scale, ternarize)
+from .quantize import (QuantSpec, binarize, fake_quant, int4_codes,
+                       int4_scale, int8_codes, int8_scale, ternarize)
 
 Params = dict[str, jnp.ndarray]
 
@@ -189,10 +194,15 @@ def pack_params(p: Params, spec: QLinearSpec) -> Params:
              w_scale   f32[(E,) out]               (XNOR-Net per-channel alpha)
     ternary: w_mask/w_sign uint32[(E,) out, in/32]
              w_scale   f32[(E,) out]
+    int4   : w_q4      uint32[(E,) out, in/8]      (s4 nibble codes, v_C=8)
+             w_scale   f32[(E,) out]
     int8   : w_q       int8[(E,) in, out]
              w_scale   f32[(E,) out]
     none   : w         bf16 (dense weights, cast)
     `a_scale` (f32 scalar) is a calibrated activation scale for int8 acts.
+    Weight and activation precisions are independent (mixed w/a operating
+    points): the weight layout above composes with whatever `a_scale` the
+    activation precision needs.
     """
     w = p["w"].astype(jnp.float32)
     prec = spec.lq.weights.precision
@@ -208,6 +218,10 @@ def pack_params(p: Params, spec: QLinearSpec) -> Params:
         out["w_mask"], out["w_sign"] = m, s
         nz = jnp.sum(jnp.abs(q), axis=-1) + 1e-6
         out["w_scale"] = jnp.sum(jnp.abs(wt) * jnp.abs(q), axis=-1) / nz
+    elif prec == "int4":
+        s = int4_scale(wt, axis=-1)            # per-out-channel, reduce in
+        out["w_q4"] = pack.pack_int4(int4_codes(wt, s))
+        out["w_scale"] = jnp.squeeze(s, axis=-1)
     elif prec == "int8":
         s = int8_scale(w, axis=(w.ndim - 2,))  # reduce in_dim, keep experts
         out["w_q"] = int8_codes(w, s)
@@ -235,6 +249,9 @@ def serve_param_shapes(spec: QLinearSpec) -> dict[str, jax.ShapeDtypeStruct]:
         out["w_mask"] = sd(e + (n, k // 32), jnp.uint32)
         out["w_sign"] = sd(e + (n, k // 32), jnp.uint32)
         out["w_scale"] = sd(e + (n,), jnp.float32)
+    elif prec == "int4":
+        out["w_q4"] = sd(e + (n, k // pack.NIBBLES), jnp.uint32)
+        out["w_scale"] = sd(e + (n,), jnp.float32)
     elif prec == "int8":
         out["w_q"] = sd(e + (k, n), jnp.int8)
         out["w_scale"] = sd(e + (n,), jnp.float32)
@@ -252,19 +269,24 @@ def serve_param_shapes(spec: QLinearSpec) -> dict[str, jax.ShapeDtypeStruct]:
 # ---------------------------------------------------------------------------
 
 def apply(p: Params, x: jnp.ndarray, spec: QLinearSpec, *,
-          mode: str = "train", impl: str = "popcount",
-          backend: str = "jnp", wire: str = "dense", tp=None) -> jnp.ndarray:
+          mode: str = "train", op=None, impl: str | None = None,
+          backend: str | None = None, wire: str = "dense",
+          tp=None) -> jnp.ndarray:
     """Apply the quantized linear. See module docstring for modes.
 
-    Serve mode routes every (wprec, aprec, impl) operating point through
+    Serve mode routes every operating point through
     `repro.kernels.dispatch.qgemm` — the single owner of activation
     packing, expert vmap and the fused bias/requant epilogue for both the
-    jnp and Pallas backends. `tp` (a `dispatch.TPSpec`) runs the GEMM under
-    shard_map in the layer's `spec.parallel` role (tensor-parallel serve)."""
+    jnp and Pallas backends. `op` (a `dispatch.OperatingPoint`) names the
+    layer's operating point — precisions from the policy's LayerQuant,
+    formulation/backend/tile from the execution context; None derives it
+    from the spec plus the legacy `impl=`/`backend=` string kwargs. `tp`
+    (a `dispatch.TPSpec`) runs the GEMM under shard_map in the layer's
+    `spec.parallel` role (tensor-parallel serve)."""
     if mode == "train":
         return _apply_train(p, x, spec, wire)
     if mode != "serve":
         raise ValueError(f"mode={mode!r}")
     from repro.kernels.dispatch import qgemm   # deferred: core must not pull
-    return qgemm(p, x, spec, impl=impl, backend=backend,   # pallas at import
+    return qgemm(p, x, spec, op, impl=impl, backend=backend,  # pallas at import
                  tp=tp, parallel=spec.parallel)

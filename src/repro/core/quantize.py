@@ -20,14 +20,15 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-Precision = Literal["binary", "ternary", "int8", "none"]
+Precision = Literal["binary", "ternary", "int4", "int8", "none"]
 
 #: bits per operand for each precision (paper Table I / §IV-B: v_C = 32/16/4
-#: operands per 32-bit word => 1/2/8 bits each).
-BITS = {"binary": 1, "ternary": 2, "int8": 8, "none": 16}
+#: operands per 32-bit word => 1/2/8 bits each; int4 is the beyond-paper
+#: s4-codes point between ternary and int8).
+BITS = {"binary": 1, "ternary": 2, "int4": 4, "int8": 8, "none": 16}
 
 #: packing density: operands per 32-bit word (paper's v_C for a 32-bit lane).
-PACK_FACTOR = {"binary": 32, "ternary": 16, "int8": 4}
+PACK_FACTOR = {"binary": 32, "ternary": 16, "int4": 8, "int8": 4}
 
 
 def _ste(fwd: jnp.ndarray, grad_path: jnp.ndarray) -> jnp.ndarray:
@@ -90,6 +91,31 @@ def int8_codes(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# int4 (symmetric, per-channel scale; s4 codes clipped to ±7)
+# ---------------------------------------------------------------------------
+
+def int4_scale(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    """Symmetric per-channel scale: max|x| / 7 (axis=None => per-tensor).
+
+    The ±7 symmetric range (not the full two's-complement -8) keeps the codec
+    sign-symmetric like the int8 path — dequant(q) = -dequant(-q) — so the
+    serve requant algebra is identical across the integer precisions."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return amax / 7.0 + 1e-12
+
+
+def quantize_int4(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quant int4 with STE: round(x/s) clipped to [-7,7], times s."""
+    q = jnp.clip(jnp.round(x / scale), -7.0, 7.0) * scale
+    return _ste(q.astype(x.dtype), x)
+
+
+def int4_codes(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Integer s4 codes (held in int8 until `pack.pack_int4` nibble-packs)."""
+    return jnp.clip(jnp.round(x / scale), -7, 7).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
 # unified fake-quant entry point
 # ---------------------------------------------------------------------------
 
@@ -132,4 +158,8 @@ def fake_quant(x: jnp.ndarray, spec: QuantSpec, scale_axis=None) -> jnp.ndarray:
         axis = tuple(range(x.ndim - 1)) if spec.per_channel else None
         s = jax.lax.stop_gradient(int8_scale(x, axis=axis))
         return quantize_int8(x, s)
+    if spec.precision == "int4":
+        axis = tuple(range(x.ndim - 1)) if spec.per_channel else None
+        s = jax.lax.stop_gradient(int4_scale(x, axis=axis))
+        return quantize_int4(x, s)
     raise ValueError(f"unknown precision {spec.precision!r}")

@@ -47,6 +47,8 @@ def requantize(
         return jnp.where(y >= 0, 1.0, -1.0)
     if out_precision == "ternary":
         return jnp.where(y > ternary_threshold, 1.0, jnp.where(y < -ternary_threshold, -1.0, 0.0))
+    if out_precision == "int4":
+        return jnp.clip(jnp.round(y), -7, 7)
     if out_precision == "int8":
         return jnp.clip(jnp.round(y), -127, 127)
     return y  # "none": hand back the rescaled float (residual stream)

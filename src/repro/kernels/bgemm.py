@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import pack
 
-from .harness import MacBody, gemm
+from .harness import MacBody, Tile, gemm
 
 WORD = 32
 
@@ -68,4 +68,4 @@ def bgemm(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
     """Packed binary GEMM: (M, K/32)u32 × (N, K/32)u32 → (M, N) bf16."""
     body = BINARY_POPCOUNT if impl == "popcount" else BINARY_MXU
     return gemm(body, (x_packed,), (w_packed,), w_scale, a_scale,
-                k=k, bm=bm, bn=bn, bkq=bkw, interpret=interpret)
+                k=k, tile=Tile(bm, bn, bkw), interpret=interpret)

@@ -6,15 +6,21 @@ GEMM in the repo — `core.qlinear.apply(mode="serve")`, the Pallas backend
 that used to live in `kernels.ops`, the launch drivers and the benches —
 funnels through
 
-    qgemm(p, x, spec, *, impl, backend)
+    qgemm(p, x, spec, op)
 
-which owns, exactly once, everything the four call sites used to copy:
-activation quantization/packing, M-padding, block-size selection, expert
-vmap, and the bias/requant epilogue (fused in-kernel on the Pallas backend,
-single f32 requant on the jnp backend — no separate bias round-trip).
+where `op` is an `OperatingPoint`: the frozen, structured description of one
+datapath configuration — weight precision, activation precision, kernel
+formulation (`impl`), execution backend, and an optional `Tile` block-shape
+override. `qgemm` owns, exactly once, everything the four call sites used to
+copy: activation quantization/packing, M-padding, block-size selection
+(explicit `Tile` or the per-cell `TuneTable`), expert vmap, and the
+bias/requant epilogue (fused in-kernel on the Pallas backend, single f32
+requant on the jnp backend — no separate bias round-trip).
 
-The registry maps operating points (wprec, aprec, impl) to `GemmCell`s.
-Each cell holds the ONE implementation of its formulation:
+The registry maps operating points to `GemmCell`s, keyed by
+(wprec, aprec, impl) — backend and tile are execution choices, not cells:
+every cell serves both backends. Each cell holds the ONE implementation of
+its formulation:
 
   prep  — activation quantize/pack (shared verbatim by both backends, so
           jnp-vs-pallas equivalence is an algebra check, not a tolerance
@@ -26,15 +32,26 @@ Each cell holds the ONE implementation of its formulation:
           on the MXU — quantizing them here would silently change the
           algebra vs QAT)
 
+Weight and activation precisions may DIFFER per cell (mixed w/a datapath,
+§II-A "some layers are more resilient to quantization than others"): the
+w-ternary × a-int8 cell contracts trit weight planes against int8 activation
+codes, and the int4 cells unpack s4 nibble words — the requant epilogue
+composes the per-channel weight scale with the per-row activation scale
+regardless of how the two sides were quantized.
+
 Adding a precision or kernel variant = one prep/acc/body triple + one
-`register()` call. `impl="*"` marks formulation-agnostic cells (int8 has no
-popcount/mxu split; weight-only cells ignore impl).
+`register()` call. `impl="*"` marks formulation-agnostic cells (int8/int4
+have no popcount/mxu split; weight-only cells ignore impl).
+
+`python -m repro.kernels.dispatch --list` prints the live registry.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import json
 import os
-from typing import Any, Callable
+from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -43,21 +60,68 @@ from jax.sharding import PartitionSpec as P
 from repro.core import pack
 from repro.core.quantize import int8_codes, ternarize
 
-from . import bgemm, i8gemm, tgemm
+from . import bgemm, i4gemm, i8gemm, tgemm
 from . import harness
+from .harness import Tile  # re-export: the OperatingPoint tile override type
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
 #: Pallas kernels need M padded to the sublane multiple.
 PAD_M = 8
 
+_BACKENDS = ("jnp", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """One configuration of the flexible datapath, as a first-class value.
+
+    Replaces the loose (wprec, aprec, impl) string tuples and scattered
+    `impl=`/`backend=` kwargs of the old API. wprec/aprec name the registry
+    cell; impl selects the kernel formulation ("popcount" | "mxu", or "*"
+    when the cell is formulation-agnostic); backend selects where the cell's
+    formulation executes; tile (a `harness.Tile`) overrides the block shapes
+    — when None, `qgemm` consults the per-cell `TuneTable`.
+    """
+    wprec: str = "none"
+    aprec: str = "none"
+    impl: str = "popcount"
+    backend: str = "jnp"
+    tile: Tile | None = None
+
+    def __post_init__(self):
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend={self.backend!r}; have {_BACKENDS}")
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        """The structured registry key (backend/tile are execution choices)."""
+        return (self.wprec, self.aprec, self.impl)
+
+    @property
+    def tag(self) -> str:
+        return f"w{self.wprec[:4]}/a{self.aprec[:4]}/{self.impl}@{self.backend}"
+
+    @classmethod
+    def for_spec(cls, spec, *, impl: str = "popcount", backend: str = "jnp",
+                 tile: Tile | None = None) -> "OperatingPoint":
+        """The per-layer operating point: precisions from the layer's
+        `LayerQuant` (set by the `PrecisionPolicy`), formulation/backend from
+        the execution context. This is how the serve path resolves a
+        heterogeneous policy layer by layer instead of from one global flag
+        pair."""
+        return cls(spec.lq.weights.precision, spec.lq.acts.precision,
+                   impl=impl, backend=backend, tile=tile)
+
 
 @dataclasses.dataclass(frozen=True)
 class GemmCell:
-    """One (wprec, aprec, impl) operating point of the datapath."""
-    wprec: str
-    aprec: str
-    impl: str                       # "popcount" | "mxu" | "*" (agnostic)
+    """One registered operating point of the datapath.
+
+    `op` is the structured registry key (its backend/tile fields are ignored
+    at registration — a cell serves both backends; tiles come from the
+    caller's OperatingPoint or the TuneTable)."""
+    op: OperatingPoint
     weight_names: tuple[str, ...]   # packed-param entries feeding the GEMM
     prep: Callable                  # (x2d, p, spec) -> (x_ops, a_scale|None)
     acc: Callable                   # (x_ops, w_ops, k) -> (M, N) accumulator
@@ -65,12 +129,32 @@ class GemmCell:
     wide: bool = True               # f32 requant (W&A) vs bf16 (weight-only)
 
     @property
+    def wprec(self) -> str:
+        return self.op.wprec
+
+    @property
+    def aprec(self) -> str:
+        return self.op.aprec
+
+    @property
+    def impl(self) -> str:
+        return self.op.impl
+
+    @property
     def key(self) -> tuple[str, str, str]:
-        return (self.wprec, self.aprec, self.impl)
+        return self.op.key
 
     @property
     def tag(self) -> str:
         return f"w{self.wprec[:3]}/a{self.aprec[:3]}/{self.impl}"
+
+    @property
+    def k_quantum(self) -> int:
+        """K elements per storage unit of the cell's packed weight axis —
+        the pack factor tensor-parallel K-sharding must respect (32 for the
+        bit-plane formats, 8 for s4 nibbles, 1 for int8/dense)."""
+        return max((pack.K_QUANTUM.get(nm, 1) for nm in self.weight_names),
+                   default=1)
 
 
 _REGISTRY: dict[tuple[str, str, str], GemmCell] = {}
@@ -83,19 +167,107 @@ def register(cell: GemmCell) -> GemmCell:
     return cell
 
 
-def lookup(wprec: str, aprec: str, impl: str = "popcount") -> GemmCell:
-    """Resolve an operating point; impl falls back to a '*' cell."""
-    for key in ((wprec, aprec, impl), (wprec, aprec, "*")):
-        if key in _REGISTRY:
-            return _REGISTRY[key]
+def _nearest_key(key: tuple[str, str, str]) -> tuple[str, str, str] | None:
+    """Closest registered cell to an unknown key, wildcard-aware: rank by
+    matching wprec, then aprec, then impl (a '*' cell matches any impl)."""
+    def score(have: tuple[str, str, str]) -> tuple[int, int, int]:
+        return (int(have[0] == key[0]), int(have[1] == key[1]),
+                int(have[2] in (key[2], "*")))
+    return max(sorted(_REGISTRY), key=score, default=None)
+
+
+def lookup(op, aprec: str | None = None, impl: str = "popcount") -> GemmCell:
+    """Resolve an operating point to its cell; impl falls back to '*'.
+
+    Primary form: lookup(OperatingPoint(...)). The legacy
+    lookup(wprec, aprec, impl) string form resolves identically.
+    """
+    key = op.key if isinstance(op, OperatingPoint) else (op, aprec, impl)
+    for k in (key, (key[0], key[1], "*")):
+        if k in _REGISTRY:
+            return _REGISTRY[k]
+    near = _nearest_key(key)
+    hint = ""
+    if near is not None:
+        hint = (f"; nearest registered cell is (wprec={near[0]!r}, "
+                f"aprec={near[1]!r}, impl={near[2]!r})")
     raise KeyError(
-        f"no GEMM registered for (wprec={wprec!r}, aprec={aprec!r}, "
-        f"impl={impl!r}); have {sorted(_REGISTRY)}")
+        f"no GEMM registered for (wprec={key[0]!r}, aprec={key[1]!r}, "
+        f"impl={key[2]!r}){hint} — run `python -m repro.kernels.dispatch "
+        f"--list` for the full registry")
 
 
 def cells() -> dict[tuple[str, str, str], GemmCell]:
     """Snapshot of the registry (tests / benches iterate this)."""
     return dict(_REGISTRY)
+
+
+def operating_points(backend: str = "jnp") -> list[OperatingPoint]:
+    """Every registered cell as a concrete OperatingPoint on `backend`."""
+    return [dataclasses.replace(c.op, backend=backend)
+            for _, c in sorted(_REGISTRY.items())]
+
+
+# ---------------------------------------------------------------------------
+# TuneTable — per-cell Tile choices as data, not code
+# ---------------------------------------------------------------------------
+
+DEFAULT_TUNE_PATH = os.path.join(os.path.dirname(__file__), "tune_cpu.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneTable:
+    """Per-cell `Tile` map consulted when an OperatingPoint carries no
+    explicit tile — the ROADMAP's "autotune per operating point" as a JSON
+    data file. Keys are registry keys; an impl of "*" matches any
+    formulation of that (wprec, aprec) pair (same fallback as `lookup`).
+
+    The in-repo default (`tune_cpu.json`, regenerated by
+    `python -m benchmarks.kernel_bench --retune`) is measured in
+    interpret mode on CPU — a correctness-scale baseline; a real-TPU sweep
+    drops in as another JSON file via `load()` / `launch.serve --tune`.
+    """
+    tiles: Mapping[tuple[str, str, str], Tile]
+    source: str = ""
+
+    def tile_for(self, op: OperatingPoint) -> Tile | None:
+        for key in (op.key, (op.wprec, op.aprec, "*")):
+            if key in self.tiles:
+                return self.tiles[key]
+        return None
+
+    @classmethod
+    def load(cls, path: str) -> "TuneTable":
+        with open(path) as f:
+            raw = json.load(f)
+        tiles = {}
+        for name, t in raw.get("cells", {}).items():
+            wprec, aprec, impl = name.split("/")
+            tiles[(wprec, aprec, impl)] = Tile(
+                bm=int(t["bm"]), bn=int(t["bn"]),
+                bkq=None if t.get("bkq") is None else int(t["bkq"]))
+        return cls(tiles=tiles, source=str(raw.get("source", path)))
+
+    def save(self, path: str) -> None:
+        cells_json = {
+            "/".join(key): {"bm": t.bm, "bn": t.bn, "bkq": t.bkq}
+            for key, t in sorted(self.tiles.items())}
+        with open(path, "w") as f:
+            json.dump({"source": self.source, "cells": cells_json}, f,
+                      indent=2, sort_keys=True)
+            f.write("\n")
+
+
+@functools.lru_cache(maxsize=1)
+def default_tune() -> TuneTable:
+    if os.path.exists(DEFAULT_TUNE_PATH):
+        return TuneTable.load(DEFAULT_TUNE_PATH)
+    return TuneTable(tiles={}, source="(no tune table shipped)")
+
+
+def _resolve_tile(op: OperatingPoint) -> Tile | None:
+    """Explicit OperatingPoint tile, else the shipped TuneTable's choice."""
+    return op.tile if op.tile is not None else default_tune().tile_for(op)
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +336,20 @@ def _acc_int8(x_ops, w_ops, k):
                                preferred_element_type=jnp.int32)
 
 
+def _acc_wternary_aint8(x_ops, w_ops, k):
+    """Mixed w-ternary × a-int8: int8 codes against unpacked trit planes."""
+    w = pack.unpack_ternary_i8(w_ops[0], w_ops[1], k)  # (N, K) trits int8
+    return jax.lax.dot_general(x_ops[0], w, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def _acc_wint4_aint8(x_ops, w_ops, k):
+    """int4 weights (s4 nibble words) × int8 activation codes."""
+    w = pack.unpack_int4_i8(w_ops[0], k)               # (N, K) s4-as-int8
+    return jax.lax.dot_general(x_ops[0], w, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
 def _acc_wonly_binary(x_ops, w_ops, k):
     w = pack.unpack_pm1_i8(w_ops[0], k)                # (N, K)
     return x_ops[0] @ w.astype(x_ops[0].dtype).T
@@ -171,6 +357,11 @@ def _acc_wonly_binary(x_ops, w_ops, k):
 
 def _acc_wonly_ternary(x_ops, w_ops, k):
     w = pack.unpack_ternary_i8(w_ops[0], w_ops[1], k)
+    return x_ops[0] @ w.astype(x_ops[0].dtype).T
+
+
+def _acc_wonly_int4(x_ops, w_ops, k):
+    w = pack.unpack_int4_i8(w_ops[0], k)               # (N, K) s4 codes
     return x_ops[0] @ w.astype(x_ops[0].dtype).T
 
 
@@ -186,28 +377,43 @@ def _acc_dense(x_ops, w_ops, k):
 # the registry — every operating point of the POLICIES table
 # ---------------------------------------------------------------------------
 
+def _op(wprec, aprec, impl):
+    return OperatingPoint(wprec, aprec, impl)
+
+
 # W&A-quantized cells: packed operands, int accumulators, Pallas bodies.
-register(GemmCell("binary", "binary", "popcount", ("w_packed",),
+register(GemmCell(_op("binary", "binary", "popcount"), ("w_packed",),
                   _prep_binary, _acc_binary_popcount, body=bgemm.BINARY_POPCOUNT))
-register(GemmCell("binary", "binary", "mxu", ("w_packed",),
+register(GemmCell(_op("binary", "binary", "mxu"), ("w_packed",),
                   _prep_binary, _acc_binary_mxu, body=bgemm.BINARY_MXU))
-register(GemmCell("ternary", "ternary", "popcount", ("w_mask", "w_sign"),
+register(GemmCell(_op("ternary", "ternary", "popcount"), ("w_mask", "w_sign"),
                   _prep_ternary, _acc_ternary_popcount,
                   body=tgemm.TERNARY_POPCOUNT))
-register(GemmCell("ternary", "ternary", "mxu", ("w_mask", "w_sign"),
+register(GemmCell(_op("ternary", "ternary", "mxu"), ("w_mask", "w_sign"),
                   _prep_ternary, _acc_ternary_mxu, body=tgemm.TERNARY_MXU))
-register(GemmCell("int8", "int8", "*", ("w_q",),
+register(GemmCell(_op("int8", "int8", "*"), ("w_q",),
                   _prep_int8, _acc_int8, body=i8gemm.I8_DOT))
+
+# mixed w/a cells: the two operand sides quantize independently; the shared
+# requant epilogue composes the per-channel weight scale (ternary alpha / s4
+# scale) with the per-row int8 activation scale — no matched-precision
+# assumption anywhere.
+register(GemmCell(_op("ternary", "int8", "*"), ("w_mask", "w_sign"),
+                  _prep_int8, _acc_wternary_aint8, body=tgemm.TERNARY_W_I8A))
+register(GemmCell(_op("int4", "int8", "*"), ("w_q4",),
+                  _prep_int8, _acc_wint4_aint8, body=i4gemm.INT4_W_I8A))
 
 # weight-only cells: bf16 acts end-to-end so the row-parallel TP partial-sum
 # reduces in bf16 (2x wire, §Perf A); requant stays in bf16 (wide=False).
-register(GemmCell("binary", "none", "*", ("w_packed",),
+register(GemmCell(_op("binary", "none", "*"), ("w_packed",),
                   _prep_bf16, _acc_wonly_binary, wide=False))
-register(GemmCell("ternary", "none", "*", ("w_mask", "w_sign"),
+register(GemmCell(_op("ternary", "none", "*"), ("w_mask", "w_sign"),
                   _prep_bf16, _acc_wonly_ternary, wide=False))
-register(GemmCell("int8", "none", "*", ("w_q",),
+register(GemmCell(_op("int4", "none", "*"), ("w_q4",),
+                  _prep_bf16, _acc_wonly_int4, wide=False))
+register(GemmCell(_op("int8", "none", "*"), ("w_q",),
                   _prep_bf16, _acc_wonly_int8, wide=False))
-register(GemmCell("none", "none", "*", ("w",),
+register(GemmCell(_op("none", "none", "*"), ("w",),
                   _prep_bf16, _acc_dense, wide=False))
 
 
@@ -256,10 +462,10 @@ class TPSpec:
 
 
 #: per-leaf axis positions (negative = from the end; leading expert axis ok)
-_N_AXIS = {"w_packed": -2, "w_mask": -2, "w_sign": -2,
+_N_AXIS = {"w_packed": -2, "w_mask": -2, "w_sign": -2, "w_q4": -2,
            "w_q": -1, "w": -1, "w_scale": -1, "b": -1}
-_K_AXIS = {"w_packed": -1, "w_mask": -1, "w_sign": -1, "w_q": -2, "w": -2}
-_PACKED_NAMES = ("w_packed", "w_mask", "w_sign")
+_K_AXIS = {"w_packed": -1, "w_mask": -1, "w_sign": -1, "w_q4": -1,
+           "w_q": -2, "w": -2}
 
 
 def tp_plan(cell: GemmCell, spec, parallel: str, tp: TPSpec | None) -> str | None:
@@ -267,8 +473,10 @@ def tp_plan(cell: GemmCell, spec, parallel: str, tp: TPSpec | None) -> str | Non
 
     Guards: the axis must exist with size > 1; column needs N % shards == 0;
     row needs a wide (integer-accumulator) cell and a K axis that splits into
-    whole packed words per shard (`pack.shardable_words` — shared with the
-    device-layout rules in launch.sharding so compute and placement agree).
+    whole packed storage units per shard — `cell.k_quantum` is the pack
+    factor (32-operand bit-plane words, 8-nibble s4 words, or 1 for int8)
+    and `pack.shardable_words` the predicate, shared with the device-layout
+    rules in launch.sharding so compute and placement agree.
     """
     if tp is None or parallel == "none":
         return None
@@ -283,11 +491,10 @@ def tp_plan(cell: GemmCell, spec, parallel: str, tp: TPSpec | None) -> str | Non
         return "column" if spec.out_dim % ns == 0 else None
     if not cell.wide:
         return None
-    packed = any(nm in _PACKED_NAMES for nm in cell.weight_names)
-    units = spec.in_dim // pack.WORD if packed else spec.in_dim
-    if packed and spec.in_dim % pack.WORD:
+    q = cell.k_quantum
+    if spec.in_dim % q:
         return None
-    return "row" if pack.shardable_words(units, ns) else None
+    return "row" if pack.shardable_words(spec.in_dim // q, ns) else None
 
 
 def _dp_axis(tp: TPSpec, dim: int) -> str | None:
@@ -298,7 +505,7 @@ def _dp_axis(tp: TPSpec, dim: int) -> str | None:
     return None
 
 
-def _tp_column(cell, p, x, spec, impl, backend, tp):
+def _tp_column(cell, p, x, spec, op, tp):
     """N-sharded qgemm: each shard runs the full plain path on its slice."""
     mesh, ax, ns = tp.mesh, tp.axis, tp.size
     sub = dataclasses.replace(spec, out_dim=spec.out_dim // ns)
@@ -317,12 +524,12 @@ def _tp_column(cell, p, x, spec, impl, backend, tp):
         xdims[0] = odims[0] = dp
     odims[-1] = ax
     pspecs = {nm: pspec(nm, v) for nm, v in p.items()}
-    fn = lambda pl_, xl: qgemm(pl_, xl, sub, impl=impl, backend=backend)
+    fn = lambda pl_, xl: qgemm(pl_, xl, sub, op)
     return _shard_map(fn, mesh=mesh, in_specs=(pspecs, P(*xdims)),
                       out_specs=P(*odims))(p, x)
 
 
-def _tp_row(cell, p, x, spec, impl, backend, tp):
+def _tp_row(cell, p, x, spec, op, tp):
     """Packed-K-sharded qgemm: replicated full-K prep, per-shard integer
     partial dot, ONE int32 psum per call, deferred (global) requant."""
     mesh, ax, ns = tp.mesh, tp.axis, tp.size
@@ -333,7 +540,8 @@ def _tp_row(cell, p, x, spec, impl, backend, tp):
     m = x3.shape[-2]
     w_ops = tuple(p[nm] for nm in cell.weight_names)
     shared = {nm: p[nm] for nm in ("a_scale",) if nm in p}
-    use_pallas = backend == "pallas" and cell.body is not None
+    use_pallas = op.backend == "pallas" and cell.body is not None
+    tile = _resolve_tile(op)
     k_loc = k // ns
 
     def wspec(nm):
@@ -350,18 +558,22 @@ def _tp_row(cell, p, x, spec, impl, backend, tp):
         idx = jax.lax.axis_index(ax)
 
         def one(x2d, wl):
-            # full-K prep: per-row stats identical to the unsharded path
+            # full-K prep: per-row stats identical to the unsharded path.
+            # Each prep output slices its OWN storage axis (mixed w/a cells
+            # have different x/w densities, e.g. int8 codes vs trit words).
             x_ops, a_scale = cell.prep(x2d, sh, spec)
-            kq_loc = x_ops[0].shape[-1] // ns
-            xl = tuple(jax.lax.dynamic_slice_in_dim(xo, idx * kq_loc, kq_loc,
-                                                    axis=-1) for xo in x_ops)
+            xl = tuple(
+                jax.lax.dynamic_slice_in_dim(
+                    xo, idx * (xo.shape[-1] // ns), xo.shape[-1] // ns,
+                    axis=-1) for xo in x_ops)
             if use_pallas:
                 mm = x2d.shape[0]
                 padm = (-mm) % PAD_M
                 if padm:
                     xl = tuple(jnp.pad(v, ((0, padm), (0, 0))) for v in xl)
                 acc = harness.gemm(cell.body, xl, wl, None, None, None,
-                                   k=k_loc, out="acc", interpret=INTERPRET)[:mm]
+                                   k=k_loc, tile=tile, out="acc",
+                                   interpret=INTERPRET)[:mm]
             else:
                 acc = cell.acc(xl, wl, k_loc)
             return acc, a_scale
@@ -402,15 +614,22 @@ def _requant_narrow(acc, w_scale, bias):
     return y
 
 
-def qgemm(p: dict, x: jnp.ndarray, spec, *, impl: str = "popcount",
-          backend: str = "jnp", tp: TPSpec | None = None,
-          parallel: str = "none") -> jnp.ndarray:
+def qgemm(p: dict, x: jnp.ndarray, spec, op: OperatingPoint | None = None, *,
+          tp: TPSpec | None = None, parallel: str = "none",
+          impl: str | None = None, backend: str | None = None) -> jnp.ndarray:
     """The serve-mode quantized GEMM: (..., K) -> (..., N) bf16.
 
-    p: packed params from `core.qlinear.pack_params`; spec: QLinearSpec.
-    backend="pallas" routes W&A cells through `harness.gemm` (fused bias);
-    backend="jnp" (and cells with no Pallas body) run the identical
-    formulation via XLA. Both share prep and the requant algebra.
+    p: packed params from `core.qlinear.pack_params`; spec: QLinearSpec;
+    op: the `OperatingPoint` to run — its wprec/aprec must match the spec's
+    LayerQuant (the per-layer policy assignment), impl/backend select the
+    formulation and where it executes, and tile (explicit, else the
+    `TuneTable`) sets the Pallas block shapes. op=None derives the point
+    from the spec plus the legacy `impl=`/`backend=` string kwargs (kept
+    for out-of-tree callers; in-tree code passes `op`).
+
+    backend="pallas" routes cells with a MacBody through `harness.gemm`
+    (fused bias); backend="jnp" (and cells with no Pallas body) run the
+    identical formulation via XLA. Both share prep and the requant algebra.
 
     tp + parallel ("column" | "row") run the GEMM under shard_map on the
     tensor-parallel mesh axis (see the TP section above): column shards N
@@ -419,24 +638,31 @@ def qgemm(p: dict, x: jnp.ndarray, spec, *, impl: str = "popcount",
     path; non-dividing shapes (and narrow-accumulator row cells) fall back
     to replicated compute — `tp_plan` is the single arbiter.
     """
-    if backend not in ("jnp", "pallas"):
-        raise ValueError(f"backend={backend!r}")
+    if op is None:
+        op = OperatingPoint.for_spec(spec, impl=impl or "popcount",
+                                     backend=backend or "jnp")
+    elif impl is not None or backend is not None:
+        raise ValueError("pass either op= or the legacy impl=/backend= "
+                         "kwargs, not both")
+    if (op.wprec, op.aprec) != (spec.lq.weights.precision,
+                                spec.lq.acts.precision):
+        raise ValueError(
+            f"OperatingPoint {op.tag} does not match the layer's policy "
+            f"assignment {spec.lq.tag} for {spec.name!r}")
+    cell = lookup(op)
     if tp is not None and parallel != "none":
-        cell = lookup(spec.lq.weights.precision, spec.lq.acts.precision, impl)
         plan = tp_plan(cell, spec, parallel, tp)
         if plan == "column":
-            return _tp_column(cell, p, x, spec, impl, backend, tp)
+            return _tp_column(cell, p, x, spec, op, tp)
         if plan == "row":
-            return _tp_row(cell, p, x, spec, impl, backend, tp)
+            return _tp_row(cell, p, x, spec, op, tp)
     if spec.experts:
         sub = dataclasses.replace(spec, experts=0)
         shared = {nm: p[nm] for nm in ("a_scale",) if nm in p}
         per_e = {nm: v for nm, v in p.items() if nm not in shared}
-        fn = lambda pp, xx: qgemm({**pp, **shared}, xx, sub,
-                                  impl=impl, backend=backend)
+        fn = lambda pp, xx: qgemm({**pp, **shared}, xx, sub, op)
         return jax.vmap(fn)(per_e, x)
 
-    cell = lookup(spec.lq.weights.precision, spec.lq.acts.precision, impl)
     k, n = spec.in_dim, spec.out_dim
     lead = x.shape[:-1]
     x2d = x.reshape(-1, k)
@@ -445,14 +671,14 @@ def qgemm(p: dict, x: jnp.ndarray, spec, *, impl: str = "popcount",
     w_scale = p.get("w_scale")
     bias = p.get("b")
 
-    if backend == "pallas" and cell.body is not None:
+    if op.backend == "pallas" and cell.body is not None:
         m = x2d.shape[0]
         padm = (-m) % PAD_M
         if padm:
             x_ops = tuple(jnp.pad(xo, ((0, padm), (0, 0))) for xo in x_ops)
             a_scale = jnp.pad(a_scale, (0, padm))
         y = harness.gemm(cell.body, x_ops, w_ops, w_scale, a_scale, bias,
-                         k=k, interpret=INTERPRET)[:m]
+                         k=k, tile=_resolve_tile(op), interpret=INTERPRET)[:m]
     else:
         acc = cell.acc(x_ops, w_ops, k)
         if cell.wide:
@@ -460,3 +686,50 @@ def qgemm(p: dict, x: jnp.ndarray, spec, *, impl: str = "popcount",
         else:
             y = _requant_narrow(acc, w_scale, bias)
     return y.astype(jnp.bfloat16).reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# CLI: the live registry as a table
+# ---------------------------------------------------------------------------
+
+def registry_table() -> str:
+    """The registry rendered as an aligned text table (CI prints this)."""
+    tune = default_tune()
+    rows = [("wprec", "aprec", "impl", "backends", "weights", "acc",
+             "tile(bm,bn,bkq)", "vmem")]
+    for key in sorted(_REGISTRY):
+        cell = _REGISTRY[key]
+        backends = "jnp+pallas" if cell.body is not None else "jnp"
+        tile = tune.tile_for(cell.op)
+        if tile is None and cell.body is not None:
+            tile = Tile(bkq=cell.body.default_bkq)
+        tstr = f"{tile.bm},{tile.bn},{tile.bkq}" if tile else "-"
+        vmem = (f"{harness.vmem_tile_bytes(cell.body, tile) / 2**10:.0f}KiB"
+                if cell.body is not None else "-")
+        rows.append((cell.wprec, cell.aprec, cell.impl, backends,
+                     "+".join(cell.weight_names),
+                     "int32" if cell.wide else "bf16", tstr, vmem))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    lines = ["  ".join(v.ljust(w) for v, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def _main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="qGEMM dispatch registry inspector")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered operating points as a table")
+    args = ap.parse_args(argv)
+    if args.list:
+        print(f"# qgemm registry — {len(_REGISTRY)} cells "
+              f"(tune: {default_tune().source or 'none'})")
+        print(registry_table())
+    else:
+        ap.print_help()
+
+
+if __name__ == "__main__":
+    _main()

@@ -17,7 +17,11 @@ registry entry; the grid/BlockSpec/scratch/epilogue machinery below is never
 copied again.
 
 Kq is the *storage* K axis: K/32 packed words for the bit-plane formats
-(body.k_per_q = 32), K int8 codes for the 8-bit format (body.k_per_q = 1).
+(body.k_per_q = 32), K int8 codes for the 8-bit format (body.k_per_q = 1),
+K/8 nibble words for s4. Mixed w/a precisions give the two operand sides
+different densities (xk_per_q / wk_per_q); the grid quantum is their lcm so
+every K step covers whole storage units of both. Block shapes are a `Tile`
+(bm, bn, bkq) — the unit the per-cell `dispatch.TuneTable` tunes.
 """
 from __future__ import annotations
 
@@ -32,28 +36,60 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 @dataclasses.dataclass(frozen=True)
+class Tile:
+    """One kernel block-shape choice: the tunable of an operating point.
+
+    bm/bn block the output tile; bkq blocks the K sweep in units of the
+    body's grid quantum `k_per_q` (packed words for the bit-plane formats,
+    elements for int8). None bkq = the body's default. Carried on
+    `dispatch.OperatingPoint` (explicit override) or resolved from a
+    `dispatch.TuneTable` (per-cell autotune data)."""
+    bm: int = 128
+    bn: int = 128
+    bkq: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
 class MacBody:
     """The per-precision inner MAC of the output-stationary kernel.
 
     step(xs, ws, accs, *, bkq) -> new accs
-        one grid K-step update. xs: n_x activation tiles (bm, bkq);
-        ws: n_w weight tiles ((bn, bkq) or (bkq, bn) per w_kmajor);
-        accs: n_acc int32 (bm, bn) accumulator values.
+        one grid K-step update, bkq in grid-quantum units. xs: n_x
+        activation tiles (bm, bkq*k_per_q/xk_per_q);
+        ws: n_w weight tiles ((bn, bkq*k_per_q/wk_per_q) or transposed per
+        w_kmajor); accs: n_acc int32 (bm, bn) accumulator values.
     finish(accs, k_total) -> (bm, bn) int32/f32 dot
         maps the raw accumulators to the integer dot product (e.g. the
         XNOR identity K - 2*mismatches) right before requantization.
+
+    Activation and weight operands may use DIFFERENT storage densities
+    (mixed w/a precision, e.g. ternary planes × int8 codes): xk_per_q /
+    wk_per_q give each side's K elements per storage unit (None =>
+    k_per_q). k_per_q is the grid quantum — the lcm of the two sides — so
+    one K grid step always covers whole storage units of both operands.
     """
     name: str
-    n_x: int                 # activation operand arrays, each (M, Kq)
+    n_x: int                 # activation operand arrays, each (M, Kq_x)
     n_w: int                 # weight operand arrays
     n_acc: int               # int32 VMEM accumulator tiles
-    k_per_q: int             # K elements per unit of the Kq storage axis
+    k_per_q: int             # K elements per grid-K unit (coarsest operand)
     step: Callable
     finish: Callable
     w_kmajor: bool = False   # True: weights are (Kq, N) (int8 codes layout)
     unpacks_f32: bool = False  # step materializes f32 (R, bkq*k_per_q)
                                # unpacked operand tiles in VMEM (MXU bodies)
+    unpacks_i8: bool = False   # step materializes int8 unpacked weight tiles
     default_bkq: int = 16
+    xk_per_q: int | None = None  # activation storage density (None = k_per_q)
+    wk_per_q: int | None = None  # weight storage density (None = k_per_q)
+
+    @property
+    def xk(self) -> int:
+        return self.xk_per_q or self.k_per_q
+
+    @property
+    def wk(self) -> int:
+        return self.wk_per_q or self.k_per_q
 
 
 def requant(dot, w_scale, a_scale, bias):
@@ -121,17 +157,22 @@ def fit_block(requested: int, dim: int, align: int = 1) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "body", "k", "bm", "bn", "bkq", "interpret", "out"))
+    "body", "k", "tile", "interpret", "out"))
 def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarray],
          w_scale: jnp.ndarray, a_scale: jnp.ndarray,
          bias: jnp.ndarray | None = None, *, k: int,
-         bm: int = 128, bn: int = 128, bkq: int | None = None,
+         tile: Tile | None = None,
          interpret: bool = True, out: str = "requant") -> jnp.ndarray:
     """Run `body` through the shared output-stationary skeleton.
 
-    x_ops: n_x arrays (M, Kq); w_ops: n_w arrays (N, Kq) ((Kq, N) if
-    w_kmajor); w_scale (N,) f32; a_scale (M,) f32; bias (N,) f32 or None
-    (fused in the epilogue — no separate f32 round-trip) -> (M, N) bf16.
+    x_ops: n_x arrays (M, K/xk_per_q); w_ops: n_w arrays (N, K/wk_per_q)
+    ((Kq, N) if w_kmajor); w_scale (N,) f32; a_scale (M,) f32; bias (N,) f32
+    or None (fused in the epilogue — no separate f32 round-trip)
+    -> (M, N) bf16.
+
+    `tile` is the block-shape choice (a `Tile`; None = the body's default).
+    `dispatch.qgemm` resolves it from the OperatingPoint's explicit override
+    or the per-cell TuneTable before calling here.
 
     out="acc" skips the requant epilogue and returns the raw (M, N) int32
     dot instead — the row-parallel tensor-parallel path runs the kernel per
@@ -144,16 +185,23 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
     """
     if out not in ("requant", "acc"):
         raise ValueError(f"out={out!r}")
-    m, kq = x_ops[0].shape
+    tile = tile or Tile()
+    q, xk, wk = body.k_per_q, body.xk, body.wk
+    assert q % xk == 0 and q % wk == 0, (body.name, q, xk, wk)
+    m = x_ops[0].shape[0]
     n = w_ops[0].shape[0] if not body.w_kmajor else w_ops[0].shape[1]
-    assert kq * body.k_per_q == k, (x_ops[0].shape, body.k_per_q, k)
+    units = k // q                  # grid-quantum count along K
+    assert units * q == k, (body.name, k, q)
     for xo in x_ops:
-        assert xo.shape == (m, kq)
+        assert xo.shape == (m, k // xk), (xo.shape, m, k, xk)
     for wo in w_ops:
-        assert wo.shape == ((n, kq) if not body.w_kmajor else (kq, n))
-    bm = fit_block(bm, m, align=8)
-    bn = fit_block(bn, n)
-    bkq = fit_block(bkq if bkq is not None else body.default_bkq, kq)
+        assert wo.shape == ((n, k // wk) if not body.w_kmajor
+                            else (k // wk, n)), (wo.shape, n, k, wk)
+    bm = fit_block(tile.bm, m, align=8)
+    bn = fit_block(tile.bn, n)
+    bkq = fit_block(tile.bkq if tile.bkq is not None else body.default_bkq,
+                    units)
+    bx, bw = bkq * q // xk, bkq * q // wk   # per-side block widths (units)
     if out == "acc":
         # scales are unused by the raw-accumulator epilogue; feed dummies so
         # the BlockSpecs stay uniform. In requant mode None scales stay a
@@ -163,12 +211,12 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
     if bias is None:
         bias = jnp.zeros((n,), jnp.float32)
 
-    x_spec = pl.BlockSpec((bm, bkq), lambda i, j, kk: (i, kk))
+    x_spec = pl.BlockSpec((bm, bx), lambda i, j, kk: (i, kk))
     if body.w_kmajor:
-        w_spec = pl.BlockSpec((bkq, bn), lambda i, j, kk: (kk, j))
+        w_spec = pl.BlockSpec((bw, bn), lambda i, j, kk: (kk, j))
     else:
-        w_spec = pl.BlockSpec((bn, bkq), lambda i, j, kk: (j, kk))
-    grid = (m // bm, n // bn, kq // bkq)
+        w_spec = pl.BlockSpec((bn, bw), lambda i, j, kk: (j, kk))
+    grid = (m // bm, n // bn, units // bkq)
     out_dtype = jnp.int32 if out == "acc" else jnp.bfloat16
     return pl.pallas_call(
         functools.partial(_kernel, body=body, k_total=k, bkq=bkq,
@@ -187,16 +235,23 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
     )(*x_ops, *w_ops, w_scale, a_scale, bias)
 
 
-def vmem_tile_bytes(body: MacBody, bm: int = 128, bn: int = 128,
-                    bkq: int | None = None) -> int:
+def vmem_tile_bytes(body: MacBody, tile: Tile | None = None) -> int:
     """VMEM working set of one grid step (the kernel_bench tile model)."""
-    bkq = bkq if bkq is not None else body.default_bkq
-    q_bytes = 4 if body.k_per_q > 1 else 1          # u32 words vs int8 codes
-    unpacked = ((body.n_x * bm + body.n_w * bn) * bkq * body.k_per_q * 4
-                if body.unpacks_f32 else 0)         # f32 ±1/trit operands
-    return (body.n_x * bm * bkq * q_bytes           # activation tiles
-            + body.n_w * bn * bkq * q_bytes         # weight tiles
-            + unpacked                              # MXU-body intermediates
-            + body.n_acc * bm * bn * 4              # int32 accumulators
-            + bm * bn * 2                           # bf16 out tile
-            + (bm + 2 * bn) * 4)                    # scales + bias
+    tile = tile or Tile()
+    bm, bn = tile.bm, tile.bn
+    bkq = tile.bkq if tile.bkq is not None else body.default_bkq
+    q = body.k_per_q
+    bx, bw = bkq * q // body.xk, bkq * q // body.wk  # per-side storage units
+    xb = 4 if body.xk > 1 else 1                     # u32 words vs int8 codes
+    wb = 4 if body.wk > 1 else 1
+    k_elems = bkq * q
+    unpacked = ((body.n_x * bm + body.n_w * bn) * k_elems * 4
+                if body.unpacks_f32 else 0)          # f32 ±1/trit operands
+    if body.unpacks_i8:
+        unpacked += body.n_w * bn * k_elems          # int8 unpacked weights
+    return (body.n_x * bm * bx * xb                  # activation tiles
+            + body.n_w * bn * bw * wb                # weight tiles
+            + unpacked                               # MXU-body intermediates
+            + body.n_acc * bm * bn * 4               # int32 accumulators
+            + bm * bn * 2                            # bf16 out tile
+            + (bm + 2 * bn) * 4)                     # scales + bias

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .harness import MacBody, gemm
+from .harness import MacBody, Tile, gemm
 
 
 def _i8_step(xs, ws, accs, *, bkq):
@@ -32,4 +32,4 @@ def i8gemm(x_q: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
            interpret: bool = True) -> jnp.ndarray:
     """(M, K)i8 × (K, N)i8 → (M, N) bf16 with fused requant epilogue."""
     return gemm(I8_DOT, (x_q,), (w_q,), w_scale, a_scale, bias,
-                k=x_q.shape[1], bm=bm, bn=bn, bkq=bk, interpret=interpret)
+                k=x_q.shape[1], tile=Tile(bm, bn, bk), interpret=interpret)

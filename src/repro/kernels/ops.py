@@ -1,9 +1,14 @@
-"""Compat shim — the model-facing serve GEMM moved to `repro.kernels.dispatch`.
+"""DEPRECATED compat shim — the serve GEMM moved to `repro.kernels.dispatch`.
 
 Everything this module used to own (activation quantize/pack, M-padding,
-block-size selection, expert vmap, bias fusion) now lives exactly once in
-`dispatch.qgemm`. The wrappers below keep the old entry points alive for
-out-of-tree callers; new code should import `qgemm` directly.
+block-size selection, expert vmap, bias fusion) lives exactly once in
+`dispatch.qgemm`, keyed by `dispatch.OperatingPoint`. Every wrapper below
+emits a `DeprecationWarning` and will be removed one release after the
+OperatingPoint API landed; no in-tree code calls them (CI runs the dispatch
+suite with `-W error::DeprecationWarning` to keep it that way). Out-of-tree
+callers: build a `QLinearSpec` and call
+
+    qgemm(packed_params, x, spec, OperatingPoint.for_spec(spec, backend="pallas"))
 
 NOTE the interpret knob moved with the logic: rebind
 `repro.kernels.dispatch.INTERPRET` (or set REPRO_PALLAS_INTERPRET before
@@ -13,9 +18,17 @@ AttributeError you get now.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
 
-from .dispatch import qgemm
+from .dispatch import OperatingPoint, qgemm  # noqa: F401  (one-release re-export)
+
+
+def _deprecated(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; {repl}",
+        DeprecationWarning, stacklevel=3)
 
 
 def _spec(k: int, n: int, wprec: str, aprec: str):
@@ -28,30 +41,39 @@ def _spec(k: int, n: int, wprec: str, aprec: str):
 def binary_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, w_scale: jnp.ndarray,
                   *, k: int, impl: str = "popcount") -> jnp.ndarray:
     """bf16/f32 acts -> binarize+pack -> binary GEMM. (..., K) -> (..., N)."""
-    return qgemm({"w_packed": w_packed, "w_scale": w_scale}, x,
-                 _spec(k, w_packed.shape[0], "binary", "binary"),
-                 impl=impl, backend="pallas")
+    _deprecated("binary_matmul",
+                "call dispatch.qgemm with OperatingPoint('binary','binary',impl,'pallas')")
+    spec = _spec(k, w_packed.shape[0], "binary", "binary")
+    return qgemm({"w_packed": w_packed, "w_scale": w_scale}, x, spec,
+                 OperatingPoint.for_spec(spec, impl=impl, backend="pallas"))
 
 
 def ternary_matmul(x: jnp.ndarray, w_mask: jnp.ndarray, w_sign: jnp.ndarray,
                    w_scale: jnp.ndarray, *, k: int,
                    impl: str = "popcount") -> jnp.ndarray:
+    _deprecated("ternary_matmul",
+                "call dispatch.qgemm with OperatingPoint('ternary','ternary',impl,'pallas')")
+    spec = _spec(k, w_mask.shape[0], "ternary", "ternary")
     return qgemm({"w_mask": w_mask, "w_sign": w_sign, "w_scale": w_scale}, x,
-                 _spec(k, w_mask.shape[0], "ternary", "ternary"),
-                 impl=impl, backend="pallas")
+                 spec, OperatingPoint.for_spec(spec, impl=impl, backend="pallas"))
 
 
 def int8_matmul(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
                 a_scale_const: jnp.ndarray,
                 bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    _deprecated("int8_matmul",
+                "call dispatch.qgemm with OperatingPoint('int8','int8','*','pallas')")
     p = {"w_q": w_q, "w_scale": w_scale, "a_scale": a_scale_const}
     if bias is not None:
         p["b"] = bias
-    return qgemm(p, x, _spec(x.shape[-1], w_q.shape[1], "int8", "int8"),
-                 backend="pallas")
+    spec = _spec(x.shape[-1], w_q.shape[1], "int8", "int8")
+    return qgemm(p, x, spec, OperatingPoint.for_spec(spec, backend="pallas"))
 
 
 def qlinear_serve(p: dict, x: jnp.ndarray, spec, *,
                   impl: str = "popcount") -> jnp.ndarray:
     """Old Pallas-backend entry of `core.qlinear.apply` — now one line."""
-    return qgemm(p, x, spec, impl=impl, backend="pallas")
+    _deprecated("qlinear_serve",
+                "call dispatch.qgemm(p, x, spec, OperatingPoint.for_spec(spec, backend='pallas'))")
+    return qgemm(p, x, spec,
+                 OperatingPoint.for_spec(spec, impl=impl, backend="pallas"))

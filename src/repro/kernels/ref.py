@@ -57,3 +57,32 @@ def binary_gemm_mxu_ref(x_packed, w_packed, k: int, w_scale, a_scale) -> jnp.nda
     """Oracle for the beyond-paper MXU formulation — semantics identical to
     binary_gemm_ref (the formulations must agree bit-exactly on the int acc)."""
     return binary_gemm_ref(x_packed, w_packed, k, w_scale, a_scale)
+
+
+def wt_i8a_gemm_ref(x_q, w_mask, w_sign, k: int, w_scale, a_scale,
+                    bias=None) -> jnp.ndarray:
+    """Mixed w-ternary × a-int8 oracle: int8 codes against unpacked trits.
+
+    x_q: (M, K) int8, trit planes (N, K/32) uint32 -> (M, N) bf16. The
+    requant composes the ternary per-channel alpha with the int8 activation
+    scale — no matched-precision assumption.
+    """
+    w = pack.unpack_ternary(w_mask, w_sign, k)   # (N, K) in {-1,0,+1}
+    acc = x_q.astype(jnp.float32) @ w.T          # exact: small ints in f32
+    y = acc * w_scale[None, :] * a_scale[:, None]
+    if bias is not None:
+        y = y + bias[None, :]
+    return y.astype(jnp.bfloat16)
+
+
+def i4_gemm_ref(x_q, w_q4, k: int, w_scale, a_scale, bias=None) -> jnp.ndarray:
+    """int4-weight (s4 nibble words) × int8-activation oracle.
+
+    x_q: (M, K) int8, w_q4: (N, K/8) uint32 -> (M, N) bf16.
+    """
+    w = pack.unpack_int4_i8(w_q4, k).astype(jnp.float32)   # (N, K) in [-7,7]
+    acc = x_q.astype(jnp.float32) @ w.T
+    y = acc * w_scale[None, :] * a_scale[:, None]
+    if bias is not None:
+        y = y + bias[None, :]
+    return y.astype(jnp.bfloat16)

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import pack
 
-from .harness import MacBody, gemm
+from .harness import MacBody, Tile, gemm
 
 WORD = 32
 
@@ -67,10 +67,29 @@ TERNARY_MXU = MacBody("tgemm_mxu", n_x=2, n_w=2, n_acc=1, k_per_q=WORD,
                       unpacks_f32=True)
 
 
+def _wt_i8a_step(xs, ws, accs, *, bkq):
+    """Mixed w-ternary × a-int8: trit weight planes unpack to {-1,0,+1} int8
+    in VMEM and ride the int8 MXU against the activation codes. The two
+    operand sides have different storage densities — x is (bm, bkq*32) int8
+    codes, w is two (bn, bkq) word planes — which is exactly what the
+    harness's per-side xk_per_q/wk_per_q blocking exists for."""
+    k = bkq * WORD
+    w = pack.unpack_ternary_i8(ws[0], ws[1], k)             # (bn, k) trits
+    dot = jax.lax.dot_general(xs[0], w, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (accs[0] + dot,)
+
+
+TERNARY_W_I8A = MacBody("tgemm_wt_i8a", n_x=1, n_w=2, n_acc=1, k_per_q=WORD,
+                        xk_per_q=1, wk_per_q=WORD, step=_wt_i8a_step,
+                        finish=lambda accs, k: accs[0], unpacks_i8=True,
+                        default_bkq=8)
+
+
 def tgemm(x_mask, x_sign, w_mask, w_sign, w_scale, a_scale, *, k: int,
           bm: int = 128, bn: int = 128, bkw: int = 16,
           impl: str = "popcount", interpret: bool = True) -> jnp.ndarray:
     """Packed ternary GEMM: planes (M, K/32)u32 × (N, K/32)u32 → (M, N) bf16."""
     body = TERNARY_POPCOUNT if impl == "popcount" else TERNARY_MXU
     return gemm(body, (x_mask, x_sign), (w_mask, w_sign), w_scale, a_scale,
-                k=k, bm=bm, bn=bn, bkq=bkw, interpret=interpret)
+                k=k, tile=Tile(bm, bn, bkw), interpret=interpret)

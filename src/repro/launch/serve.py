@@ -287,10 +287,17 @@ def main(argv=None):
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--policy", default=None)
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
-                    help="GEMM backend for the packed serve path (both route "
-                         "through kernels.dispatch.qgemm)")
+                    help="GEMM backend half of each layer's OperatingPoint "
+                         "(precisions come from the policy per layer; both "
+                         "backends route through kernels.dispatch.qgemm)")
     ap.add_argument("--impl", default="popcount", choices=("popcount", "mxu"),
-                    help="binary/ternary GEMM formulation")
+                    help="binary/ternary GEMM formulation half of the "
+                         "OperatingPoint (int8/int4/mixed cells are "
+                         "formulation-agnostic)")
+    ap.add_argument("--tune", default=None, metavar="TUNE_JSON",
+                    help="kernels.dispatch.TuneTable JSON overriding the "
+                         "shipped per-cell Tile table (autotuned block "
+                         "shapes per operating point)")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="tensor-parallel serving: build a ('data','model') "
                          "mesh of this shape and run qgemm under shard_map "
@@ -333,11 +340,18 @@ def main(argv=None):
     print(f"packed weights: {train_b/2**20:.1f} MiB -> {serve_b/2**20:.1f} MiB "
           f"({train_b/serve_b:.1f}x smaller, policy={cfg.policy})")
 
+    tune = None
+    if args.tune:
+        from repro.kernels.dispatch import TuneTable
+        tune = TuneTable.load(args.tune)
+        print(f"tune table: {args.tune} ({len(tune.tiles)} cells, "
+              f"source: {tune.source})")
+
     srv = Server(cfg, sparams, slots=args.slots, cache_len=args.cache_len,
                  paged=args.paged, page_size=args.page_size,
                  num_pages=args.num_pages, mesh=mesh,
                  ctx=ModelCtx(mode="serve", backend=args.backend,
-                              impl=args.impl))
+                              impl=args.impl, tune=tune))
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):

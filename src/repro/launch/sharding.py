@@ -46,8 +46,10 @@ def abstract_mesh(shape=(16, 16), axes=("data", "model")):
 
 # path components that mark a row-parallel linear (contraction dim sharded)
 _ROW_PARALLEL = {"out", "down"}
-# leaf names of packed/quantized weight tensors (K is packed along last axis)
-_PACKED = {"w_packed", "w_mask", "w_sign"}
+# leaf names of packed weight tensors (K packed along the last axis; the
+# per-leaf pack factor — 32-operand bit-plane words, 8-nibble s4 words —
+# lives in core.pack.K_QUANTUM, shared with kernels.dispatch.tp_plan)
+_PACKED = frozenset(pack.K_QUANTUM)
 
 
 def _names(path) -> list[str]:

@@ -139,8 +139,8 @@ def make_compressed_train_step(cfg: ArchConfig, sp, opt, mesh: Mesh, *,
 
 def make_prefill_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
     """Serve prefill; every quantized matmul goes through
-    kernels.dispatch.qgemm — ctx.backend/ctx.impl select the registered
-    formulation."""
+    kernels.dispatch.qgemm with a per-layer OperatingPoint — precisions from
+    the layer's policy assignment, formulation/backend/tune from ctx."""
     ctx = ctx or ModelCtx(mode="serve")
 
     def prefill_step(params, batch):

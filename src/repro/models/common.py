@@ -35,6 +35,9 @@ class ModelCtx:
                                  # parallelism — qgemm runs under shard_map in
                                  # each layer's spec.parallel role (set by the
                                  # --mesh serving driver; None everywhere else)
+    tune: object | None = None   # kernels.dispatch.TuneTable override: per-
+                                 # cell Tile choices (None = the shipped CPU
+                                 # default table inside dispatch)
 
 
 TRAIN = ModelCtx(mode="train")
@@ -84,9 +87,26 @@ def linear_init(rng, spec: QLinearSpec, dtype=jnp.float32):
 
 
 def linear_apply(p, x, spec: QLinearSpec, ctx: ModelCtx):
-    y = qlinear.apply(p, x, spec, mode=ctx.mode, impl=ctx.impl,
-                      backend=ctx.backend, wire=ctx.fsdp_wire, tp=ctx.tp)
+    if ctx.mode == "serve":
+        y = qlinear.apply(p, x, spec, mode="serve",
+                          op=operating_point(spec, ctx), tp=ctx.tp)
+    else:
+        y = qlinear.apply(p, x, spec, mode=ctx.mode, wire=ctx.fsdp_wire)
     return y.astype(ctx.dtype)
+
+
+def operating_point(spec: QLinearSpec, ctx: ModelCtx):
+    """Resolve THIS layer's `dispatch.OperatingPoint`: precisions from the
+    layer's policy assignment (spec.lq), formulation/backend from the
+    execution context, tile from the context's TuneTable when one is loaded
+    (else qgemm falls back to the shipped default table). This per-layer
+    resolution is what lets one policy serve heterogeneous operating points
+    — e.g. s4 ffn_up next to ternary attn_out — with no global flag pair."""
+    from repro.kernels.dispatch import OperatingPoint
+    op = OperatingPoint.for_spec(spec, impl=ctx.impl, backend=ctx.backend)
+    if ctx.tune is not None:
+        op = dataclasses.replace(op, tile=ctx.tune.tile_for(op))
+    return op
 
 
 def pack_linear(p, spec: QLinearSpec):

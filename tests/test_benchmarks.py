@@ -29,8 +29,15 @@ def test_throughput_orderings():
 
 
 def test_kernel_bench_vmem_budget():
-    """Chosen BlockSpecs must fit VMEM with generous headroom."""
+    """Resolved Tiles must fit VMEM with generous headroom — and the sweep
+    is registry-driven, so every cell (incl. mixed/int4) shows up keyed by
+    its OperatingPoint."""
     from benchmarks.kernel_bench import run
-    for name, us, derived in run():
-        kib = float(derived.split("=")[1].rstrip("KiB"))
-        assert kib < 16 * 1024, (name, kib)   # well under the 128 MiB VMEM
+    rows = run()
+    assert any(r["op"] and r["op"]["wprec"] == "int4" for r in rows)
+    assert any(r["op"] and (r["op"]["wprec"], r["op"]["aprec"]) ==
+               ("ternary", "int8") for r in rows)
+    for r in rows:
+        if r["vmem_tile_bytes"] is not None:
+            # well under the 128 MiB VMEM
+            assert r["vmem_tile_bytes"] < 16 * 2**20, r["name"]

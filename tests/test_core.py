@@ -145,6 +145,7 @@ def test_match_scales_residual_identity():
     ("binary", "binary"), ("binary", "none"),
     ("ternary", "ternary"), ("ternary", "none"),
     ("int8", "int8"), ("int8", "none"), ("none", "none"),
+    ("ternary", "int8"), ("int4", "int8"), ("int4", "none"),
 ])
 @pytest.mark.parametrize("impl", ["popcount", "mxu"])
 def test_qlinear_serve_close_to_train(wprec, aprec, impl):
@@ -165,7 +166,7 @@ def test_qlinear_serve_close_to_train(wprec, aprec, impl):
 
 def test_qlinear_serve_param_shapes_match_packed():
     """serve_param_shapes (dry-run specs) == pack_params shapes/dtypes."""
-    for wprec in ["binary", "ternary", "int8", "none"]:
+    for wprec in ["binary", "ternary", "int4", "int8", "none"]:
         for experts in [0, 4]:
             spec = qlinear.QLinearSpec(
                 64, 32, LayerQuant(QuantSpec(wprec), QuantSpec("none")),
@@ -213,7 +214,9 @@ def test_policy_first_last_override():
 
 def test_all_policies_resolve_all_classes():
     from repro.core.precision import LAYER_CLASSES
+    from repro.core.quantize import BITS
     for pol in POLICIES.values():
         for lc in LAYER_CLASSES:
             lq = pol.lookup(lc)
-            assert lq.weights.precision in ("binary", "ternary", "int8", "none")
+            assert lq.weights.precision in BITS
+            assert lq.acts.precision in BITS

@@ -1,26 +1,45 @@
 """The dispatch-layer contract: one qgemm entry point, every operating point.
 
-Two guarantees the refactor must keep forever:
-  1. jnp and Pallas backends agree for EVERY registered (wprec, aprec, impl)
-     cell — including bias fusion and the expert axis — because they share
-     one activation-prep and one requant implementation per cell.
-  2. every operating point the POLICIES table can produce resolves to a
-     registered cell (adding a policy without a kernel is a test failure,
-     not a runtime KeyError).
+Guarantees the OperatingPoint redesign must keep forever:
+  1. jnp and Pallas backends agree for EVERY registered cell — including
+     bias fusion, the expert axis, and the mixed w/a + int4 cells — because
+     they share one activation-prep and one requant implementation per cell.
+  2. every cell is BIT-exact against a dequantize-then-fp32 reference oracle
+     built only from the `core.pack` codec contract (hypothesis property:
+     the integer dot of the stored codes times the stored scales IS the
+     output, to bf16 resolution, on both backends, with bias and experts).
+  3. every operating point the POLICIES table can produce resolves to a
+     registered cell — the sweep is REGENERATED from
+     `precision.policy_operating_points()`, so adding a policy without a
+     kernel is a test failure, not a runtime KeyError.
+  4. the OperatingPoint/TuneTable API invariants: registry keys are
+     structured, lookup failures suggest the nearest cell, tune tables
+     round-trip through JSON, and a point that contradicts the layer's
+     policy assignment is rejected loudly.
+
+Row-parallel/column-parallel TP exactness for every cell (including the new
+ones — the sweep is registry-driven) lives in tests/test_dispatch_tp.py.
 """
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
-from repro.core import qlinear
-from repro.core.precision import LAYER_CLASSES, LayerQuant, POLICIES
-from repro.core.quantize import QuantSpec
+from repro.core import pack, qlinear
+from repro.core.precision import (LayerQuant, POLICIES,
+                                  policy_operating_points)
+from repro.core.quantize import QuantSpec, int8_codes
 from repro.kernels import dispatch, harness
+from repro.kernels.dispatch import OperatingPoint, Tile, TuneTable
 
 CELLS = sorted(dispatch.cells())
+NEW_CELLS = [k for k in CELLS
+             if k[:2] in (("ternary", "int8"), ("int4", "int8"),
+                          ("int4", "none"))]
 
 
 def _spec(wprec, aprec, *, bias=False, experts=0, k=64, n=32):
@@ -37,6 +56,14 @@ def _packed(spec, seed=0):
     return qlinear.pack_params(p, spec)
 
 
+def _op(spec, impl, backend="jnp"):
+    return OperatingPoint.for_spec(spec, impl=impl, backend=backend)
+
+
+def _impl_arg(impl):
+    return "popcount" if impl == "*" else impl
+
+
 # ---------------------------------------------------------------------------
 # 1. jnp-vs-pallas equivalence, all cells × bias × experts
 # ---------------------------------------------------------------------------
@@ -44,12 +71,11 @@ def _packed(spec, seed=0):
 @pytest.mark.parametrize("wprec,aprec,impl", CELLS)
 @pytest.mark.parametrize("bias", [False, True])
 def test_qgemm_backends_agree(wprec, aprec, impl, bias):
-    impl_arg = "popcount" if impl == "*" else impl
     spec = _spec(wprec, aprec, bias=bias)
     p = _packed(spec)
     x = jax.random.normal(jax.random.PRNGKey(2), (5, spec.in_dim)) * 0.2
-    yj = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="jnp")
-    yp = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="pallas")
+    yj = dispatch.qgemm(p, x, spec, _op(spec, _impl_arg(impl)))
+    yp = dispatch.qgemm(p, x, spec, _op(spec, _impl_arg(impl), "pallas"))
     assert yj.shape == yp.shape == (5, spec.out_dim)
     np.testing.assert_allclose(np.asarray(yj, np.float32),
                                np.asarray(yp, np.float32),
@@ -58,12 +84,11 @@ def test_qgemm_backends_agree(wprec, aprec, impl, bias):
 
 @pytest.mark.parametrize("wprec,aprec,impl", CELLS)
 def test_qgemm_expert_axis(wprec, aprec, impl):
-    impl_arg = "popcount" if impl == "*" else impl
     spec = _spec(wprec, aprec, bias=True, experts=3)
     p = _packed(spec)
     x = jax.random.normal(jax.random.PRNGKey(3), (3, 4, spec.in_dim)) * 0.2
-    yj = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="jnp")
-    yp = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="pallas")
+    yj = dispatch.qgemm(p, x, spec, _op(spec, _impl_arg(impl)))
+    yp = dispatch.qgemm(p, x, spec, _op(spec, _impl_arg(impl), "pallas"))
     assert yj.shape == yp.shape == (3, 4, spec.out_dim)
     np.testing.assert_allclose(np.asarray(yj, np.float32),
                                np.asarray(yp, np.float32),
@@ -80,9 +105,10 @@ def test_qgemm_bias_fused_matches_manual():
     p = _packed(spec)
     x = jax.random.normal(jax.random.PRNGKey(4), (8, spec.in_dim)) * 0.2
     for backend in ("jnp", "pallas"):
-        y = dispatch.qgemm(p, x, spec, backend=backend)
+        op = _op(spec, "popcount", backend)
+        y = dispatch.qgemm(p, x, spec, op)
         p_nob = {k: v for k, v in p.items() if k != "b"}
-        y_nob = dispatch.qgemm(p_nob, x, spec, backend=backend)
+        y_nob = dispatch.qgemm(p_nob, x, spec, op)
         manual = np.asarray(y_nob, np.float32) + np.asarray(p["b"], np.float32)
         np.testing.assert_allclose(np.asarray(y, np.float32), manual,
                                    rtol=2e-2, atol=2e-2)
@@ -94,8 +120,8 @@ def test_qgemm_nonaligned_rows_padded():
     p = _packed(spec)
     for m in (1, 3, 7, 13):
         x = jax.random.normal(jax.random.PRNGKey(m), (m, spec.in_dim)) * 0.2
-        yj = dispatch.qgemm(p, x, spec, backend="jnp")
-        yp = dispatch.qgemm(p, x, spec, backend="pallas")
+        yj = dispatch.qgemm(p, x, spec, _op(spec, "popcount"))
+        yp = dispatch.qgemm(p, x, spec, _op(spec, "popcount", "pallas"))
         assert yj.shape == yp.shape == (m, spec.out_dim)
         np.testing.assert_allclose(np.asarray(yj, np.float32),
                                    np.asarray(yp, np.float32),
@@ -103,29 +129,144 @@ def test_qgemm_nonaligned_rows_padded():
 
 
 # ---------------------------------------------------------------------------
-# 2. registry completeness over the POLICIES table
+# 2. dequantize-then-fp32 oracle: stored codes × stored scales == the output
+# ---------------------------------------------------------------------------
+
+def _dequant_codes_w(p, spec):
+    """(N, K) integer/trit weight codes straight from the packed storage —
+    decoded ONLY via the `core.pack` codec contract, no dispatch code."""
+    k = spec.in_dim
+    wprec = spec.lq.weights.precision
+    if wprec == "binary":
+        return pack.unpack_binary(p["w_packed"], k)
+    if wprec == "ternary":
+        return pack.unpack_ternary(p["w_mask"], p["w_sign"], k)
+    if wprec == "int4":
+        return pack.unpack_int4_i8(p["w_q4"], k).astype(jnp.float32)
+    if wprec == "int8":
+        return jnp.swapaxes(p["w_q"], -1, -2).astype(jnp.float32)
+    return jnp.swapaxes(p["w"], -1, -2).astype(jnp.float32)
+
+
+def _quant_codes_x(p, x2d, spec):
+    """Activation codes + per-row scale exactly as the serve prep defines
+    them (the codec is the contract; the arithmetic below is independent)."""
+    from repro.core.quantize import ternarize
+    aprec = spec.lq.acts.precision
+    xf = x2d.astype(jnp.float32)
+    if aprec == "binary":
+        return jnp.where(xf >= 0, 1.0, -1.0), jnp.mean(jnp.abs(xf), axis=-1)
+    if aprec == "ternary":
+        q = ternarize(xf, spec.lq.acts.ternary_threshold, axis=-1)
+        return jax.lax.stop_gradient(q), jnp.mean(jnp.abs(xf), axis=-1)
+    if aprec == "int8":
+        a = p["a_scale"]
+        return int8_codes(xf, a).astype(jnp.float32), \
+            jnp.full((x2d.shape[0],), a, jnp.float32)
+    return None, None   # "none": bf16 activations, handled separately
+
+
+def _oracle(p, x2d, spec):
+    """Dequantize-then-fp32 reference, factored so every float product is
+    exact: integer-code dot (exact in f32 at these ranges) -> scales ->
+    bias -> bf16. Must match qgemm BIT for bit."""
+    wq = _dequant_codes_w(p, spec)
+    xq, asc = _quant_codes_x(p, x2d, spec)
+    ws, bias = p.get("w_scale"), p.get("b")
+    if xq is not None:                      # W&A cell: wide f32 requant
+        acc = xq @ wq.T
+        y = acc.astype(jnp.float32)
+        if ws is not None:
+            y = y * ws[None, :]
+        y = y * asc[:, None]
+        if bias is not None:
+            y = y + bias[None, :]
+        return y.astype(jnp.bfloat16)
+    # weight-only cell: bf16 accumulate, bf16 scale, f32 bias
+    acc = x2d.astype(jnp.bfloat16) @ wq.astype(jnp.bfloat16).T
+    y = acc if ws is None else acc * ws.astype(acc.dtype)
+    if bias is not None:
+        y = y.astype(jnp.float32) + bias[None, :]
+    return y.astype(jnp.bfloat16)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(NEW_CELLS), st.booleans(), st.sampled_from([0, 2]),
+       st.sampled_from([64, 96, 128]), st.integers(1, 9),
+       st.sampled_from(["jnp", "pallas"]), st.integers(0, 10))
+def test_new_cells_bit_exact_vs_dequant_oracle(cellkey, bias, experts, k, m,
+                                               backend, seed):
+    """Hypothesis property: the mixed w-ternary×a-int8 and int4 cells are
+    BIT-exact against the dequantize-then-fp32 oracle on both backends,
+    including bias and the expert axis."""
+    wprec, aprec, impl = cellkey
+    spec = _spec(wprec, aprec, bias=bias, experts=experts, k=k)
+    p = _packed(spec, seed=seed)
+    shape = (experts, m, k) if experts else (m, k)
+    x = jax.random.normal(jax.random.PRNGKey(seed + m), shape) * 0.2
+    y = dispatch.qgemm(p, x, spec, _op(spec, _impl_arg(impl), backend))
+    if experts:
+        want = jnp.stack([
+            _oracle({nm: (v if v.ndim == 0 or nm == "a_scale" else v[e])
+                     for nm, v in p.items()}, x[e],
+                    dataclasses.replace(spec, experts=0))
+            for e in range(experts)])
+    else:
+        want = _oracle(p, x, spec)
+    np.testing.assert_array_equal(
+        np.asarray(y, np.float32), np.asarray(want, np.float32),
+        err_msg=str((cellkey, bias, experts, k, m, backend, seed)))
+
+
+@pytest.mark.parametrize("wprec,aprec,impl", CELLS)
+def test_all_cells_match_dequant_oracle(wprec, aprec, impl):
+    """The same oracle, every registered cell once (deterministic sweep)."""
+    spec = _spec(wprec, aprec, bias=True)
+    p = _packed(spec)
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, spec.in_dim)) * 0.2
+    y = dispatch.qgemm(p, x, spec, _op(spec, _impl_arg(impl)))
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(_oracle(p, x, spec), np.float32),
+                                  err_msg=str((wprec, aprec, impl)))
+
+
+# ---------------------------------------------------------------------------
+# 3. registry completeness — regenerated from the POLICIES table
 # ---------------------------------------------------------------------------
 
 def test_every_policy_operating_point_resolves():
+    """Every (wprec, aprec) pair any policy can assign to any layer class —
+    `policy_operating_points()` regenerates the list, so a new POLICIES
+    entry automatically extends this obligation — resolves under both
+    formulations, and every W&A cell carries a Pallas body."""
+    pts = policy_operating_points()
+    assert ("ternary", "int8") in pts and ("int4", "int8") in pts  # new cells
     seen = set()
-    for pol in POLICIES.values():
-        for lc in LAYER_CLASSES:
-            for first, last in ((False, False), (True, False), (False, True)):
-                lq = pol.lookup(lc, is_first=first, is_last=last)
-                for impl in ("popcount", "mxu"):
-                    cell = dispatch.lookup(lq.weights.precision,
-                                           lq.acts.precision, impl)
-                    seen.add(cell.key)
-    # and the W&A cells all carry a Pallas body (packed serve path exists)
+    for wprec, aprec in pts:
+        for impl in ("popcount", "mxu"):
+            cell = dispatch.lookup(wprec, aprec, impl)
+            seen.add(cell.key)
     for key, cell in dispatch.cells().items():
         if cell.aprec != "none":
             assert cell.body is not None, key
     assert seen  # sanity: the sweep visited the registry
 
 
-def test_unknown_operating_point_raises():
-    with pytest.raises(KeyError, match="no GEMM registered"):
+def test_policies_cover_every_registered_cell():
+    """The converse: no registry cell is policy-unreachable (dead kernels
+    rot — every cell must be nameable by some POLICIES entry)."""
+    pts = policy_operating_points()
+    for key, cell in dispatch.cells().items():
+        assert (cell.wprec, cell.aprec) in pts, key
+
+
+def test_unknown_operating_point_raises_with_suggestion():
+    with pytest.raises(KeyError, match="no GEMM registered") as ei:
         dispatch.lookup("int4", "int4", "popcount")
+    # wildcard-aware nearest-cell suggestion, not a raw registry dump
+    assert "nearest registered cell" in str(ei.value)
+    assert "wprec='int4'" in str(ei.value)
+    assert "--list" in str(ei.value)
 
 
 def test_duplicate_registration_rejected():
@@ -135,8 +276,104 @@ def test_duplicate_registration_rejected():
 
 
 def test_vmem_tile_model_within_budget():
-    """Every registered Pallas body fits VMEM at default blocks (<<128 MiB)."""
+    """Every registered Pallas body fits VMEM at its tuned/default tile."""
+    tune = dispatch.default_tune()
     for key, cell in dispatch.cells().items():
         if cell.body is None:
             continue
-        assert harness.vmem_tile_bytes(cell.body) < 16 * 2**20, key
+        tile = tune.tile_for(cell.op)
+        assert harness.vmem_tile_bytes(cell.body, tile) < 16 * 2**20, key
+
+
+# ---------------------------------------------------------------------------
+# 4. OperatingPoint / TuneTable API invariants
+# ---------------------------------------------------------------------------
+
+def test_operating_point_mismatch_rejected():
+    """An op whose precisions contradict the layer's policy assignment is a
+    loud error — per-layer resolution may never silently run the wrong cell."""
+    spec = _spec("ternary", "int8")
+    p = _packed(spec)
+    x = jnp.zeros((2, spec.in_dim))
+    with pytest.raises(ValueError, match="does not match"):
+        dispatch.qgemm(p, x, spec, OperatingPoint("int8", "int8"))
+
+
+def test_legacy_kwargs_still_resolve():
+    """Out-of-tree form: qgemm(..., impl=, backend=) == the op form."""
+    spec = _spec("ternary", "ternary")
+    p = _packed(spec)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, spec.in_dim)) * 0.2
+    a = dispatch.qgemm(p, x, spec, impl="mxu", backend="pallas")
+    b = dispatch.qgemm(p, x, spec,
+                       OperatingPoint.for_spec(spec, impl="mxu",
+                                               backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="not both"):
+        dispatch.qgemm(p, x, spec, OperatingPoint.for_spec(spec), impl="mxu")
+
+
+def test_operating_point_validates_backend():
+    with pytest.raises(ValueError, match="backend"):
+        OperatingPoint("int8", "int8", backend="tpu")
+
+
+def test_tile_override_changes_blocks_not_results():
+    """An explicit OperatingPoint tile is honored (block-size invariance of
+    the harness) and the TuneTable default gives identical values."""
+    spec = _spec("binary", "binary", k=128, n=64)
+    p = _packed(spec)
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, spec.in_dim)) * 0.2
+    base = dispatch.qgemm(p, x, spec, _op(spec, "popcount", "pallas"))
+    tiled = dispatch.qgemm(
+        p, x, spec, dataclasses.replace(_op(spec, "popcount", "pallas"),
+                                        tile=Tile(bm=8, bn=32, bkq=1)))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(tiled))
+
+
+def test_tune_table_roundtrip(tmp_path):
+    t = TuneTable(tiles={("binary", "binary", "popcount"): Tile(64, 128, 8),
+                         ("int4", "int8", "*"): Tile(128, 128, 32)},
+                  source="unit test")
+    path = str(tmp_path / "tune.json")
+    t.save(path)
+    back = TuneTable.load(path)
+    assert back.tiles == dict(t.tiles) and back.source == "unit test"
+    # wildcard-aware resolution, same fallback as lookup()
+    assert back.tile_for(OperatingPoint("int4", "int8", "mxu")) == \
+        Tile(128, 128, 32)
+    assert back.tile_for(OperatingPoint("none", "none")) is None
+    with open(path) as f:
+        assert set(json.load(f)) == {"source", "cells"}
+
+
+def test_shipped_tune_table_keys_are_registered():
+    """The in-repo CPU table may only name live registry cells (a retune
+    after a registry change must not leave stale keys behind)."""
+    tune = dispatch.default_tune()
+    assert tune.tiles, "shipped tune_cpu.json missing or empty"
+    for key in tune.tiles:
+        assert key in dispatch.cells(), key
+
+
+def test_registry_table_renders():
+    table = dispatch.registry_table()
+    assert "wprec" in table and "int4" in table and "w_q4" in table
+
+
+# ---------------------------------------------------------------------------
+# 5. the deprecated ops shim still works — but warns
+# ---------------------------------------------------------------------------
+
+def test_ops_shim_warns_and_matches_qgemm():
+    from repro.kernels import ops
+    spec = _spec("binary", "binary", k=64, n=32)
+    p = _packed(spec)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 64)) * 0.2
+    with pytest.warns(DeprecationWarning, match="binary_matmul"):
+        y = ops.binary_matmul(x, p["w_packed"], p["w_scale"], k=64)
+    want = dispatch.qgemm(p, x, spec, _op(spec, "popcount", "pallas"))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+    with pytest.warns(DeprecationWarning, match="qlinear_serve"):
+        y2 = ops.qlinear_serve(p, x, spec)
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(want))

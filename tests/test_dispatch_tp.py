@@ -7,11 +7,16 @@ The contract under test (kernels/dispatch.py, TP section):
     cell, including bias and the expert axis. Integer psum is associative,
     prep/requant are shared verbatim, so equality is exact, not approximate.
   * column-parallel — N-sharded weights, no collective — exact per slice.
-  * non-dividing shapes (e.g. a packed K whose word count doesn't split) and
-    narrow-accumulator (weight-only) row cells must FALL BACK to the
+  * non-dividing shapes (e.g. a packed K whose word count doesn't split —
+    32-operand bit-plane words AND 8-nibble s4 words, via cell.k_quantum)
+    and narrow-accumulator (weight-only) row cells must FALL BACK to the
     replicated path rather than shard mid-word / psum in bf16 — the property
     holds trivially there, which is exactly the point: tp_plan may never
     choose an inexact plan.
+
+The sweep is registry-driven (sorted(dispatch.cells())), so the mixed
+w-ternary×a-int8 and int4 cells are covered automatically, keyed by
+OperatingPoint.
 
 Hypothesis (or the deterministic fallback shim) draws the operating point,
 bias/expert/TP-degree/K/M/backend configuration; the whole property runs in
@@ -34,6 +39,7 @@ from repro.core import qlinear
 from repro.core.precision import LayerQuant
 from repro.core.quantize import QuantSpec
 from repro.kernels import dispatch
+from repro.kernels.dispatch import OperatingPoint
 
 CELLS = sorted(dispatch.cells())
 MESHES = {ns: jax.make_mesh((8 // ns, ns), ("data", "model")) for ns in (2, 4)}
@@ -60,19 +66,21 @@ def row_parallel_matches_unsharded(cellkey, bias, experts, ns, k, backend, m):
     wprec, aprec, impl = cellkey
     impl_arg = "popcount" if impl == "*" else impl
     spec, p = build(wprec, aprec, bias, experts, k, "row")
+    op = OperatingPoint.for_spec(spec, impl=impl_arg, backend=backend)
     shape = (experts, m, k) if experts else (m, k)
     x = jax.random.normal(jax.random.PRNGKey(m), shape) * 0.2
-    ref = dispatch.qgemm(p, x, spec, impl=impl_arg, backend=backend)
+    ref = dispatch.qgemm(p, x, spec, op)
     tp = dispatch.TPSpec(MESHES[ns])
-    cell = dispatch.lookup(wprec, aprec, impl_arg)
+    cell = dispatch.lookup(op)
     plan = dispatch.tp_plan(cell, spec, "row", tp)
     # the plan is only allowed when it can be exact: wide cells, whole
-    # packed words per shard
+    # packed storage units (cell.k_quantum: 32-bit-plane words, s4 nibble
+    # words, int8 elements) per shard
     if plan == "row":
         assert cell.wide
+        assert k % (cell.k_quantum * ns) == 0
         sharded_plans[0] += 1
-    y = dispatch.qgemm(p, x, spec, impl=impl_arg, backend=backend,
-                       tp=tp, parallel="row")
+    y = dispatch.qgemm(p, x, spec, op, tp=tp, parallel="row")
     assert y.shape == ref.shape and y.dtype == ref.dtype
     np.testing.assert_array_equal(
         np.asarray(y, np.float32), np.asarray(ref, np.float32),
@@ -89,10 +97,11 @@ for (wprec, aprec, impl) in CELLS:
     impl_arg = "popcount" if impl == "*" else impl
     for experts in (0, 3):
         spec, p = build(wprec, aprec, True, experts, 64, "column")
+        op = OperatingPoint.for_spec(spec, impl=impl_arg)
         shape = (experts, 5, 64) if experts else (5, 64)
         x = jax.random.normal(jax.random.PRNGKey(9), shape) * 0.2
-        ref = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="jnp")
-        y = dispatch.qgemm(p, x, spec, impl=impl_arg, backend="jnp",
+        ref = dispatch.qgemm(p, x, spec, op)
+        y = dispatch.qgemm(p, x, spec, op,
                            tp=dispatch.TPSpec(MESHES[4]), parallel="column")
         np.testing.assert_array_equal(np.asarray(y, np.float32),
                                       np.asarray(ref, np.float32),

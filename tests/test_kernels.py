@@ -8,7 +8,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core import pack, qlinear
 from repro.core.precision import LayerQuant
 from repro.core.quantize import QuantSpec
-from repro.kernels import bgemm, i8gemm, ref, tgemm
+from repro.kernels import bgemm, harness, i4gemm, i8gemm, ref, tgemm
 
 
 def _rand_pm1(key, shape):
@@ -107,11 +107,60 @@ def test_i8gemm_matches_ref(m, k, n, with_bias):
 
 
 # ---------------------------------------------------------------------------
+# mixed w/a + int4 bodies (per-side storage densities through the harness)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:4])
+def test_wt_i8a_body_matches_ref(m, k, n):
+    """w-ternary × a-int8 MacBody: trit planes blocked at K/32 words while
+    the activation side is blocked at K int8 codes — one grid, two densities."""
+    wm, ws_ = pack.pack_ternary(_rand_trit(n + k, (n, k)))
+    xq = jax.random.randint(jax.random.PRNGKey(k), (m, k), -127, 128, jnp.int8)
+    wsc = jax.random.uniform(jax.random.PRNGKey(0), (n,), jnp.float32, 0.5, 2.0)
+    asc = jax.random.uniform(jax.random.PRNGKey(1), (m,), jnp.float32, 0.01, 0.1)
+    got = harness.gemm(tgemm.TERNARY_W_I8A, (xq,), (wm, ws_), wsc, asc,
+                       k=k, tile=harness.Tile(8, min(128, n), 2))
+    want = ref.wt_i8a_gemm_ref(xq, wm, ws_, k, wsc, asc)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:4])
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_i4gemm_matches_ref(m, k, n, with_bias):
+    rng = np.random.default_rng(m + k + n)
+    codes = rng.integers(-7, 8, (n, k)).astype(np.int8)
+    wq4 = pack.pack_int4(jnp.asarray(codes))
+    xq = jax.random.randint(jax.random.PRNGKey(3), (m, k), -127, 128, jnp.int8)
+    wsc = jax.random.uniform(jax.random.PRNGKey(4), (n,), jnp.float32, 0.01, 0.1)
+    asc = jax.random.uniform(jax.random.PRNGKey(5), (m,), jnp.float32, 0.01, 0.1)
+    bias = jax.random.normal(jax.random.PRNGKey(6), (n,)) if with_bias else None
+    got = i4gemm.i4gemm(xq, wq4, wsc, asc, bias, k=k, bm=8, bn=min(128, n),
+                        bkw=min(32, k // 8))
+    want = ref.i4_gemm_ref(xq, wq4, k, wsc, asc, bias)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=5, deadline=None)
+def test_int4_pack_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    k = 8 * rng.integers(1, 33)
+    codes = rng.integers(-8, 8, (3, int(k))).astype(np.int8)
+    words = pack.pack_int4(jnp.asarray(codes))
+    assert words.shape == (3, k // 8) and words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(pack.unpack_int4_i8(words, int(k))),
+                                  codes)
+
+
+# ---------------------------------------------------------------------------
 # ops-level dispatch: pallas backend == jnp backend at the model interface
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("wprec,aprec", [("binary", "binary"), ("ternary", "ternary"),
-                                         ("int8", "int8")])
+                                         ("int8", "int8"), ("ternary", "int8"),
+                                         ("int4", "int8")])
 def test_qlinear_pallas_backend_matches_jnp(wprec, aprec):
     spec = qlinear.QLinearSpec(128, 128, LayerQuant(QuantSpec(wprec), QuantSpec(aprec)))
     p = qlinear.init(jax.random.PRNGKey(0), spec)

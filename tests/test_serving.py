@@ -86,6 +86,53 @@ def test_batched_equals_sequential(policy, backend):
         assert got[i] == w, (policy, backend, i, got[i], w)
 
 
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_heterogeneous_policy_serves_token_exact(backend):
+    """The 'het' policy assigns DIFFERENT operating points per layer class
+    (s4 ffn_up next to ternary attn_out, int8 qkv) — the serve path resolves
+    each layer's OperatingPoint from its own LayerQuant, not from one global
+    flag pair — and the batched server must still be token-exact against the
+    single-request reference."""
+    cfg, sp, sparams = _built("het")
+    mid = sp.mid[0] if sp.mid else sp.first  # per_class overrides first/last
+    # the policy really is heterogeneous at the spec level
+    assert mid.ffn.up.lq.weights.precision == "int4"
+    assert mid.mixer.out.lq.weights.precision == "ternary"
+    assert mid.mixer.qkv.lq.weights.precision == "int8"
+    assert mid.ffn.up.lq != mid.mixer.out.lq
+    # ...and each layer resolves its own registered operating point
+    from repro.kernels import dispatch
+    from repro.models.common import ModelCtx as _Ctx, operating_point
+    ops = {nm: operating_point(s, _Ctx(mode="serve", backend=backend))
+           for nm, s in (("ffn_up", mid.ffn.up), ("attn_out", mid.mixer.out))}
+    assert ops["ffn_up"].key != ops["attn_out"].key
+    for op in ops.values():
+        dispatch.lookup(op)   # registered (would KeyError otherwise)
+    ctx = ModelCtx(mode="serve", backend=backend, dtype=jnp.float32)
+    prompts = _prompts(cfg)
+    want = [_greedy_reference(cfg, sp, sparams, ctx, p, MAX_NEW)
+            for p in prompts]
+    srv = _serve(cfg, sparams, ctx, prompts, paged=True)
+    got = {r.rid: r.out for r in srv.completed}
+    for i, w in enumerate(want):
+        assert got[i] == w, ("het", backend, i, got[i], w)
+
+
+@pytest.mark.parametrize("policy", ["wt-a8", "w4a8"])
+def test_mixed_wa_policies_serve(policy):
+    """The pure mixed-cell policies (w-ternary×a-int8, w4a8) run the full
+    continuous-batching path token-exactly vs the sequential reference."""
+    cfg, sp, sparams = _built(policy)
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompts = _prompts(cfg, lens=(3, 9), seed=13)
+    want = [_greedy_reference(cfg, sp, sparams, ctx, p, MAX_NEW)
+            for p in prompts]
+    srv = _serve(cfg, sparams, ctx, prompts, paged=True)
+    got = {r.rid: r.out for r in srv.completed}
+    for i, w in enumerate(want):
+        assert got[i] == w, (policy, i, got[i], w)
+
+
 def test_contiguous_matches_paged():
     """The --contiguous reference layout and the paged layout serve the same
     traffic identically (per-slot positions on both)."""

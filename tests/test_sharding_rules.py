@@ -112,6 +112,40 @@ def test_packed_k_rules_guard_non_dividing_pack_factor():
                             "row", tp) is None
 
 
+def test_packed_k_rules_int4_pack_factor():
+    """The s4 nibble format packs 8 operands per word (pack.K_QUANTUM=8):
+    K=48 -> 6 words splits 2-way but K=40 -> 5 words does not — both the
+    device-layout rule (w_q4 is in the packed set) and dispatch.tp_plan
+    (cell.k_quantum) must agree on the fallback."""
+    from repro.core import pack
+    from repro.core.precision import LayerQuant
+    from repro.core.quantize import QuantSpec
+    from repro.core.qlinear import QLinearSpec, init as qinit, pack_params
+    from repro.kernels import dispatch
+
+    assert pack.K_QUANTUM["w_q4"] == 8
+    mesh = fake_mesh((2, 2))
+    lq = LayerQuant(QuantSpec("int4"), QuantSpec("int8"))
+
+    def packed_down(k):
+        spec = QLinearSpec(k, 64, lq)
+        return {"ffn": {"down": pack_params(
+            qinit(jax.random.PRNGKey(0), spec), spec)}}
+
+    ok = sharding.param_shardings(mesh, packed_down(48), fsdp=False)
+    bad = sharding.param_shardings(mesh, packed_down(40), fsdp=False)
+    assert ok["ffn"]["down"]["w_q4"].spec == P(None, "model")
+    assert bad["ffn"]["down"]["w_q4"].spec == P(None, None)
+
+    cell = dispatch.lookup("int4", "int8")
+    assert cell.k_quantum == 8
+    tp = dispatch.TPSpec(sharding.abstract_mesh((2, 2)))
+    assert dispatch.tp_plan(cell, QLinearSpec(48, 64, lq, parallel="row"),
+                            "row", tp) == "row"
+    assert dispatch.tp_plan(cell, QLinearSpec(40, 64, lq, parallel="row"),
+                            "row", tp) is None
+
+
 def test_serve_cache_shardings_pool_over_data():
     """Paged pool leaves shard the page axis over "data" (whole pages per
     shard); slab leaves shard the slot axis; non-dividing pools replicate."""
