@@ -7,7 +7,8 @@
   kernel_bench  Pallas kernels: interpret validation + VMEM tile model
   flexibility   Table I flexibility rows (arch x policy support matrix)
   qat_quality   §II-A mixed-precision motivation (QAT loss per policy)
-  serve_bench   paged vs contiguous KV serving layouts (docs/SERVING.md)
+  serve_bench   KV layouts + scheduler: paged vs contiguous, prefix-share
+                admitted throughput, preempt-vs-reserve (docs/SERVING.md)
 """
 import argparse
 import sys

@@ -1,17 +1,32 @@
-"""Serving-layer bench: paged vs contiguous KV layout under mixed-length
-traffic (docs/SERVING.md).
+"""Serving-layer bench: KV layouts and scheduler policies under three
+traffic scenarios (docs/SERVING.md).
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--arch llama3.2-3b]
+                                                    [--json BENCH_serve.json]
 
-Reports tok/s for both layouts on identical traffic, jit signature counts
-(the bucketing discipline), and page-pool utilization — the paged win is the
-*capacity* column: the slab layout reserves slots*cache_len tokens up front,
-the pool holds only what live requests actually cover.
+Scenarios:
+  mixed         paged vs contiguous layout on mixed-length traffic — the
+                paged win is *capacity* (the slab reserves slots*cache_len
+                tokens up front, the pool holds only live coverage)
+  shared-prefix identical 16-token prompt prefixes over a constrained pool,
+                --prefix-share off vs on — the sharing win is *admitted
+                throughput* (tokens per fused decode tick): aliased pages
+                let every request co-run where the baseline serializes waves
+  oversubscribed a pool smaller than the aggregate decode lifetime,
+                conservative reservation vs --preempt — preemption converts
+                reserved-but-idle headroom into live decode slots, at the
+                cost of swap traffic (counted)
+
+Reports tok/s and tok/tick per row, jit signature counts (the bucketing +
+fixed-decode + CoW discipline), page/pool utilization, and scheduler stats;
+`--json` writes the whole table plus the headline ratios for the CI bench
+lane (BENCH_serve.json artifact).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -23,11 +38,46 @@ from repro.models import transformer
 from repro.models.common import ModelCtx
 
 
-def _traffic(cfg, n, rng):
+def _mixed_traffic(cfg, n, rng):
     return [Request(i, rng.integers(0, cfg.vocab,
                                     size=(int(rng.integers(2, 25)),)).astype(np.int32),
                     int(rng.integers(4, 13)))
             for i in range(n)]
+
+
+def _shared_traffic(cfg, n, rng, prefix_len=16, tail=2, max_new=6):
+    common = rng.integers(0, cfg.vocab, size=(prefix_len,)).astype(np.int32)
+    return [Request(i, np.concatenate(
+        [common, rng.integers(0, cfg.vocab, size=(tail,)).astype(np.int32)]),
+        max_new) for i in range(n)]
+
+
+def _run_one(cfg, sparams, reqs, *, label, scenario, **kw):
+    srv = Server(cfg, sparams, ctx=ModelCtx(mode="serve"), **kw)
+    for r in reqs:
+        srv.submit(r)
+    t0 = time.perf_counter()
+    ticks = srv.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in srv.completed)
+    row = dict(
+        scenario=scenario, config=label,
+        tok_s=toks / dt, tok_per_tick=toks / max(ticks, 1), ticks=ticks,
+        jit_prefill=srv.compile_counts["prefill"],
+        jit_decode=srv.compile_counts["decode"],
+        jit_cow=srv.compile_counts["cow"],
+    )
+    if srv.paged:
+        # peak_pages is measured at the pool (shared pages count once) —
+        # with sharing on it can be far below the per-slot coverage sum
+        row.update(kv_reserved_tokens=srv.pt.usable_pages * srv.page_size,
+                   kv_peak_live_pages=srv.stats["peak_pages"],
+                   **{k: v for k, v in srv.stats.items() if k != "peak_pages"})
+    else:
+        row.update(kv_reserved_tokens=srv.slots * srv.cache_len,
+                   kv_peak_live_pages="-", shared_pages=0, cow_forks=0,
+                   preemptions=0, resumes=0)
+    return row
 
 
 def run(arch="llama3.2-3b", requests=12, slots=4, cache_len=128, page_size=16):
@@ -36,28 +86,43 @@ def run(arch="llama3.2-3b", requests=12, slots=4, cache_len=128, page_size=16):
     params = transformer.init(jax.random.PRNGKey(0), cfg)
     sparams = transformer.pack_for_serve(params, cfg)
     rows = []
+
+    # -- mixed-length traffic: paged vs contiguous (identical traffic) -------
     for paged in (True, False):
-        srv = Server(cfg, sparams, slots=slots, cache_len=cache_len,
-                     paged=paged, page_size=page_size,
-                     ctx=ModelCtx(mode="serve"))
-        for r in _traffic(cfg, requests, np.random.default_rng(0)):
-            srv.submit(r)
-        t0 = time.perf_counter()
-        ticks = srv.run()
-        dt = time.perf_counter() - t0
-        toks = sum(len(r.out) for r in srv.completed)
-        live = max((int(np.sum(np.ceil((t + 1) / page_size)))
-                    for t in srv.pos_trace if t.size), default=0)
-        rows.append(dict(
-            layout="paged" if paged else "contiguous",
-            tok_s=toks / dt, ticks=ticks,
-            jit_prefill=srv.compile_counts["prefill"],
-            jit_decode=srv.compile_counts["decode"],
-            kv_reserved_tokens=(srv.pt.usable_pages * page_size if paged
-                                else slots * cache_len),
-            kv_peak_live_pages=(live if paged else "-"),
-        ))
+        rows.append(_run_one(
+            cfg, sparams, _mixed_traffic(cfg, requests, np.random.default_rng(0)),
+            label="paged" if paged else "contiguous", scenario="mixed",
+            slots=slots, cache_len=cache_len, paged=paged, page_size=page_size))
+
+    # -- shared-prefix workload over a constrained pool: sharing off vs on ---
+    # geometry mirrors tests/test_serving_sched.py::test_prefix_share_
+    # throughput...: 4 requests x (16 shared + 2 private) tokens, 6 new each;
+    # 12 usable pages of 4 fit all four concurrently ONLY when the common
+    # prefix aliases
+    sh_kw = dict(slots=4, cache_len=32, paged=True, page_size=4, num_pages=13)
+    for share in (False, True):
+        rows.append(_run_one(
+            cfg, sparams, _shared_traffic(cfg, 4, np.random.default_rng(1)),
+            label="share-on" if share else "share-off",
+            scenario="shared-prefix", prefix_share=share, **sh_kw))
+
+    # -- oversubscribed pool: conservative reservation vs preempt+swap -------
+    ov_rng = np.random.default_rng(2)
+    ov_prompts = [ov_rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+                  for _ in range(3)]
+    ov_kw = dict(slots=3, cache_len=32, paged=True, page_size=4, num_pages=9)
+    for preempt in (False, True):
+        reqs = [Request(i, p, 12) for i, p in enumerate(ov_prompts)]
+        rows.append(_run_one(
+            cfg, sparams, reqs,
+            label="preempt" if preempt else "reserve",
+            scenario="oversubscribed", preempt=preempt, **ov_kw))
     return rows
+
+
+def _ratio(rows, scenario, a, b, key="tok_per_tick"):
+    sel = {r["config"]: r[key] for r in rows if r["scenario"] == scenario}
+    return sel[a] / sel[b]
 
 
 def main(argv=None):
@@ -67,15 +132,31 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--json", default=None, metavar="OUT_JSON",
+                    help="write rows + headline ratios (BENCH_serve.json "
+                         "artifact for the CI bench lane)")
     args = ap.parse_args(argv)
     rows = run(args.arch, args.requests, args.slots, args.cache_len,
                args.page_size)
-    print("# serve bench (mixed-length traffic, identical for both layouts)")
+    print("# serve bench (identical traffic within each scenario)")
     keys = list(rows[0])
     print(",".join(keys))
     for r in rows:
-        print(",".join(f"{r[k]:.1f}" if isinstance(r[k], float) else str(r[k])
+        print(",".join(f"{r[k]:.2f}" if isinstance(r[k], float) else str(r[k])
                        for k in keys))
+    share_x = _ratio(rows, "shared-prefix", "share-on", "share-off")
+    preempt_x = _ratio(rows, "oversubscribed", "preempt", "reserve")
+    print(f"# shared-prefix admitted-throughput: {share_x:.2f}x with "
+          f"--prefix-share (acceptance floor 1.5x)")
+    print(f"# oversubscribed admitted-throughput: {preempt_x:.2f}x with "
+          f"--preempt")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows,
+                       "shared_prefix_speedup_tok_per_tick": share_x,
+                       "preempt_speedup_tok_per_tick": preempt_x}, f,
+                      indent=1, default=str)
+        print(f"# wrote {args.json}")
     return rows
 
 

@@ -3,11 +3,15 @@ model with batched requests through the continuous-batching server, with
 ternary-packed weights.
 
     PYTHONPATH=src python examples/serve_batched.py [--full] [--contiguous]
+                                                    [--sched]
 
 --full uses the actual xlstm-125m config (125M params; a couple of minutes of
 CPU for weight init + a few tokens/s decode). Default uses the reduced config
 so the example finishes in seconds. The paged KV cache (docs/SERVING.md) is
-on by default; --contiguous selects the per-slot slab reference layout.
+on by default; --contiguous selects the per-slot slab reference layout;
+--sched turns on the prefix-sharing + preemption scheduler (shared prompt
+prefixes alias physical pages, and an oversubscribed pool swaps the
+lowest-priority request to a host slab instead of rejecting work).
 """
 import sys
 
@@ -19,4 +23,6 @@ if "--full" not in sys.argv:
     args.append("--reduced")
 if "--contiguous" in sys.argv:
     args.append("--contiguous")
+elif "--sched" in sys.argv:
+    args += ["--prefix-share", "--preempt", "--temperature", "0.8"]
 serve.main(args)

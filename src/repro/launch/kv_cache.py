@@ -8,23 +8,48 @@ range. The model side (models/attention.attn_decode with `pages=`) gathers a
 slot's page list back into a contiguous view for the score/AV math, so the
 attention algebra is unchanged — only the storage is virtualized.
 
+Pages are **refcounted** and indexed by a rolling content hash of the token
+prefix they cover (`prefix_keys`), so requests that share a prompt prefix can
+map the *same* physical pages (prefix sharing). A shared page is immutable to
+its sharers: before a slot's decode write lands inside a page with
+refcount > 1, the scheduler forks it — allocate a fresh page, copy the bytes
+(`copy_page`), remap the writer — copy-on-write. Preemption swaps a victim's
+pages out to a host-side numpy slab (`swap_out_slot`) and frees them; resume
+re-allocates pages and scatters the bytes back (`swap_in_slot`), token-exact.
+
 Why it matters here: BrainTTA's pitch is one flexible datapath serving
 binary/ternary/int8 from the same engine; the serving layer above it only
 keeps that engine fed under mixed-length traffic if KV memory is allocated by
-demand (pages) rather than by worst case (slabs). Admission then becomes a
-free-page budget, not a free-slot count.
+demand (pages), deduplicated across requests (prefix sharing), and
+reclaimable under pressure (preemption + swap) rather than reserved by worst
+case.
 
 Layout invariants (property-tested in tests/test_kv_cache.py):
   * physical page 0 is reserved as scratch — never allocated; unassigned
     page-table entries point at it, so inactive slots' decode writes and
     reads beyond a slot's length land there and are masked out
-  * a page is owned by at most one slot; free + owned == num_pages - 1
-  * a slot holding n tokens owns exactly ceil(n / page_size) pages
-  * retire() returns every page to the free list
+  * refcount[p] == number of (slot, index) table entries mapping p; a page
+    is freed exactly when its refcount hits zero
+  * free + distinct-owned == num_pages - 1
+  * a slot holding n tokens maps exactly ceil(n / page_size) pages
+  * every hash-indexed page has refcount >= 1 (freed pages leave the index)
+  * retire()/swap_out() drop one reference per mapped page; CoW fork leaves
+    the source bytes untouched and gives the writer a refcount-1 copy
+
+Sharing correctness rests on determinism: a token's KV depends only on the
+token-id prefix before it (causal attention, no dropout at serve), so two
+requests whose prompts agree through a page boundary compute bit-identical
+KV for that page and may alias it. The key for page i is a rolling hash over
+tokens[0 : min((i+1)*P, n)] — the *whole* prefix, not just the page's own
+tokens — because attention makes page content a function of everything
+before it. The final partial prompt page is keyed too (by the exact covered
+prefix), which is what makes CoW load-bearing: identical prompts alias their
+boundary page and fork it as soon as their sampled continuations diverge.
 
 Recurrent mixers (mlstm/slstm/rglru) and sliding-window rings keep per-slot
 state slabs — their state is O(1) or O(window) per slot, so there is nothing
-to page; the PageTable still meters their token budget for admission.
+to page or share; the PageTable still meters their token budget for
+admission, and preemption swaps their slab rows alongside the pages.
 """
 from __future__ import annotations
 
@@ -33,6 +58,11 @@ import jax.numpy as jnp
 import numpy as np
 
 NULL_PAGE = 0   # reserved scratch page: garbage writes land here, reads are masked
+_ROOT = -1      # share-index chain parent of every prompt's first page
+
+_FNV_OFFSET = 0xcbf29ce484222325
+_FNV_PRIME = 0x100000001b3
+_MASK64 = (1 << 64) - 1
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -40,12 +70,47 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-int(n_tokens) // page_size)
 
 
-class PageTable:
-    """Host-side block-pool allocator: per-slot ordered page lists.
+def prefix_keys(tokens, page_size: int) -> list[tuple[int, int, bytes]]:
+    """Content keys for prefix sharing, one per page.
 
-    The device-side mirror (`device_table()`) is a dense (slots, max_pages)
-    int32 array — a fixed shape, so the jitted decode step never retraces as
-    pages move.
+    Key for page i is `(covered, fnv64(prefix), own_page_bytes)` with
+    `covered = min((i+1)*page_size, len(tokens))` — a rolling FNV-1a chain
+    over the *whole* prefix `tokens[0:covered]` (the page's KV depends on
+    everything before it, so the hash must too), plus the verbatim bytes of
+    the page's OWN tokens only. The exact covered length means a page
+    holding k prompt tokens only matches a request whose prompt covers
+    exactly those k tokens (a longer prompt that merely starts the same gets
+    a different key for its partial page).
+
+    Exactness without O(n²) key material: the share index composes each key
+    with the *parent physical page* of the preceding prefix page
+    (vLLM-style block chaining). By induction, an index hit therefore proves
+    the full prefix matches verbatim — parent identity pins tokens[0:i*P]
+    exactly, own bytes pin the rest — so a 64-bit hash collision between
+    different prompts can never alias one request's KV pages into another's.
+    Total key material per prompt is O(n) and the chain hash is just a fast
+    prefilter that makes unequal tuples fail comparison early.
+    """
+    keys: list[tuple[int, int, bytes]] = []
+    h = _FNV_OFFSET
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
+    for i in range(toks.shape[0]):
+        h = ((h ^ (int(toks[i]) & _MASK64)) * _FNV_PRIME) & _MASK64
+        if (i + 1) % page_size == 0 or i + 1 == toks.shape[0]:
+            start = (i // page_size) * page_size
+            keys.append((i + 1, h, toks[start: i + 1].tobytes()))
+    return keys
+
+
+class PageTable:
+    """Host-side block-pool allocator: per-slot ordered page lists, page
+    refcounts, and a prefix-hash share index.
+
+    Everything here is host numpy/dicts — refcounts, the free list, the hash
+    index, and swap bookkeeping never live on device. The device-side mirror
+    (`device_table()`) is a dense (slots, max_pages) int32 array — a fixed
+    shape, so the jitted decode step never retraces as pages move, fork, or
+    swap.
     """
 
     def __init__(self, num_pages: int, page_size: int, slots: int,
@@ -61,9 +126,12 @@ class PageTable:
         # LIFO free list: retired pages are reused first (cache-friendly)
         self._free = list(range(self.num_pages - 1, 0, -1))
         self.table = np.full((self.slots, self.max_pages), NULL_PAGE, np.int32)
-        self.held = np.zeros(self.slots, np.int32)     # pages owned per slot
+        self.held = np.zeros(self.slots, np.int32)     # pages mapped per slot
         self.tokens = np.zeros(self.slots, np.int32)   # tokens covered per slot
         self.active = np.zeros(self.slots, bool)
+        self.refcount = np.zeros(self.num_pages, np.int32)
+        self._index: dict = {}      # prefix key -> physical page
+        self._page_key: dict = {}   # physical page -> prefix key (reverse)
 
     # -- queries ---------------------------------------------------------------
 
@@ -75,35 +143,104 @@ class PageTable:
     def usable_pages(self) -> int:
         return self.num_pages - 1
 
-    def can_admit(self, n_tokens: int) -> bool:
-        return self.free_pages >= pages_for(n_tokens, self.page_size)
+    def can_admit(self, n_tokens: int, *, reclaimable: int = 0) -> bool:
+        """Whether n_tokens' pages fit the free list. `reclaimable` counts
+        pages held by lower-priority *preemptable* running requests — the
+        server passes it when `--preempt` is on, so admission stops rejecting
+        work the scheduler could make room for by swapping a victim out. It
+        may overcount (a victim's shared pages survive its preemption), so
+        callers must still verify the free list after actually preempting."""
+        return self.free_pages + int(reclaimable) >= pages_for(n_tokens,
+                                                               self.page_size)
+
+    def lookup_keys(self, keys) -> list:
+        """Share-index probe: physical page per key, or None on a miss.
+
+        Keys compose with the PARENT physical page of the preceding prefix
+        page (`_ROOT` for page 0), so a hit proves the whole prefix chain
+        matches — see `prefix_keys`. A broken chain cannot resume: sharing
+        is prefix-closed (every owner of page i also maps page i-1, so a
+        live indexed page always has a live parent)."""
+        out: list = []
+        parent = _ROOT
+        for k in keys:
+            hit = self._index.get((parent, k))
+            out.append(hit)
+            if hit is None:
+                out.extend([None] * (len(keys) - len(out)))
+                break
+            parent = hit
+        return out
 
     def slot_pages(self, slot: int) -> np.ndarray:
         return self.table[slot, : self.held[slot]].copy()
+
+    def cow_pending(self, slot: int, token_pos: int,
+                    extra_shared=frozenset()) -> bool:
+        """True iff writing `token_pos` for `slot` would land in a page the
+        slot shares (refcount > 1) — i.e. `fork_cow` will need one free page
+        before the decode write. `extra_shared` lets admission ask the
+        hypothetical "...or would share, if these pages gain a co-owner"
+        (the server's fork-debt reservation), so the write-page rule lives
+        in exactly one place."""
+        idx = int(token_pos) // self.page_size
+        if not self.active[slot] or idx >= int(self.held[slot]):
+            return False
+        pid = int(self.table[slot, idx])
+        return int(self.refcount[pid]) > 1 or pid in extra_shared
 
     def device_table(self) -> jnp.ndarray:
         return jnp.asarray(self.table)
 
     # -- mutations -------------------------------------------------------------
 
+    def _take_page(self) -> int:
+        if not self._free:
+            raise RuntimeError("page pool exhausted: want 1, free 0")
+        p = self._free.pop()
+        self.refcount[p] = 1
+        return p
+
     def _alloc(self, slot: int, n_pages: int) -> list[int]:
         if n_pages > len(self._free):
             raise RuntimeError(
                 f"page pool exhausted: want {n_pages}, free {len(self._free)}")
-        got = [self._free.pop() for _ in range(n_pages)]
+        got = [self._take_page() for _ in range(n_pages)]
         h = int(self.held[slot])
         self.table[slot, h: h + n_pages] = got
         self.held[slot] = h + n_pages
         return got
 
-    def admit(self, slot: int, n_tokens: int) -> np.ndarray:
-        """Claim `slot` and allocate pages covering n_tokens. Returns the
-        slot's page list."""
+    def _map_page(self, slot: int, page: int):
+        """Map an existing (indexed) page into the slot: one more reference."""
+        h = int(self.held[slot])
+        self.table[slot, h] = page
+        self.held[slot] = h + 1
+        self.refcount[page] += 1
+
+    def _drop_page(self, page: int) -> bool:
+        """Drop one reference; free the page iff the count hits zero (and
+        evict its share-index entry — a free page must never be findable)."""
+        self.refcount[page] -= 1
+        if self.refcount[page] > 0:
+            return False
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            self._index.pop(key, None)
+        self._free.append(int(page))
+        return True
+
+    def _check_admit(self, slot: int, n_tokens: int):
         if self.active[slot]:
             raise RuntimeError(f"slot {slot} already active")
         if n_tokens < 1 or n_tokens > self.max_pages * self.page_size:
             raise ValueError(
                 f"n_tokens={n_tokens} outside (0, {self.max_pages * self.page_size}]")
+
+    def admit(self, slot: int, n_tokens: int) -> np.ndarray:
+        """Claim `slot` and allocate private pages covering n_tokens.
+        Returns the slot's page list."""
+        self._check_admit(slot, n_tokens)
         if not self.can_admit(n_tokens):
             raise RuntimeError(
                 f"page pool exhausted: want {pages_for(n_tokens, self.page_size)},"
@@ -113,8 +250,46 @@ class PageTable:
         self.tokens[slot] = n_tokens
         return self.slot_pages(slot)
 
+    def admit_shared(self, slot: int, n_tokens: int, keys
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Claim `slot`, mapping share-index hits and allocating the misses.
+
+        `keys` is one `prefix_keys` entry per page (must be distinct — the
+        rolling chain guarantees it for real prompts). Returns
+        `(page_ids, shared)` where `shared[i]` marks pages mapped from the
+        index — the caller must NOT scatter prefill KV into those (their
+        bytes already hold the shared prefix, and may hold a co-owner's live
+        decode tokens past the key's coverage). Newly allocated pages are
+        registered under their key for future admissions to hit.
+        """
+        need = pages_for(n_tokens, self.page_size)
+        if len(keys) != need:
+            raise ValueError(f"need {need} keys, got {len(keys)}")
+        self._check_admit(slot, n_tokens)
+        hits = self.lookup_keys(keys)
+        misses = sum(1 for p in hits if p is None)
+        if self.free_pages < misses:
+            raise RuntimeError(
+                f"page pool exhausted: want {misses}, free {self.free_pages}")
+        self.active[slot] = True
+        shared = np.zeros(need, bool)
+        parent = _ROOT
+        for i, (key, hit) in enumerate(zip(keys, hits)):
+            if hit is not None:
+                self._map_page(slot, hit)
+                shared[i] = True
+                parent = hit
+            else:
+                (page,) = self._alloc(slot, 1)
+                self._index[(parent, key)] = page
+                self._page_key[page] = (parent, key)
+                parent = page
+        self.tokens[slot] = n_tokens
+        return self.slot_pages(slot), shared
+
     def extend(self, slot: int, n_tokens: int) -> list[int]:
-        """Grow slot coverage to n_tokens; returns newly allocated pages."""
+        """Grow slot coverage to n_tokens; returns newly allocated (private,
+        unindexed) pages — decode growth is per-request, never shared."""
         if not self.active[slot]:
             raise RuntimeError(f"slot {slot} not active")
         if n_tokens > self.max_pages * self.page_size:
@@ -126,21 +301,66 @@ class PageTable:
         self.tokens[slot] = n_tokens
         return got
 
-    def retire(self, slot: int) -> list[int]:
-        """Release the slot; every page goes back to the free list."""
+    def fork_cow(self, slot: int, token_pos: int) -> tuple[int, int] | None:
+        """Copy-on-write fork before `slot` writes `token_pos`.
+
+        If the page backing token_pos is shared (refcount > 1), allocate a
+        fresh page, remap the slot's table entry to it, drop one reference on
+        the source, and return `(src, dst)` — the caller MUST copy the page
+        bytes device-side (`copy_page`) before the decode write runs. Returns
+        None when the page is exclusively owned (write in place; a solely
+        owned indexed page may grow decode bytes past its key's coverage —
+        safe, because a future sharer's validity mask only reaches tokens it
+        wrote or the keyed prefix, and it overwrites-before-read beyond it).
+        The fork is never indexed: it diverges immediately.
+        """
         if not self.active[slot]:
             raise RuntimeError(f"slot {slot} not active")
-        freed = [int(p) for p in self.table[slot, : self.held[slot]]]
-        self._free.extend(freed)
+        idx = int(token_pos) // self.page_size
+        if idx >= int(self.held[slot]):
+            return None                      # next write opens a fresh page
+        src = int(self.table[slot, idx])
+        if self.refcount[src] <= 1:
+            return None
+        dst = self._take_page()
+        self.table[slot, idx] = dst
+        self.refcount[src] -= 1              # never hits 0 here (was > 1)
+        return src, dst
+
+    def _release(self, slot: int) -> list[int]:
+        freed = [int(p) for p in self.table[slot, : self.held[slot]]
+                 if self._drop_page(p)]
         self.table[slot] = NULL_PAGE
         self.held[slot] = 0
         self.tokens[slot] = 0
         self.active[slot] = False
         return freed
 
+    def retire(self, slot: int) -> list[int]:
+        """Release the slot; pages whose refcount hits zero return to the
+        free list (shared pages survive for their co-owners)."""
+        if not self.active[slot]:
+            raise RuntimeError(f"slot {slot} not active")
+        return self._release(slot)
+
+    def swap_out(self, slot: int) -> list[int]:
+        """Preemption: release the slot's mapping (same page accounting as
+        retire). The caller must gather the slot's page bytes to the host
+        slab BEFORE calling this — the freed pages are immediately reusable."""
+        if not self.active[slot]:
+            raise RuntimeError(f"slot {slot} not active")
+        return self._release(slot)
+
+    def swap_in(self, slot: int, n_tokens: int) -> np.ndarray:
+        """Resume a preempted request: allocate fresh private pages covering
+        its saved n_tokens (the caller scatters the host slab back into
+        them). Swapped-in pages are not re-registered in the share index —
+        the request's decode tail has already diverged from any prefix key."""
+        return self.admit(slot, n_tokens)
+
 
 # ---------------------------------------------------------------------------
-# cache-tree helpers (which leaves are paged, prefill scatter)
+# cache-tree helpers (which leaves are paged, prefill scatter, CoW copy, swap)
 # ---------------------------------------------------------------------------
 
 def paged_leaf_mask(cfg, slots: int, cache_len: int, num_pages: int,
@@ -156,6 +376,10 @@ def paged_leaf_mask(cfg, slots: int, cache_len: int, num_pages: int,
     return jax.tree.map(lambda a, b: a.shape != b.shape, slab, pgd)
 
 
+def _is_mid(path) -> bool:
+    return bool(path) and getattr(path[0], "key", "") == "mid"
+
+
 def scatter_prefill(cache, req_cache, slot: int, *, paged_mask=None,
                     page_ids=None, page_size: int = 0):
     """Write one request's prefill cache (batch=1) into the server cache.
@@ -164,14 +388,16 @@ def scatter_prefill(cache, req_cache, slot: int, *, paged_mask=None,
     `slot`; paged leaves chop the request's contiguous KV into page_size
     chunks and scatter them to `page_ids` (physical pages; entries equal to
     NULL_PAGE receive this request's right-padding garbage, which is fine —
-    page 0 is scratch). Scanned mid-stack leaves carry a leading
-    (n_periods,) dim and are handled in place.
+    page 0 is scratch). Prefix-shared pages are passed as NULL_PAGE too: the
+    shared physical page already holds this prefix's KV and may hold a
+    co-owner's decode tokens past it, so it must not be rewritten. Scanned
+    mid-stack leaves carry a leading (n_periods,) dim and are handled in
+    place.
     """
     ids = None if page_ids is None else jnp.asarray(page_ids, jnp.int32)
 
     def put(path, slab, req, is_paged):
-        root = getattr(path[0], "key", "") if path else ""
-        mid = root == "mid"
+        mid = _is_mid(path)
         if is_paged:
             n = ids.shape[0]
             if mid:
@@ -187,3 +413,61 @@ def scatter_prefill(cache, req_cache, slot: int, *, paged_mask=None,
     if paged_mask is None:
         paged_mask = jax.tree.map(lambda _: False, cache)
     return jax.tree_util.tree_map_with_path(put, cache, req_cache, paged_mask)
+
+
+def copy_page(cache, src, dst, paged_mask):
+    """Copy physical page `src` -> `dst` on every paged leaf (the CoW fork's
+    byte copy). `src`/`dst` are scalar int32s, so the jitted signature is
+    fixed — fork traffic never retraces. Slab leaves pass through untouched."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(path, leaf, is_paged):
+        if not is_paged:
+            return leaf
+        if _is_mid(path):
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])
+
+    return jax.tree_util.tree_map_with_path(cp, cache, paged_mask)
+
+
+def swap_out_slot(cache, slot: int, page_ids, paged_mask):
+    """Gather one slot's cache state into a host-side numpy slab (swap-out).
+
+    Paged leaves gather the slot's page list `(n_pages, page_size, …)`; slab
+    leaves (window rings, recurrent state, cross-KV) take row `slot`. The
+    result is plain numpy — swap slabs live host-side by design (they are
+    spilled capacity, not working set), and `np.asarray` of a device array is
+    a bit-exact copy in the pool dtype, so swap round-trips token-exactly.
+    Shared pages may carry a co-owner's decode bytes past this slot's
+    coverage; they ride along harmlessly (masked on resume, then overwritten).
+    """
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def grab(path, leaf, is_paged):
+        if is_paged:
+            return np.asarray(leaf[:, ids] if _is_mid(path) else leaf[ids])
+        return np.asarray(leaf[:, slot] if _is_mid(path) else leaf[slot])
+
+    return jax.tree_util.tree_map_with_path(grab, cache, paged_mask)
+
+
+def swap_in_slot(cache, saved, slot: int, page_ids, paged_mask):
+    """Scatter a swapped-out slab back into the cache (swap-in): paged leaves
+    to the freshly allocated `page_ids`, slab leaves to row `slot` (the
+    resume slot may differ from the original). Inverse of `swap_out_slot`;
+    runs unjitted (page counts vary per request, and swaps are rare)."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def put(path, leaf, sv, is_paged):
+        body = jnp.asarray(sv, leaf.dtype)
+        if is_paged:
+            if _is_mid(path):
+                return leaf.at[:, ids].set(body)
+            return leaf.at[ids].set(body)
+        if _is_mid(path):
+            return leaf.at[:, slot].set(body)
+        return leaf.at[slot].set(body)
+
+    return jax.tree_util.tree_map_with_path(put, cache, saved, paged_mask)

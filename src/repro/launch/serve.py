@@ -1,25 +1,51 @@
 """Batched serving driver: continuous batching over the packed (bit-plane)
-serve parameters, with a paged KV cache.
+serve parameters, with a paged KV cache, prefix sharing, and a
+preemption + swap scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
-        --requests 16 --max-new 32 --paged
+        --requests 16 --max-new 32 --paged --prefix-share --preempt
 
 Design (vLLM-style, shrunk to its essentials):
   * fixed `slots` decode batch; a request FIFO feeds free slots
   * admission is metered by the free-page budget (paged mode), not just by
-    free slots — a long request waits until the pool can cover its whole
-    lifetime, so mid-flight page allocation can never fail
+    free slots. Default (conservative) policy: a request waits until the pool
+    can cover its whole lifetime plus running requests' reserved headroom, so
+    mid-flight page allocation can never fail. With `--preempt`, admission
+    only needs the *prompt's* pages — when the pool runs dry mid-decode, the
+    lowest-priority running request is preempted: its pages are swapped to a
+    host-side numpy slab and freed, and it resumes later (swap-in to fresh
+    pages), token-exactly
+  * `--prefix-share`: full (and final-partial) prompt pages are keyed by a
+    rolling content hash (kv_cache.prefix_keys); admission maps share-index
+    hits instead of allocating, so identical prompt prefixes occupy one set
+    of physical pages. A shared page is copy-on-write: the scheduler forks it
+    (fresh page + device byte copy) before a slot's decode write would land
+    inside it
   * prefill runs per admitted request, right-padded to one of a few bucket
     lengths (the jit cache holds <= len(buckets) prefill signatures instead
     of one per prompt length); its KV is scattered into the slot's pages
-    (paged) or slab row (contiguous)
+    (paged; shared pages are skipped — they already hold this prefix) or
+    slab row (contiguous)
   * one fused decode step advances every active slot each tick with a
     per-slot position vector — each slot's RoPE phase, cache-write index and
     validity mask follow its own clock, so mixed-length traffic decodes
     correctly (the old aligned-position decode used max(pos) for everyone)
-  * retirement frees the slot's pages back to the pool; slot reuse and page
-    churn never re-jit (the decode signature is fixed)
+  * retirement frees the slot's pages back to the pool (refcounted: shared
+    pages survive for their co-owners); slot reuse, page churn, CoW forks and
+    swaps never re-jit (decode and fork signatures are fixed)
   * packed weights: `pack_for_serve` (binary/ternary bit-planes, int8 codes)
+
+Request lifecycle states: WAITING (queued) -> RUNNING (slot + pages) ->
+PREEMPTED (host swap slab, no pages) -> RUNNING -> done. Priority is
+`(priority desc, rid asc)` — FCFS within a priority class; the scheduler
+never preempts a victim at-or-above the claimant's priority, so the oldest
+running request always finishes (no livelock).
+
+Sampling: each request carries (temperature, seed); tokens are drawn
+host-side by `models.common.sample_token`, a *stateless* rng keyed by
+(seed, token index) — replay is deterministic regardless of batching,
+preemption, or sharing history, which is what lets the scheduler tests
+demand token-exactness. temperature=0 (default) is greedy argmax.
 
 `--contiguous` keeps the old per-slot slab layout as a reference path; both
 run the same per-slot-position decode step. See docs/SERVING.md.
@@ -28,7 +54,8 @@ run the same per-slot-position decode step. See docs/SERVING.md.
 (column-parallel qkv/up, row-parallel out/down with a pre-requant int32
 psum), packed weights and the paged pool are device-placed by
 launch/sharding.py, and the result is token-exact vs. single-device serving
-(tests/test_serving_tp.py). Admission and the PageTable stay host-global.
+(tests/test_serving_tp.py, tests/test_serving_sched.py). Admission, the
+PageTable (refcounts, hash index) and swap slabs stay host-side.
 
 On a pod this wraps the decode_32k/long_500k dry-run cells: same
 decode_step, mesh sharding from launch/sharding.py.
@@ -47,7 +74,9 @@ from repro.configs import get_config
 from repro.launch import kv_cache
 from repro.launch.kv_cache import NULL_PAGE, PageTable, pages_for
 from repro.models import transformer
-from repro.models.common import ModelCtx
+from repro.models.common import ModelCtx, sample_token
+
+WAITING, RUNNING, PREEMPTED = "WAITING", "RUNNING", "PREEMPTED"
 
 
 @dataclasses.dataclass
@@ -55,8 +84,20 @@ class Request:
     rid: int
     prompt: np.ndarray
     max_new: int
+    temperature: float = 0.0   # 0 => greedy argmax
+    seed: int = 0              # stateless sampling stream (with token index)
+    priority: int = 0          # larger = more important; FCFS within a class
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    state: str = WAITING
+
+
+@dataclasses.dataclass
+class _SwapState:
+    """Host-side image of a preempted request: its decode position and the
+    numpy slab holding its page bytes + per-slot slab rows."""
+    pos: int
+    data: object
 
 
 def default_buckets(lo: int, hi: int) -> tuple[int, ...]:
@@ -73,6 +114,7 @@ class Server:
                  paged: bool = True, page_size: int = 32,
                  num_pages: int | None = None,
                  buckets: tuple[int, ...] | None = None,
+                 prefix_share: bool = False, preempt: bool = False,
                  ctx: ModelCtx | None = None, mesh=None):
         self.cfg = cfg
         self.sp = transformer.build_specs(cfg)
@@ -89,6 +131,11 @@ class Server:
         self.slots = slots
         self.paged = paged
         self.page_size = page_size
+        self.prefix_share = bool(prefix_share)
+        self.preempt = bool(preempt)
+        if (self.prefix_share or self.preempt) and not paged:
+            raise ValueError("--prefix-share/--preempt need the paged cache "
+                             "(--contiguous keeps the conservative slab path)")
         if paged and cache_len % page_size:
             cache_len += page_size - cache_len % page_size
         self.cache_len = cache_len
@@ -138,10 +185,14 @@ class Server:
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
         self.queue: list[Request] = []
+        self.preempted: list[Request] = []
+        self._swap: dict[int, _SwapState] = {}
         self.completed: list[Request] = []
         self.pos_trace: list[np.ndarray] = []   # per-tick active-slot positions
+        self.stats = {"shared_pages": 0, "cow_forks": 0,
+                      "preemptions": 0, "resumes": 0, "peak_pages": 0}
 
-        self.compile_counts = {"prefill": 0, "decode": 0}
+        self.compile_counts = {"prefill": 0, "decode": 0, "cow": 0}
         self._prefill = self._counted("prefill", lambda p, t, lp:
             transformer.prefill(p, t, self.sp, self.ctx,
                                 cache_len=self.cache_len, last_pos=lp))
@@ -149,6 +200,10 @@ class Server:
             self._decode = self._counted("decode", lambda p, c, t, pos, pg:
                 transformer.decode_step(p, c, t, pos, self.sp, self.ctx,
                                         pages=pg))
+            # CoW byte copy: scalar (src, dst) page ids -> fixed signature,
+            # so fork traffic compiles exactly once
+            self._cow = self._counted("cow", lambda c, a, b:
+                kv_cache.copy_page(c, a, b, self.paged_mask))
         else:
             self._decode = self._counted("decode", lambda p, c, t, pos:
                 transformer.decode_step(p, c, t, pos, self.sp, self.ctx))
@@ -168,14 +223,20 @@ class Server:
             raise ValueError(f"prompt len {len(req.prompt)} exceeds max bucket "
                              f"{self.buckets[-1]}")
         if self.paged:
+            # lifetime pages alone decide servability: a request that ends up
+            # running solo can never need a CoW fork (refcount > 1 requires a
+            # live co-owner slot), so no +1 for sharing here — the per-tick
+            # fork debt is reserved by admission, not by submit
             need = pages_for(self._need_tokens(req), self.page_size)
             if need > self.pt.usable_pages:
-                # un-admittable head would livelock run(): admission waits
+                # un-admittable head would livelock run(): admission (and,
+                # under --preempt, a solo run after evicting everyone) waits
                 # for pages the pool can never have
                 raise ValueError(
                     f"request needs {need} pages but the pool only has "
                     f"{self.pt.usable_pages} usable; raise --num-pages or "
                     f"shrink the request")
+        req.state = WAITING
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:
@@ -187,41 +248,184 @@ class Server:
         """KV tokens this request can write over its whole lifetime."""
         return min(len(req.prompt) + max(req.max_new, 1) - 1, self.cache_len)
 
+    @staticmethod
+    def _prio(req: Request):
+        """Scheduler key: smaller sorts first = more important. Larger
+        `priority` wins; FCFS (rid) breaks ties. Victims are chosen from the
+        max end, so the oldest highest-priority request is never preempted."""
+        return (-req.priority, req.rid)
+
+    def _sample(self, req: Request, logits_row) -> int:
+        return sample_token(logits_row, req.temperature, req.seed,
+                            len(req.out))
+
+    # -- admission -------------------------------------------------------------
+
     def _outstanding_demand(self) -> int:
         """Pages active slots may still claim (their reserved headroom)."""
         return sum(
             pages_for(self._need_tokens(r), self.page_size) - int(self.pt.held[s])
             for s, r in enumerate(self.slot_req) if r is not None)
 
-    def _admit(self):
-        for s in range(self.slots):
-            if self.slot_req[s] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            if self.paged:
-                need = pages_for(self._need_tokens(req), self.page_size)
-                if self.pt.free_pages - self._outstanding_demand() < need:
-                    break   # FIFO: the head waits for pages; no queue jumping
-            self.queue.pop(0)
-            n = len(req.prompt)
-            bucket = self._bucket(n)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :n] = req.prompt
-            logits, rc = self._prefill(self.params, jnp.asarray(toks),
-                                       jnp.asarray([n - 1], jnp.int32))
-            req.out.append(int(jnp.argmax(logits[0, -1])))
-            if self.paged:
-                ids = self.pt.admit(s, n)
-                pad = pages_for(bucket, self.page_size) - len(ids)
-                ids = np.concatenate(
-                    [ids, np.full(pad, NULL_PAGE, np.int32)]) if pad else ids
-                self.cache = kv_cache.scatter_prefill(
-                    self.cache, rc, s, paged_mask=self.paged_mask,
-                    page_ids=ids, page_size=self.page_size)
+    def _fork_debt(self, extra_shared=frozenset()) -> int:
+        """Pages CoW forks may still claim: one per active slot whose next
+        decode write lands in a page that is shared (or would become shared
+        if the candidate admission maps the pages in `extra_shared`)."""
+        return sum(1 for s, r in enumerate(self.slot_req) if r is not None
+                   and self.pt.cow_pending(s, int(self.slot_pos[s]),
+                                           extra_shared))
+
+    def _admission_ok(self, req: Request, keys) -> bool:
+        """Page-budget admission test for the queue head.
+
+        --preempt: only the prompt's pages (minus share hits) must be free —
+        decode headroom is reclaimed later by preempting, so the conservative
+        reservation no longer rejects admissible work (PageTable.can_admit's
+        `reclaimable` is the same accounting, used on the resume path).
+        Default: lifetime reservation — free pages must cover this request's
+        whole lifetime plus every running request's remaining headroom and
+        pending CoW-fork debt, so extend/fork can never fail mid-flight.
+        """
+        hits = self.pt.lookup_keys(keys) if keys is not None else []
+        nhit = sum(1 for p in hits if p is not None)
+        if self.preempt:
+            need_now = pages_for(len(req.prompt), self.page_size) - nhit
+            return self.pt.free_pages >= need_now
+        lifetime = pages_for(self._need_tokens(req), self.page_size) - nhit
+        debt = 0
+        if self.prefix_share:
+            debt = self._fork_debt({p for p in hits if p is not None})
+            if hits and hits[-1] is not None and len(req.prompt) % self.page_size:
+                debt += 1    # its own boundary page arrives shared
+        return self.pt.free_pages - self._outstanding_demand() - debt >= lifetime
+
+    def _try_start(self, s: int) -> bool:
+        """Prefill + admit the queue head into slot s (False: it must wait)."""
+        req = self.queue[0]
+        keys = None
+        if self.paged:
+            keys = (kv_cache.prefix_keys(req.prompt, self.page_size)
+                    if self.prefix_share else None)
+            if not self._admission_ok(req, keys):
+                return False   # FIFO: the head waits for pages; no jumping
+        self.queue.pop(0)
+        n = len(req.prompt)
+        bucket = self._bucket(n)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt
+        logits, rc = self._prefill(self.params, jnp.asarray(toks),
+                                   jnp.asarray([n - 1], jnp.int32))
+        req.out.append(self._sample(req, np.asarray(logits[0, -1])))
+        if self.paged:
+            if keys is not None:
+                ids, shared = self.pt.admit_shared(s, n, keys)
+                self.stats["shared_pages"] += int(shared.sum())
+                # shared pages already hold this prefix's KV (and possibly a
+                # co-owner's decode bytes past it) — never rescatter them
+                scatter_ids = np.where(shared, NULL_PAGE, ids).astype(np.int32)
             else:
-                self.cache = kv_cache.scatter_prefill(self.cache, rc, s)
-            self.slot_req[s] = req
-            self.slot_pos[s] = n
+                scatter_ids = self.pt.admit(s, n)
+            pad = pages_for(bucket, self.page_size) - len(scatter_ids)
+            if pad:
+                scatter_ids = np.concatenate(
+                    [scatter_ids, np.full(pad, NULL_PAGE, np.int32)])
+            self.cache = kv_cache.scatter_prefill(
+                self.cache, rc, s, paged_mask=self.paged_mask,
+                page_ids=scatter_ids, page_size=self.page_size)
+        else:
+            self.cache = kv_cache.scatter_prefill(self.cache, rc, s)
+        req.state = RUNNING
+        self.slot_req[s] = req
+        self.slot_pos[s] = n
+        return True
+
+    def _admit(self):
+        """Fill free slots: resume preempted requests first (strict priority
+        — fresh work never jumps a swapped-out request), then the FIFO head."""
+        for s in range(self.slots):
+            if self.slot_req[s] is not None:
+                continue
+            if self.preempted:
+                if not self._resume_into(s):
+                    break
+                continue
+            if not self.queue:
+                break
+            if not self._try_start(s):
+                break
+
+    # -- preemption / swap -----------------------------------------------------
+
+    def _preempt(self, s: int):
+        """Swap slot s out: gather its page bytes + slab rows to a host numpy
+        slab, release its pages (refcounted — shared pages survive for their
+        co-owners), and park the request on the preempted list."""
+        req = self.slot_req[s]
+        ids = self.pt.slot_pages(s)
+        data = kv_cache.swap_out_slot(self.cache, s, ids, self.paged_mask)
+        self.pt.swap_out(s)
+        self._swap[req.rid] = _SwapState(int(self.slot_pos[s]), data)
+        req.state = PREEMPTED
+        self.preempted.append(req)
+        self.slot_req[s] = None
+        self.slot_pos[s] = 0
+        self.stats["preemptions"] += 1
+
+    def _make_room(self, need_free: int, worse_than) -> bool:
+        """Preempt strictly-lower-priority running requests (worst first)
+        until `need_free` pages are free. False if victims run out."""
+        while self.pt.free_pages < need_free:
+            victims = [s for s, r in enumerate(self.slot_req)
+                       if r is not None and self._prio(r) > worse_than]
+            if not victims:
+                return False
+            self._preempt(max(victims,
+                              key=lambda v: self._prio(self.slot_req[v])))
+        return True
+
+    def _resume_into(self, s: int) -> bool:
+        """Swap the most-important preempted request back into slot s."""
+        req = min(self.preempted, key=self._prio)
+        st = self._swap[req.rid]
+        # cover through the NEXT write (pos + 1), not just the saved
+        # coverage: resuming into exactly pages_for(pos) free pages would
+        # swap the whole KV in only for _prepare_pages to find the pool dry
+        # at its extend and swap it straight back out — a full round trip
+        # with zero decode progress (swapped-in pages are private, so no
+        # CoW page is ever needed on top). swap_in CLAIMS that coverage
+        # immediately — a later resume or admission in this same pass cannot
+        # consume the write page out from under an earlier, more important
+        # resume (a pre-check alone would not be held across the pass).
+        cover = min(st.pos + 1, self.max_pages * self.page_size)
+        need = pages_for(cover, self.page_size)
+        if self.pt.free_pages < need:
+            reclaim = sum(int(self.pt.held[v])
+                          for v, r in enumerate(self.slot_req)
+                          if r is not None and self._prio(r) > self._prio(req))
+            if not self.pt.can_admit(cover, reclaimable=reclaim):
+                return False
+            # can_admit's reclaimable may overcount shared pages; verify by
+            # actually evicting, and give up until next tick if it falls short
+            if not self._make_room(need, self._prio(req)):
+                return False
+        ids = self.pt.swap_in(s, cover)
+        # the saved slab covers pages_for(pos) pages; a boundary resume
+        # allocates one page beyond it, filled by the very next decode write
+        self.cache = kv_cache.swap_in_slot(
+            self.cache, st.data, s, ids[: pages_for(st.pos, self.page_size)],
+            self.paged_mask)
+        if self.mesh is not None:
+            from repro.launch import sharding as shardlib
+            self.cache = shardlib.repin_serve_cache(self.mesh, self.cache)
+        self.preempted.remove(req)
+        del self._swap[req.rid]
+        req.state = RUNNING
+        self.slot_req[s] = req
+        self.slot_pos[s] = st.pos
+        self.stats["resumes"] += 1
+        return True
+
+    # -- serving loop ----------------------------------------------------------
 
     def _retire(self):
         for s, req in enumerate(self.slot_req):
@@ -235,8 +439,43 @@ class Server:
                 self.slot_req[s] = None
                 self.slot_pos[s] = 0
 
+    def _prepare_pages(self):
+        """Per-tick page work, most-important slot first: CoW-fork the write
+        page if it is shared, then extend coverage for the write at
+        slot_pos[s]. When the pool runs dry (--preempt only; the conservative
+        reservation makes it unreachable otherwise), evict strictly-lower-
+        priority victims — or the claimant itself when none remain."""
+        order = sorted((s for s, r in enumerate(self.slot_req) if r is not None),
+                       key=lambda v: self._prio(self.slot_req[v]))
+        for s in order:
+            req = self.slot_req[s]
+            if req is None:
+                continue           # preempted by a more important slot's claim
+            pos = int(self.slot_pos[s])
+            need = max(0, pages_for(pos + 1, self.page_size)
+                       - int(self.pt.held[s]))
+            if self.prefix_share and self.pt.cow_pending(s, pos):
+                need += 1
+            if need > self.pt.free_pages:
+                if not self.preempt or not self._make_room(need, self._prio(req)):
+                    if self.preempt:
+                        self._preempt(s)   # no cheaper victim: swap itself out
+                        continue
+                    raise RuntimeError(
+                        "page pool exhausted mid-decode without --preempt "
+                        "(admission reservation should have prevented this)")
+            if self.prefix_share:
+                fork = self.pt.fork_cow(s, pos)
+                if fork is not None:
+                    src, dst = fork
+                    self.cache = self._cow(self.cache, jnp.int32(src),
+                                           jnp.int32(dst))
+                    self.stats["cow_forks"] += 1
+            self.pt.extend(s, pos + 1)
+
     def step(self):
-        """One server tick: admit -> fused decode over active slots -> retire.
+        """One server tick: admit/resume -> page work (CoW fork, extend,
+        preempt) -> fused decode over active slots -> retire.
 
         The pre-decode retire pass clears requests that are already complete
         at admission (max_new == 1, or a prompt that fills the cache) so they
@@ -244,15 +483,19 @@ class Server:
         """
         self._admit()
         self._retire()
+        if self.paged:
+            self._prepare_pages()
+            # physical pool pressure (aliasing-aware: shared pages count
+            # once) — what the slab layout would need is Σ per-slot coverage
+            self.stats["peak_pages"] = max(
+                self.stats["peak_pages"],
+                self.pt.usable_pages - self.pt.free_pages)
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return bool(self.queue)
+            return bool(self.queue or self.preempted)
         tokens = np.zeros((self.slots, 1), np.int32)
         for s in active:
             tokens[s, 0] = self.slot_req[s].out[-1]
-        if self.paged:
-            for s in active:   # cover the write at position slot_pos[s]
-                self.pt.extend(s, int(self.slot_pos[s]) + 1)
         self.pos_trace.append(self.slot_pos[active].copy())
         pos = jnp.asarray(self.slot_pos)                    # (slots,) per-slot
         if self.paged:
@@ -262,16 +505,26 @@ class Server:
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               jnp.asarray(tokens), pos)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        if any(self.slot_req[s].temperature > 0 for s in active):
+            rows = np.asarray(logits[:, 0])        # (slots, V) to host
+            pick = lambda s: self._sample(self.slot_req[s], rows[s])
+        else:
+            # pure-greedy tick: argmax on device, transfer (slots,) ints —
+            # not the whole vocab matrix (np and jnp argmax both break ties
+            # to the lowest index, so this equals sample_token at temp 0)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            pick = lambda s: int(nxt[s])
         for s in active:
-            self.slot_req[s].out.append(int(nxt[s]))
+            self.slot_req[s].out.append(pick(s))
             self.slot_pos[s] += 1
         self._retire()
-        return bool(any(r is not None for r in self.slot_req) or self.queue)
+        return bool(any(r is not None for r in self.slot_req) or self.queue
+                    or self.preempted)
 
     def run(self):
         ticks = 0
-        while self.queue or any(r is not None for r in self.slot_req):
+        while (self.queue or self.preempted
+               or any(r is not None for r in self.slot_req)):
             self.step()
             ticks += 1
         return ticks
@@ -308,11 +561,27 @@ def main(argv=None):
     grp.add_argument("--paged", dest="paged", action="store_true", default=True,
                      help="paged KV cache (default): block pool + page table")
     grp.add_argument("--contiguous", dest="paged", action="store_false",
-                     help="per-slot slab KV cache (reference layout)")
+                     help="per-slot slab KV cache (reference layout; keeps "
+                          "the conservative slot/lifetime admission)")
     ap.add_argument("--page-size", type=int, default=32)
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool size; < slots*cache_len/page_size oversubscribes "
                          "and admission throttles on the page budget")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="hash-index full prompt pages so identical prefixes "
+                         "map one set of physical pages (copy-on-write on "
+                         "decode divergence)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="admit on prompt pages only; when the pool runs dry "
+                         "mid-decode, swap the lowest-priority running "
+                         "request to a host slab and resume it later")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy); "
+                         "stateless rng keyed by (seed, token index)")
+    ap.add_argument("--jit-budget", type=int, default=None,
+                    help="fail (exit 1) if the total trace-time compile "
+                         "signatures (prefill buckets + decode + cow) exceed "
+                         "this — the CI recompile-regression gate")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -350,13 +619,32 @@ def main(argv=None):
     srv = Server(cfg, sparams, slots=args.slots, cache_len=args.cache_len,
                  paged=args.paged, page_size=args.page_size,
                  num_pages=args.num_pages, mesh=mesh,
+                 prefix_share=args.prefix_share, preempt=args.preempt,
                  ctx=ModelCtx(mode="serve", backend=args.backend,
                               impl=args.impl, tune=tune))
     rng = np.random.default_rng(0)
+    # with --prefix-share, every request repeats a common prompt prefix
+    # (page-aligned so it aliases whole pages) and request 1 duplicates
+    # request 0 EXACTLY — the duplicate aliases the partial boundary page
+    # too, so the co-running pair forces a CoW fork on its first divergent
+    # decode write (exact-coverage keys mean prefix-only overlap never
+    # shares the boundary page, hence never forks)
+    shared_prefix = (rng.integers(0, cfg.vocab,
+                                  size=(args.page_size,)).astype(np.int32)
+                     if args.prefix_share else None)
     t0 = time.time()
+    first = None
     for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab, size=(rng.integers(4, 17),)).astype(np.int32)
-        srv.submit(Request(i, prompt, args.max_new))
+        prompt = rng.integers(0, cfg.vocab,
+                              size=(rng.integers(4, 17),)).astype(np.int32)
+        if shared_prefix is not None:
+            prompt = np.concatenate([shared_prefix, prompt[:8]])
+            if i == 0:
+                first = prompt
+            elif i == 1:
+                prompt = first.copy()
+        srv.submit(Request(i, prompt, args.max_new,
+                           temperature=args.temperature, seed=i))
     ticks = srv.run()
     dt = time.time() - t0
     total_new = sum(len(r.out) for r in srv.completed)
@@ -364,11 +652,21 @@ def main(argv=None):
     print(f"served {len(srv.completed)} requests, {total_new} tokens, "
           f"{ticks} ticks, {dt:.1f}s ({total_new/dt:.1f} tok/s on CPU, "
           f"{layout} cache)")
+    total_sigs = sum(srv.compile_counts.values())
     print(f"jit signatures: prefill={srv.compile_counts['prefill']} "
-          f"(buckets={list(srv.buckets)}), decode={srv.compile_counts['decode']}")
+          f"(buckets={list(srv.buckets)}), decode={srv.compile_counts['decode']}, "
+          f"cow={srv.compile_counts['cow']}, total={total_sigs}")
     if args.paged:
         print(f"page pool: {srv.pt.usable_pages} usable pages x "
               f"{srv.pt.page_size} tokens, {srv.pt.free_pages} free at exit")
+    if args.prefix_share or args.preempt:
+        print(f"scheduler: shared_pages={srv.stats['shared_pages']} "
+              f"cow_forks={srv.stats['cow_forks']} "
+              f"preemptions={srv.stats['preemptions']} "
+              f"resumes={srv.stats['resumes']}")
+    if args.jit_budget is not None and total_sigs > args.jit_budget:
+        raise SystemExit(f"jit budget exceeded: {total_sigs} trace-time "
+                         f"signatures > committed budget {args.jit_budget}")
     return srv
 
 

@@ -267,6 +267,15 @@ def serve_cache_shardings(mesh: Mesh, cache_tree):
     that stays unsharded. Axes the mesh does not divide fall back to
     replicated (fit_spec), e.g. the default pool of slots*max_pages+1 pages
     (the +1 scratch page makes it odd).
+
+    Scheduler state is deliberately OUTSIDE these rules: page refcounts, the
+    prefix-share hash index, the free list and preemption swap slabs are all
+    host-side numpy (see launch/kv_cache.py) — spilled capacity and
+    allocator metadata, not working set, so they never occupy device memory
+    or enter a jitted signature. Prefix sharing and copy-on-write only remap
+    *which* page ids appear in the (host) table; the device placement rules
+    above are unchanged by them — re-verified token-exact under `--mesh` by
+    tests/test_serving_sched.py.
     """
     def one(path, leaf):
         names = _names(path)
@@ -277,6 +286,18 @@ def serve_cache_shardings(mesh: Mesh, cache_tree):
         return NamedSharding(mesh, fit_spec(P(*dims), leaf.shape, mesh))
 
     return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def repin_serve_cache(mesh: Mesh, cache_tree):
+    """Re-apply the serve cache placement after a host-driven update.
+
+    Swap-in scatters a preempted request's host slab back into the pool with
+    eager `.at[ids].set` ops; outside jit, sharding propagation through such
+    an update is backend-dependent, so the server re-pins the result to the
+    canonical `serve_cache_shardings` layout (a no-op device_put when the
+    placement already matches). Keeping this here — next to the rules it
+    re-applies — means serve.py cannot drift from the layout contract."""
+    return jax.device_put(cache_tree, serve_cache_shardings(mesh, cache_tree))
 
 
 def cache_shardings(mesh: Mesh, cache_tree, *, batch: int):

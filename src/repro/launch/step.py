@@ -150,11 +150,20 @@ def make_prefill_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
 
 
 def make_decode_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
+    """Serve decode. When `batch` carries a "pages" entry (a
+    (slots, max_pages) int32 page table), the paged-pool layout is lowered —
+    the same fixed decode signature the continuous-batching server jits, so
+    dry-run cells cost the real thing. Reads go through the PageTable
+    indirection, which is what makes prefix-shared pages transparent to the
+    model; the WRITE side relies on the scheduler's fork-before-write
+    contract (launch/serve.py `_prepare_pages`): by the time this step runs,
+    every page a slot writes is exclusively owned."""
     ctx = ctx or ModelCtx(mode="serve")
 
     def decode_step(params, batch):
         return transformer.decode_step(params, batch["cache"], batch["tokens"],
-                                       batch["pos"], sp, ctx)
+                                       batch["pos"], sp, ctx,
+                                       pages=batch.get("pages"))
     return decode_step
 
 

@@ -324,6 +324,15 @@ def attn_decode(p, x, cache, pos, specs: AttnSpecs, cfg: ArchConfig,
                   Unallocated table entries point at page 0 (scratch); reads
                   from it are masked by `valid`, writes to it are discarded
                   garbage by construction.
+
+    Prefix sharing contract: one physical page may appear in SEVERAL rows of
+    `pages` (requests aliasing a common prompt prefix) — the gather-based
+    read path is oblivious to that. The write below is only safe because the
+    scheduler forks shared pages BEFORE handing the table to this step
+    (copy-on-write in launch/serve.py `_prepare_pages` via
+    kv_cache.fork_cow + copy_page): by contract, `pages[b, pos[b]//P]` is
+    exclusively owned by row b whenever row b is active. Do not add writes
+    through `pages` anywhere else without routing them past that fork.
     """
     b = x.shape[0]
     y = common.linear_apply(p["qkv"], x, specs.qkv, ctx)

@@ -12,6 +12,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import qlinear
 from repro.core.precision import LayerQuant, PrecisionPolicy
@@ -196,6 +197,35 @@ def conv1d_apply(p, x: jnp.ndarray, state: jnp.ndarray | None = None):
     y = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(width))
     new_state = xx[:, -(width - 1):, :] if width > 1 else state
     return (y + p["b"].astype(x.dtype), new_state)
+
+
+# -- serve-side token sampling ----------------------------------------------------
+
+def sample_token(logits_row, temperature: float, seed: int, index: int) -> int:
+    """Host-side next-token draw for the serving loop (and its test oracles).
+
+    temperature <= 0 is greedy argmax. Otherwise a categorical draw from
+    softmax(logits / T) using a STATELESS numpy rng keyed by (seed, index) —
+    no mutable stream, so token `index` of a request reproduces bit-exactly
+    no matter how the request was batched, preempted/resumed, or
+    prefix-shared in between. That determinism is what lets the scheduler
+    tests demand token-exact equality against a sequential oracle, and what
+    makes copy-on-write observable at all: two requests sharing a prompt
+    prefix diverge only through (seed, temperature).
+
+    Runs on host float64 from the f32 logits — identical logits therefore
+    always give identical tokens (argmax ties break to the lowest index on
+    both np and jnp).
+    """
+    row = np.asarray(logits_row, np.float64).reshape(-1)
+    if temperature <= 0.0:
+        return int(np.argmax(row))
+    z = row / float(temperature)
+    z -= z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    rng = np.random.default_rng((int(seed) & 0x7FFFFFFF, int(index)))
+    return int(rng.choice(row.shape[0], p=p))
 
 
 # -- loss -------------------------------------------------------------------------

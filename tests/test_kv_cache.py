@@ -1,10 +1,14 @@
-"""PageTable invariants under random admit/extend/retire traces.
+"""PageTable invariants under random admit/extend/retire traces — now with
+prefix sharing (refcounted hash-indexed pages), copy-on-write forks, and
+preemption swap in/out.
 
 The page pool is the correctness foundation of the paged serving path: a
-double-owned page silently cross-contaminates two requests' KV, a leaked
-page shrinks capacity forever, and a coverage mismatch (pages != tokens)
-makes the decode write index run off the slot's page list. Property-test all
-of it with random traces (hypothesis, or the deterministic fallback shim).
+refcount that drifts from the table silently cross-contaminates or leaks
+pages, a stale share-index entry hands a freed page to a new request, a CoW
+fork that drops the source's bytes corrupts every co-owner, and a coverage
+mismatch (pages != tokens) makes the decode write index run off the slot's
+page list. Property-test all of it with random traces (hypothesis, or the
+deterministic fallback shim).
 """
 import random
 
@@ -13,17 +17,33 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.launch.kv_cache import NULL_PAGE, PageTable, pages_for
+from repro.launch import kv_cache
+from repro.launch.kv_cache import (NULL_PAGE, PageTable, pages_for,
+                                   prefix_keys)
 
 
 def _check_invariants(pt: PageTable, model: dict):
     owned = [int(p) for s in range(pt.slots) for p in pt.table[s, : pt.held[s]]]
+    distinct = set(owned)
     # the scratch page is never handed out
-    assert NULL_PAGE not in owned
-    # no page owned twice
-    assert len(owned) == len(set(owned)), owned
-    # free + used == pool (minus the reserved scratch page)
-    assert pt.free_pages + len(owned) == pt.num_pages - 1
+    assert NULL_PAGE not in distinct
+    # refcount == number of (slot, index) table mappings, for every page —
+    # in particular a page is mapped by at most one slot unless it is shared
+    counts: dict[int, int] = {}
+    for p in owned:
+        counts[p] = counts.get(p, 0) + 1
+    for p in range(pt.num_pages):
+        assert int(pt.refcount[p]) == counts.get(p, 0), \
+            (p, counts.get(p, 0), int(pt.refcount[p]))
+    # free + distinct-owned == pool (minus the reserved scratch page):
+    # a page is freed exactly when its refcount hits zero
+    assert pt.free_pages + len(distinct) == pt.num_pages - 1
+    assert distinct.isdisjoint(pt._free)
+    # the share index only ever points at live pages, bijectively
+    for key, p in pt._index.items():
+        assert int(pt.refcount[p]) >= 1, (key, p)
+        assert pt._page_key[p] == key
+    assert len(pt._page_key) == len(pt._index)
     for s in range(pt.slots):
         if pt.active[s]:
             # per-slot pages cover exactly the slot's tokens (pos + 1)
@@ -167,6 +187,197 @@ def test_pool_device_sharded_over_data_host_table_global():
     # the table is host numpy, untouched by device placement
     assert isinstance(pt.table, np.ndarray)
     assert pool.sharding.spec == P("data")    # placement survived the writes
+
+
+def _keys_for(pid: int, n: int, page_size: int) -> list:
+    """Deterministic per-"prompt-stream" share keys: two admits with the same
+    pid alias pages wherever their covered token counts line up — the same
+    exact-coverage contract `prefix_keys` provides for real token prefixes."""
+    ks, c = [], 0
+    while c < n:
+        c = min(c + page_size, n)
+        ks.append((pid, c))
+    return ks
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_shared_cow_swap_traces_maintain_invariants(seed):
+    """Random traces over the FULL action set — shared admit, extend, CoW
+    fork, swap out/in, retire — keep every allocator invariant: refcounts
+    mirror the table, a page is freed iff its refcount hits zero, forks are
+    private and unindexed, decode growth is never shared, swapped-in pages
+    are fresh, and the share index never points at a free page."""
+    rng = random.Random(seed)
+    page_size = rng.choice([1, 2, 4])
+    slots = rng.randint(2, 5)
+    max_pages = rng.randint(2, 6)
+    num_pages = rng.randint(4, slots * max_pages + 4)
+    pt = PageTable(num_pages, page_size, slots, max_pages)
+    cap = max_pages * page_size
+    model: dict[int, int] = {}
+    swapped: list[int] = []         # token counts of swapped-out requests
+
+    for _ in range(80):
+        s = rng.randrange(slots)
+        op = rng.random()
+        if not pt.active[s] and op < 0.35:
+            n = rng.randint(1, cap)
+            keys = _keys_for(rng.randrange(3), n, page_size)
+            hits = pt.lookup_keys(keys)
+            misses = sum(1 for h in hits if h is None)
+            if pt.free_pages >= misses:
+                ids, shared = pt.admit_shared(s, n, keys)
+                assert len(ids) == pages_for(n, page_size)
+                assert int(shared.sum()) == len(hits) - misses
+                for i, h in enumerate(hits):
+                    if h is not None:      # every hit really aliased
+                        assert int(ids[i]) == h and shared[i]
+                model[s] = n
+            else:
+                with pytest.raises(RuntimeError):
+                    pt.admit_shared(s, n, keys)
+        elif not pt.active[s] and swapped and op < 0.5:
+            n = swapped[-1]
+            if pt.can_admit(n):
+                ids = pt.swap_in(s, n)
+                swapped.pop()
+                assert len(ids) == pages_for(n, page_size)
+                for p in ids:              # private, fresh, unindexed
+                    assert int(pt.refcount[p]) == 1
+                    assert int(p) not in pt._page_key
+                model[s] = n
+        elif pt.active[s] and op < 0.62:
+            n = rng.randint(1, cap)
+            need = pages_for(n, page_size) - int(pt.held[s])
+            if n <= model[s]:
+                assert pt.extend(s, n) == []          # no-op growth
+            elif need <= pt.free_pages:
+                got = pt.extend(s, n)
+                for p in got:              # decode growth is never shared
+                    assert int(pt.refcount[p]) == 1
+                    assert p not in pt._page_key
+                model[s] = n
+            else:
+                with pytest.raises(RuntimeError):
+                    pt.extend(s, n)
+        elif pt.active[s] and op < 0.78:
+            pos = rng.randrange(model[s])
+            idx = pos // page_size
+            before = int(pt.table[s, idx])
+            rc = int(pt.refcount[before])
+            assert pt.cow_pending(s, pos) == (rc > 1)
+            if rc > 1 and pt.free_pages >= 1:
+                src, dst = pt.fork_cow(s, pos)
+                assert src == before and dst == int(pt.table[s, idx])
+                assert int(pt.refcount[src]) == rc - 1   # co-owners keep it
+                assert int(pt.refcount[dst]) == 1
+                assert dst not in pt._page_key           # forks never indexed
+            elif rc > 1:
+                with pytest.raises(RuntimeError):        # dry pool, no state
+                    pt.fork_cow(s, pos)                  # change before raise
+                assert int(pt.table[s, idx]) == before
+                assert int(pt.refcount[before]) == rc
+            else:
+                assert pt.fork_cow(s, pos) is None       # exclusive: in place
+        elif pt.active[s] and op < 0.9:
+            held = [int(p) for p in pt.slot_pages(s)]
+            freed = pt.swap_out(s)
+            # freed exactly the pages whose refcount hit zero
+            assert set(freed) == {p for p in held if pt.refcount[p] == 0}
+            swapped.append(model.pop(s))
+        elif pt.active[s]:
+            held = [int(p) for p in pt.slot_pages(s)]
+            freed = pt.retire(s)
+            assert set(freed) == {p for p in held if pt.refcount[p] == 0}
+            model.pop(s)
+        _check_invariants(pt, model)
+
+
+def test_prefix_keys_exact_coverage_contract():
+    """Keys match iff the covered token prefixes are identical: equal
+    prefixes agree page-for-page, a divergent tail (or a different length
+    into the same page) changes that page's key, and full-page keys survive
+    a longer prompt extending past them."""
+    P = 4
+    a = np.arange(10, dtype=np.int32)
+    ka = prefix_keys(a, P)
+    assert len(ka) == pages_for(10, P) == 3
+    assert [k[0] for k in ka] == [4, 8, 10]          # covered token counts
+    # same prefix, longer prompt: full pages agree, partial page differs
+    b = np.arange(12, dtype=np.int32)
+    kb = prefix_keys(b, P)
+    assert kb[:2] == ka[:2] and kb[2] != ka[2]
+    # divergent tail inside the last page changes only that key
+    c = a.copy(); c[-1] += 1
+    kc = prefix_keys(c, P)
+    assert kc[:2] == ka[:2] and kc[2] != ka[2]
+    # divergence inside the first page changes every key (rolling chain)
+    d = a.copy(); d[0] += 1
+    kd = prefix_keys(d, P)
+    assert all(x != y for x, y in zip(kd, ka))
+    # keys within one prompt are distinct (chained)
+    assert len(set(ka)) == len(ka)
+
+
+def test_can_admit_counts_reclaimable_pages():
+    """The --preempt admission fix: pages held by preemptable running
+    requests count toward admissibility (they can be swapped out), so a
+    full pool no longer rejects work the scheduler could make room for."""
+    pt = PageTable(9, 4, 2, 4)
+    pt.admit(0, 16)                     # slot 0 holds 4 of 8 usable pages
+    pt.admit(1, 16)                     # slot 1 holds the rest
+    assert pt.free_pages == 0
+    assert not pt.can_admit(8)
+    assert pt.can_admit(8, reclaimable=int(pt.held[1]))
+    assert not pt.can_admit(32, reclaimable=int(pt.held[1]))  # beyond pool
+
+
+def test_cow_fork_preserves_bytes_and_swap_roundtrips():
+    """Device-side halves of the scheduler: copy_page gives the forker a
+    bit-exact copy while the source keeps serving its co-owner, and
+    swap_out_slot -> swap_in_slot round-trips a slot's pages + slab row
+    exactly (into a different slot and different physical pages)."""
+    import jax.numpy as jnp
+    P, slots = 4, 3
+    pt = PageTable(12, P, slots, 4)
+    cache = {"k": jnp.zeros((12, P, 2, 4), jnp.float32),
+             "state": jnp.zeros((slots, 8), jnp.float32)}
+    mask = {"k": True, "state": False}
+
+    # slot 0 admits 6 tokens under share keys and writes recognizable bytes
+    keys = _keys_for(7, 6, P)
+    ids0, shared0 = pt.admit_shared(0, 6, keys)
+    assert not shared0.any()
+    for t in range(6):
+        pid = int(pt.table[0, t // P])
+        cache["k"] = cache["k"].at[pid, t % P].set(float(100 + t))
+    cache["state"] = cache["state"].at[0].set(1.0)
+
+    # slot 1 shares both pages (full + partial), then CoW-forks the partial
+    ids1, shared1 = pt.admit_shared(1, 6, keys)
+    assert shared1.all() and (ids1 == ids0).all()
+    src, dst = pt.fork_cow(1, 5)
+    cache = kv_cache.copy_page(cache, src, dst, mask)
+    # the fork is bit-exact and the source is untouched
+    assert (np.asarray(cache["k"][dst]) == np.asarray(cache["k"][src])).all()
+    # writer diverges on its fork; the co-owner's page keeps its bytes
+    cache["k"] = cache["k"].at[dst, 1].set(-5.0)
+    assert float(cache["k"][src, 1, 0, 0]) == 105.0
+    assert int(pt.refcount[src]) == 1 and int(pt.refcount[dst]) == 1
+
+    # swap slot 0 out (gather BEFORE releasing), back in at a different slot
+    ids = pt.slot_pages(0)
+    saved = kv_cache.swap_out_slot(cache, 0, ids, mask)
+    assert isinstance(saved["k"], np.ndarray)       # host-side slab
+    pt.swap_out(0)
+    new_ids = pt.swap_in(2, 6)
+    cache = kv_cache.swap_in_slot(cache, saved, 2, new_ids, mask)
+    for t in range(6):
+        pid = int(pt.table[2, t // P])
+        assert float(cache["k"][pid, t % P, 0, 0]) == 100 + t, t
+    assert float(cache["state"][2, 0]) == 1.0
+    _check_invariants(pt, {1: 6, 2: 6})
 
 
 def test_lifo_reuse_and_full_cycle():
