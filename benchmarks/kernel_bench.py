@@ -94,6 +94,62 @@ def run():
     rows.append({"op": None, "name": "flash_attn",
                  "us_per_call": round(fa_us, 1), "tile": None,
                  "vmem_tile_bytes": 128 * 64 * 4 * 2 + 128 * 64 * 4 + 2 * 128 * 4})
+    rows.extend(_paged_attn_rows())
+    return rows
+
+
+# decode-attention geometry for the paged-attn sweep/retune: the reduced-
+# llama serve head shape over `slots` continuous-batching rows
+PA_SLOTS, PA_HK, PA_HQ, PA_DH = 4, 2, 4, 32
+
+
+def _paged_attn_problem(page_size: int, table_pages: int, active: int,
+                        seed: int = 5):
+    """Int8 pool + fully-provisioned disjoint page tables + a uniform active
+    length: the paged_flash_decode bench unit (pool size x active length x
+    page size)."""
+    import numpy as np
+    num_pages = 1 + PA_SLOTS * table_pages
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (PA_SLOTS, PA_HQ, PA_DH), jnp.float32)
+    kp = jax.random.randint(ks[1], (num_pages, page_size, PA_HK, PA_DH),
+                            -127, 128, jnp.int8)
+    vp = jax.random.randint(ks[2], (num_pages, page_size, PA_HK, PA_DH),
+                            -127, 128, jnp.int8)
+    pages = jnp.asarray(np.stack(
+        [1 + r * table_pages + np.arange(table_pages)
+         for r in range(PA_SLOTS)]).astype(np.int32))
+    pos = jnp.full((PA_SLOTS,), active - 1, jnp.int32)
+    return q, kp, vp, pages, pos
+
+
+def _paged_attn_rows():
+    """Sweep the paged-attn decode kernel like the qgemm cells: rows keyed by
+    its TuneTable pseudo-cell, one per (pool size x active length x page
+    size) point. The active-length column is where the in-kernel early bound
+    shows up (same provisioned table, shorter walk)."""
+    from repro.kernels import paged_attn as pa
+    bkp = pa.resolve_pages_per_block()
+    rows = []
+    for page_size, table_pages, active in [
+        (16, 64, 256), (16, 64, 1024),          # 1k-token pool, small pages
+        (64, 64, 1024), (64, 64, 4096),         # 4k-token pool
+        (64, 128, 4096),                        # 8k-token pool, half active
+    ]:
+        q, kp, vp, pages, pos = _paged_attn_problem(page_size, table_pages,
+                                                    active)
+        us = _time_us(lambda: pa.paged_flash_decode(
+            q, kp, vp, pages, pos, pages_per_block=bkp,
+            interpret=dispatch.INTERPRET))
+        rows.append({
+            "op": {"wprec": "paged_attn", "aprec": "decode", "impl": "*",
+                   "backend": "pallas"},
+            "name": f"paged_attn P{page_size}xT{table_pages}@a{active}",
+            "us_per_call": round(us, 1),
+            "tile": {"bm": 1, "bn": 1, "bkq": bkp},
+            "vmem_tile_bytes": pa.vmem_decode_tile_bytes(
+                page_size, PA_HK, PA_DH, PA_HQ, bkp, kv_bytes=1),
+        })
     return rows
 
 
@@ -120,6 +176,21 @@ def retune(out_path: str, reps: int = 2) -> TuneTable:
         tiles[cell.key] = best
         print(f"  {cell.tag:24s} -> bm={best.bm} bn={best.bn} "
               f"bkq={best.bkq} ({best_us:.0f}us)")
+
+    # paged-attn pseudo-cell: bkq = pages per kv block of the decode page
+    # walk (bm/bn unused). Representative point: 4k-token pool, 1k active.
+    from repro.kernels import paged_attn as pa
+    q, kp, vp, pages, pos = _paged_attn_problem(64, 64, 1024)
+    best_bkp, best_us = None, float("inf")
+    for bkp in (1, 2, 4, 8):
+        us = _time_us(lambda: pa.paged_flash_decode(
+            q, kp, vp, pages, pos, pages_per_block=bkp,
+            interpret=dispatch.INTERPRET), reps=reps)
+        if us < best_us:
+            best_bkp, best_us = bkp, us
+    tiles[pa.TUNE_KEY] = Tile(1, 1, best_bkp)
+    print(f"  {'paged_attn/decode/*':24s} -> bkq={best_bkp} "
+          f"(pages/block, {best_us:.0f}us)")
     table = TuneTable(
         tiles=tiles,
         source=f"kernel_bench --retune: interpret-mode CPU, m{M} k{K} n{N}, "

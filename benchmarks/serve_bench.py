@@ -17,6 +17,15 @@ Scenarios:
                 reserved-but-idle headroom into live decode slots, at the
                 cost of swap traffic (counted)
 
+A fourth micro-scenario, `decode-attn`, drops below the scheduler and times
+the decode attention READ path itself at a fixed provisioned page-table
+width while the active length sweeps 128→4096: the jitted server's gather
+path always materializes (and dequantizes) the full table width per step,
+the fused page-walk kernel (kernels/paged_attn) stops at the slot's last
+active page. Interpret-mode wall time is NOT TPU performance; the modeled
+per-step HBM KV traffic column is the layout-level metric, wall time is
+reported alongside for the CPU lane.
+
 Reports tok/s and tok/tick per row, jit signature counts (the bucketing +
 fixed-decode + CoW discipline), page/pool utilization, and scheduler stats;
 `--json` writes the whole table plus the headline ratios for the CI bench
@@ -120,6 +129,84 @@ def run(arch="llama3.2-3b", requests=12, slots=4, cache_len=128, page_size=16):
     return rows
 
 
+def decode_attn_rows(active_lens=(128, 512, 1024, 2048, 4096), *, slots=4,
+                     page_size=64, table_pages=128, hk=2, hq=4, dh=32,
+                     reps=20):
+    """`decode-attn` micro-scenario: per-step attention read-path time at a
+    FIXED provisioned table width (table_pages * page_size = 8192 tokens),
+    active length swept. Three variants per length:
+
+      gather-full     what the jitted server's gather path pays every step
+                      (pos is a tracer -> the full fixed-signature width is
+                      gathered + dequantized)
+      gather-bounded  the eager length-bound (attn_decode slices the table
+                      to max(pos)//P + 1 columns) — oracle/bench callers
+      fused           kernels.paged_attn.paged_flash_decode — the page walk
+                      early-stops at each slot's last active page
+
+    int8 pool so the gather's full-width dequantize cost is visible.
+    `hbm_kv_bytes_per_step` models the pool operand traffic each variant
+    actually touches (the TPU-relevant metric; wall time here is
+    interpret-mode CPU)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import paged_attn as pa
+    from repro.kernels.dispatch import INTERPRET
+    from repro.models.attention import KV_SCALE
+
+    num_pages = 1 + slots * table_pages
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (slots, hq, dh), jnp.float32)
+    kp = jax.random.randint(kk, (num_pages, page_size, hk, dh), -127, 128,
+                            jnp.int8)
+    vp = jax.random.randint(kv, (num_pages, page_size, hk, dh), -127, 128,
+                            jnp.int8)
+    pages = np.stack([1 + r * table_pages + np.arange(table_pages)
+                      for r in range(slots)]).astype(np.int32)
+    pages = jnp.asarray(pages)
+
+    @jax.jit
+    def gather(pages_, pos_):
+        s = pages_.shape[1] * page_size
+        kf = kp[pages_].reshape(slots, s, hk, dh).astype(jnp.float32) * KV_SCALE
+        vf = vp[pages_].reshape(slots, s, hk, dh).astype(jnp.float32) * KV_SCALE
+        valid = jnp.arange(s)[None, :] <= pos_[:, None]
+        qg = q.reshape(slots, hk, hq // hk, dh)
+        sc = jnp.einsum("bhgd,bshd->bhgs", qg, kf) / dh ** 0.5
+        sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+        a = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bhgs,bshd->bhgd", a, vf)
+
+    def time_us(fn):
+        jax.block_until_ready(fn())                      # compile outside
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    bkp = pa.resolve_pages_per_block()
+    kv_bytes = 1                                          # int8 pool
+    rows = []
+    for al in active_lens:
+        pos = jnp.full((slots,), al - 1, jnp.int32)
+        act_pages = (al - 1) // page_size + 1
+        full_b = slots * 2 * table_pages * page_size * hk * dh * kv_bytes
+        act_b = slots * 2 * act_pages * page_size * hk * dh * kv_bytes
+        for name, fn, bb in (
+            ("gather-full", lambda: gather(pages, pos), full_b),
+            ("gather-bounded",
+             lambda: gather(pages[:, :act_pages], pos), act_b),
+            ("fused", lambda: pa.paged_flash_decode(
+                q, kp, vp, pages, pos, pages_per_block=bkp,
+                kv_scale=KV_SCALE, interpret=INTERPRET), act_b),
+        ):
+            rows.append(dict(scenario="decode-attn", config=name,
+                             active_len=al, us_per_step=time_us(fn),
+                             hbm_kv_bytes_per_step=bb,
+                             pages_per_block=bkp if name == "fused" else "-"))
+    return rows
+
+
 def _ratio(rows, scenario, a, b, key="tok_per_tick"):
     sel = {r["config"]: r[key] for r in rows if r["scenario"] == scenario}
     return sel[a] / sel[b]
@@ -150,14 +237,37 @@ def main(argv=None):
           f"--prefix-share (acceptance floor 1.5x)")
     print(f"# oversubscribed admitted-throughput: {preempt_x:.2f}x with "
           f"--preempt")
+
+    attn_rows = decode_attn_rows()
+    print("# decode-attn micro-scenario (per-step attention read path; "
+          "interpret-mode wall time + modeled pool traffic)")
+    akeys = list(attn_rows[0])
+    print(",".join(akeys))
+    for r in attn_rows:
+        print(",".join(f"{r[k]:.2f}" if isinstance(r[k], float) else str(r[k])
+                       for k in akeys))
+
+    def _attn(cfg_, al):
+        return next(r for r in attn_rows
+                    if r["config"] == cfg_ and r["active_len"] == al)
+    fused_x_1024 = (_attn("gather-full", 1024)["us_per_step"]
+                    / _attn("fused", 1024)["us_per_step"])
+    fused_bytes_x_1024 = (_attn("gather-full", 1024)["hbm_kv_bytes_per_step"]
+                          / _attn("fused", 1024)["hbm_kv_bytes_per_step"])
+    print(f"# decode-attn @1024 active: fused {fused_x_1024:.2f}x faster "
+          f"than the jitted gather (full width), {fused_bytes_x_1024:.2f}x "
+          f"less pool traffic")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"rows": rows,
+            json.dump({"rows": rows, "decode_attn_rows": attn_rows,
                        "shared_prefix_speedup_tok_per_tick": share_x,
-                       "preempt_speedup_tok_per_tick": preempt_x}, f,
+                       "preempt_speedup_tok_per_tick": preempt_x,
+                       "decode_attn_fused_speedup_at_1024": fused_x_1024,
+                       "decode_attn_fused_bytes_ratio_at_1024":
+                           fused_bytes_x_1024}, f,
                       indent=1, default=str)
         print(f"# wrote {args.json}")
-    return rows
+    return rows + attn_rows
 
 
 if __name__ == "__main__":

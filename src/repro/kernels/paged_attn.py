@@ -1,0 +1,209 @@
+"""Paged-attention decode Pallas kernel — flash-decode over the page table.
+
+The serve stack's decode attention (`models.attention.attn_decode(pages=)`)
+reads a slot's KV through a (B, max_pages) page table into the shared block
+pool (launch/kv_cache.py). The jnp oracle path gathers every page into a
+dense (B, max_pages*page_size, Hk, dh) view and runs dense attention — each
+decode step materializes (and dequantizes) the whole per-slot pool footprint
+regardless of the slot's actual length. BrainTTA's thesis (and the
+operand-fetch argument of the Molendijk/Corporaal survey) is that the data
+movement belongs *inside* the compute loop; this kernel is that move for
+decode:
+
+  grid (slot, kv-page-block), page-block innermost (output-stationary in the
+  slot). The page table and per-slot positions ride in as scalar-prefetch
+  operands; each active step walks `pages[b, j*bkp : (j+1)*bkp]` and DMAs
+  those pages' K/V tiles from the pool (left in ANY/HBM memory space) into
+  VMEM scratch, dequantizes in-register (`_kv_quant`/`_kv_dequant` algebra:
+  int8 codes at the static KV scale, passthrough otherwise), and folds the
+  tile into the online-softmax carries (m/l/acc in VMEM scratch — the
+  `flash_attn._flash_kernel` structure: init on the first block, epilogue
+  `acc / max(l, eps)` on the last). GQA is a reshape: query heads (Hk, G, dh)
+  contract against the Hk kv heads of the tile.
+
+Early bound: per-slot `pos` gates each block with `pl.when(start <= pos)` —
+short slots stop READING at their last active page; only the (cheap) grid
+iteration continues to max_pages, and unallocated table entries inside an
+active block point at page 0 (the pool's scratch page) whose tokens the
+`tok <= pos` mask discards, exactly like the gather path.
+
+The tunable is `Tile.bkq` = pages per kv block (`bm`/`bn` are unused for
+this key), registered in the shipped TuneTable under the pseudo-cell key
+"paged_attn/decode/*" (kernel_bench --retune sweeps it). VMEM working set
+per step = 2 * bkp * page_size * Hk * dh operand bytes + the (Hq,)+(Hq,dh)
+f32 carries — `vmem_decode_tile_bytes` is the bench model.
+
+CoW / prefix-sharing contract: identical to the gather path — the kernel
+only READS through `pages`; the scheduler forks shared pages before the
+decode write lands (launch/serve.py `_prepare_pages`), and this kernel runs
+on the post-fork table the server passes to the decode step.
+
+Exactness: validated against the gather path at the attention-output level
+(tests/test_paged_attn.py, tight f32 tolerance — the online-softmax
+block accumulation is the same algebra at a different reduction order, so
+bitwise equality is not the contract there; the serving oracle suites'
+token-exactness with the kernel enabled is).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .harness import Tile, fit_block
+
+NEG_INF = -1e30
+
+#: TuneTable pseudo-cell key for this kernel (same "w/a/impl" key shape as
+#: the qgemm cells; only Tile.bkq — pages per kv block — is meaningful).
+TUNE_KEY = ("paged_attn", "decode", "*")
+DEFAULT_PAGES_PER_BLOCK = 4
+
+
+def resolve_pages_per_block(tune=None) -> int:
+    """Pages-per-kv-block from a TuneTable (the shipped one by default)."""
+    if tune is None:
+        from .dispatch import default_tune
+        tune = default_tune()
+    tile = tune.tiles.get(TUNE_KEY)
+    if tile is None or tile.bkq is None:
+        return DEFAULT_PAGES_PER_BLOCK
+    return int(tile.bkq)
+
+
+def vmem_decode_tile_bytes(page_size: int, hk: int, dh: int, hq: int,
+                           bkp: int, kv_bytes: int = 1) -> int:
+    """VMEM working set of one grid step (the kernel_bench tile model):
+    K+V page tiles in the pool dtype, their f32 dequantized values, the q
+    tile and the online-softmax carries."""
+    t = bkp * page_size
+    return (2 * t * hk * dh * kv_bytes      # K/V scratch tiles (pool dtype)
+            + 2 * t * hk * dh * 4           # dequantized f32 operands
+            + hq * dh * 4                   # q tile
+            + (2 * hq + hq * dh) * 4)       # m, l, acc carries
+
+
+def _paged_decode_kernel(pages_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
+                         k_scr, v_scr, m_ref, l_ref, acc_ref, sem, *,
+                         page_size, bkp, hk, scale, kv_int8, kv_scale):
+    b, jb = pl.program_id(0), pl.program_id(1)
+    t = bkp * page_size
+
+    @pl.when(jb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+
+    # early page-loop bound: a block whose first token is past the slot's
+    # write position holds no valid KV — skip both the DMAs and the math
+    @pl.when(jb * t <= pos)
+    def _step():
+        copies = []
+        for i in range(bkp):
+            pid = pages_ref[b, jb * bkp + i]
+            copies.append(pltpu.make_async_copy(
+                k_hbm.at[pid], k_scr.at[i], sem.at[0, i]))
+            copies.append(pltpu.make_async_copy(
+                v_hbm.at[pid], v_scr.at[i], sem.at[1, i]))
+        for cp in copies:
+            cp.start()
+        for cp in copies:
+            cp.wait()
+
+        _, hq, dh = q_ref.shape
+        g = hq // hk
+        q = q_ref[0]                                   # (hq, dh)
+        k = k_scr[...].reshape(t, hk, dh)
+        v = v_scr[...].reshape(t, hk, dh)
+        if kv_int8:
+            # in-register dequant: the _kv_dequant algebra at the static scale
+            k = (k.astype(jnp.float32) * kv_scale).astype(q.dtype)
+            v = (v.astype(jnp.float32) * kv_scale).astype(q.dtype)
+        else:
+            k, v = k.astype(q.dtype), v.astype(q.dtype)
+
+        qg = q.reshape(hk, g, dh)
+        s = jnp.einsum("hgd,thd->hgt", qg, k).astype(jnp.float32) * scale
+        s = s.reshape(hq, t)
+        tok = jb * t + jax.lax.broadcasted_iota(jnp.int32, (hq, t), 1)
+        s = jnp.where(tok <= pos, s, NEG_INF)
+
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("hgt,thd->hgd", p.reshape(hk, g, t).astype(v.dtype), v)
+        acc_new = acc_prev * corr[:, None] + pv.reshape(hq, dh).astype(jnp.float32)
+        m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(jb == pl.num_programs(1) - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_block", "kv_scale",
+                                             "interpret"))
+def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
+                       v_pool: jnp.ndarray, pages: jnp.ndarray,
+                       pos: jnp.ndarray, *, pages_per_block: int | None = None,
+                       kv_scale: float = 0.05,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Single-token decode attention through the page-table indirection.
+
+    q: (B, Hq, dh) compute dtype; k_pool/v_pool: (num_pages, page_size, Hk,
+    dh) pool dtype (int8 codes at `kv_scale`, or the compute dtype); pages:
+    (B, max_pages) int32 page table (NULL/unallocated entries point at the
+    scratch page 0); pos: (B,) int32 per-slot positions — the new token's
+    KV must ALREADY be written at pages[b, pos[b]//P] offset pos[b]%P (the
+    caller owns the write, same as the gather path). Returns (B, Hq, dh).
+
+    `pages_per_block` (Tile.bkq of the "paged_attn/decode/*" TuneTable
+    entry; clamped to a divisor of max_pages) sets how many pages one grid
+    step DMAs and folds into the online-softmax carries.
+    """
+    b, hq, dh = q.shape
+    num_pages, page_size, hk, dh_k = k_pool.shape
+    assert dh == dh_k and v_pool.shape == k_pool.shape
+    assert hq % hk == 0, (hq, hk)
+    max_pages = pages.shape[1]
+    assert pages.shape == (b, max_pages) and pos.shape == (b,)
+    if pages_per_block is None:
+        pages_per_block = resolve_pages_per_block()
+    bkp = fit_block(pages_per_block, max_pages)
+    grid = (b, max_pages // bkp)
+    kv_int8 = k_pool.dtype == jnp.int8
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hq, dh), lambda bi, j, pages, pos: (bi, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # K pool stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),     # V pool stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, hq, dh), lambda bi, j, pages, pos: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bkp, page_size, hk, dh), k_pool.dtype),
+            pltpu.VMEM((bkp, page_size, hk, dh), v_pool.dtype),
+            pltpu.VMEM((hq,), jnp.float32),           # m: running max
+            pltpu.VMEM((hq,), jnp.float32),           # l: running denominator
+            pltpu.VMEM((hq, dh), jnp.float32),        # acc: running output
+            pltpu.SemaphoreType.DMA((2, bkp)),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_decode_kernel, page_size=page_size, bkp=bkp, hk=hk,
+        scale=1.0 / dh ** 0.5, kv_int8=kv_int8, kv_scale=kv_scale)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, dh), q.dtype),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), pos.astype(jnp.int32), q, k_pool, v_pool)

@@ -547,6 +547,13 @@ def main(argv=None):
                     help="binary/ternary GEMM formulation half of the "
                          "OperatingPoint (int8/int4/mixed cells are "
                          "formulation-agnostic)")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=("auto", "gather", "fused"),
+                    help="paged decode-attention read path: 'auto' runs the "
+                         "fused Pallas page-walk kernel "
+                         "(kernels.paged_attn) iff --backend pallas, "
+                         "'fused'/'gather' force it on/off (gather = the "
+                         "jnp oracle path)")
     ap.add_argument("--tune", default=None, metavar="TUNE_JSON",
                     help="kernels.dispatch.TuneTable JSON overriding the "
                          "shipped per-cell Tile table (autotuned block "
@@ -621,7 +628,13 @@ def main(argv=None):
                  num_pages=args.num_pages, mesh=mesh,
                  prefix_share=args.prefix_share, preempt=args.preempt,
                  ctx=ModelCtx(mode="serve", backend=args.backend,
-                              impl=args.impl, tune=tune))
+                              impl=args.impl, tune=tune,
+                              paged_attn=args.paged_attn))
+    if args.paged:
+        fused = (args.paged_attn == "fused"
+                 or (args.paged_attn == "auto" and args.backend == "pallas"))
+        print(f"decode attention: {'fused pallas page-walk kernel' if fused else 'jnp gather path'} "
+              f"(--paged-attn {args.paged_attn}, --backend {args.backend})")
     rng = np.random.default_rng(0)
     # with --prefix-share, every request repeats a common prompt prefix
     # (page-aligned so it aliases whole pages) and request 1 duplicates

@@ -157,7 +157,15 @@ def make_decode_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
     indirection, which is what makes prefix-shared pages transparent to the
     model; the WRITE side relies on the scheduler's fork-before-write
     contract (launch/serve.py `_prepare_pages`): by the time this step runs,
-    every page a slot writes is exclusively owned."""
+    every page a slot writes is exclusively owned.
+
+    The paged READ path is selected by ctx (threaded from the serve driver's
+    --backend/--paged-attn/--tune flags): backend "pallas" (or
+    paged_attn="fused") lowers the fused page-walk kernel
+    (kernels.paged_attn.paged_flash_decode, its pages-per-block Tile from
+    ctx.tune or the shipped TuneTable) in place of the jnp gather — both
+    paths share the identical cache write and post-fork table, so swapping
+    them never changes the decode signature or the CoW contract."""
     ctx = ctx or ModelCtx(mode="serve")
 
     def decode_step(params, batch):

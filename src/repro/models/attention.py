@@ -333,6 +333,17 @@ def attn_decode(p, x, cache, pos, specs: AttnSpecs, cfg: ArchConfig,
     kv_cache.fork_cow + copy_page): by contract, `pages[b, pos[b]//P]` is
     exclusively owned by row b whenever row b is active. Do not add writes
     through `pages` anywhere else without routing them past that fork.
+
+    Paged read paths (ctx.paged_attn; docs/SERVING.md §Paged-attention
+    decode kernel): the jnp gather path above is the oracle; with
+    backend="pallas" (or paged_attn="fused") the read side instead runs
+    `kernels.paged_attn.paged_flash_decode`, which walks the SAME post-fork
+    table page by page inside the kernel (scalar-prefetched `pages`/`pos`,
+    per-page DMA + online softmax) — the write side below is shared by both,
+    so the CoW contract is path-independent. When `pos` is concrete (eager
+    oracle/bench callers — under the server's jit it is a tracer and the
+    table width is part of the fixed decode signature), the table is first
+    sliced to max(pos)//P + 1 columns so neither path touches dead pages.
     """
     b = x.shape[0]
     y = common.linear_apply(p["qkv"], x, specs.qkv, ctx)
@@ -349,10 +360,31 @@ def attn_decode(p, x, cache, pos, specs: AttnSpecs, cfg: ArchConfig,
     rows = jnp.arange(b)
     if pages is not None and not window:
         page_size = cache["k"].shape[1]
+        if not isinstance(posb, jax.core.Tracer):
+            # eager caller (oracle tests / benches): length-bound the table
+            # to the last active page — dead pages past max(pos) are neither
+            # gathered/dequantized nor walked by the kernel. Under jit `pos`
+            # is a tracer and the full (fixed-signature) width stays.
+            pages = pages[:, :int(jnp.max(posb)) // page_size + 1]
         pid = pages[rows, posb // page_size]
         off = posb % page_size
         k = cache["k"].at[pid, off].set(kq)
         v = cache["v"].at[pid, off].set(vq)
+        fused = (ctx.paged_attn == "fused"
+                 or (ctx.paged_attn == "auto" and ctx.backend == "pallas"))
+        if fused:
+            # fused page-walk kernel (reads the same post-fork table and the
+            # post-write pool, so CoW/write semantics match the gather path)
+            from repro.kernels import paged_attn as _pa
+            from repro.kernels.dispatch import INTERPRET as _interp
+            h_, hk_, dh_ = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            of = _pa.paged_flash_decode(
+                q[:, 0], k, v, pages, posb,
+                pages_per_block=_pa.resolve_pages_per_block(ctx.tune),
+                kv_scale=KV_SCALE, interpret=_interp)
+            out = common.linear_apply(p["out"], of.reshape(b, 1, h_ * dh_),
+                                      specs.out, ctx)
+            return out, {"k": k, "v": v}
         s = pages.shape[1] * page_size
         kf = _kv_dequant(k[pages].reshape(b, s, *k.shape[2:]), x.dtype)
         vf = _kv_dequant(v[pages].reshape(b, s, *v.shape[2:]), x.dtype)

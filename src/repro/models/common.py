@@ -39,6 +39,10 @@ class ModelCtx:
     tune: object | None = None   # kernels.dispatch.TuneTable override: per-
                                  # cell Tile choices (None = the shipped CPU
                                  # default table inside dispatch)
+    paged_attn: str = "auto"     # paged decode-attention path: "auto" (fused
+                                 # Pallas kernel iff backend == "pallas"),
+                                 # "fused" (force the kernel), "gather"
+                                 # (force the jnp oracle path)
 
 
 TRAIN = ModelCtx(mode="train")

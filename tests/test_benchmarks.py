@@ -37,6 +37,9 @@ def test_kernel_bench_vmem_budget():
     assert any(r["op"] and r["op"]["wprec"] == "int4" for r in rows)
     assert any(r["op"] and (r["op"]["wprec"], r["op"]["aprec"]) ==
                ("ternary", "int8") for r in rows)
+    # the paged-attn decode sweep rides the same table, keyed by its
+    # pseudo-cell
+    assert any(r["op"] and r["op"]["wprec"] == "paged_attn" for r in rows)
     for r in rows:
         if r["vmem_tile_bytes"] is not None:
             # well under the 128 MiB VMEM

@@ -349,11 +349,15 @@ def test_tune_table_roundtrip(tmp_path):
 
 def test_shipped_tune_table_keys_are_registered():
     """The in-repo CPU table may only name live registry cells (a retune
-    after a registry change must not leave stale keys behind)."""
+    after a registry change must not leave stale keys behind) — plus the one
+    non-GEMM pseudo-cell, the paged-attention decode kernel's pages-per-block
+    Tile (kernels/paged_attn.TUNE_KEY)."""
+    from repro.kernels.paged_attn import TUNE_KEY
     tune = dispatch.default_tune()
     assert tune.tiles, "shipped tune_cpu.json missing or empty"
     for key in tune.tiles:
-        assert key in dispatch.cells(), key
+        assert key in dispatch.cells() or key == TUNE_KEY, key
+    assert TUNE_KEY in tune.tiles, "paged-attn Tile missing from shipped table"
 
 
 def test_registry_table_renders():

@@ -194,16 +194,20 @@ def test_admission_is_metered_by_page_budget():
     assert srv.pt.free_pages == srv.pt.usable_pages
 
 
-def test_windowed_arch_oracle():
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_windowed_arch_oracle(backend):
     """Sliding-window (local) layers: ring caches can't take padded prefill,
     so those archs bucket to the exact prompt length — and must still match
-    the sequential reference through ring wraparound."""
+    the sequential reference through ring wraparound. Under "pallas" the
+    mixed-arch model decodes with the fused paged-attn kernel on its global
+    layers while the window layers keep their ring slabs (the
+    `pages is not None and not window` bypass) — still token-exact."""
     cfg = dataclasses.replace(get_config("gemma3-4b").reduced(),
                               policy="ternary", window=8)   # force wraparound
     sp = transformer.build_specs(cfg)
     params = transformer.init(jax.random.PRNGKey(0), cfg)
     sparams = transformer.pack_for_serve(params, cfg)
-    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32, backend=backend)
     prompts = _prompts(cfg, lens=(3, 13), seed=21)
     max_new = 6          # positions cross the window=8 ring boundary
     want = [_greedy_reference(cfg, sp, sparams, ctx, p, max_new)
