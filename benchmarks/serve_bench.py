@@ -1,8 +1,9 @@
-"""Serving-layer bench: KV layouts and scheduler policies under three
-traffic scenarios (docs/SERVING.md).
+"""Serving-layer bench: KV layouts and scheduler policies under arrival
+traffic (docs/SERVING.md).
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--arch llama3.2-3b]
                                                     [--json BENCH_serve.json]
+                                                    [--scenario poisson]
 
 Scenarios:
   mixed         paged vs contiguous layout on mixed-length traffic — the
@@ -16,6 +17,20 @@ Scenarios:
                 conservative reservation vs --preempt — preemption converts
                 reserved-but-idle headroom into live decode slots, at the
                 cost of swap traffic (counted)
+  poisson       OPEN-LOOP arrival process: Poisson arrivals of a long/short
+                prompt mix (default 25% long at 0.75*cache_len), whole-prompt
+                prefill vs --chunk-tokens. Reports wall-clock p50/p99 TTFT
+                (scheduled arrival -> first token) and inter-token latency
+                per request. The chunked win is the *latency tail*: a long
+                prompt's prefill no longer freezes every in-flight decode
+                slot for a whole jitted prefill call, so the p99 TTFT of the
+                short requests queued behind it collapses
+                (poisson_p99_ttft_speedup headline; acceptance floor 2x).
+                Arrival times are calibrated once against the baseline's
+                measured tick time and REUSED for the chunked run, so both
+                configs face the identical offered load; jit compile time is
+                excluded by a warmup workload that touches every signature
+                before the clock starts
 
 A fourth micro-scenario, `decode-attn`, drops below the scheduler and times
 the decode attention READ path itself at a fixed provisioned page-table
@@ -84,8 +99,8 @@ def _run_one(cfg, sparams, reqs, *, label, scenario, **kw):
                    **{k: v for k, v in srv.stats.items() if k != "peak_pages"})
     else:
         row.update(kv_reserved_tokens=srv.slots * srv.cache_len,
-                   kv_peak_live_pages="-", shared_pages=0, cow_forks=0,
-                   preemptions=0, resumes=0)
+                   kv_peak_live_pages="-",
+                   **{k: v for k, v in srv.stats.items() if k != "peak_pages"})
     return row
 
 
@@ -207,9 +222,150 @@ def decode_attn_rows(active_lens=(128, 512, 1024, 2048, 4096), *, slots=4,
     return rows
 
 
+def _poisson_traffic(cfg, n, rng, cache_len, max_new, long_frac=0.25):
+    """Open-loop arrival schedule: (arrival_gap_units, Request) with unit-mean
+    exponential inter-arrival gaps (scaled to seconds by the caller) and a
+    long/short prompt mix — long prompts are 0.75*cache_len, the tail that
+    whole-prompt prefill turns into a decode freeze."""
+    t, out = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(1.0))
+        plen = ((3 * cache_len) // 4 if rng.random() < long_frac
+                else int(rng.integers(4, 17)))
+        out.append((t, Request(
+            i, rng.integers(0, cfg.vocab, size=(plen,)).astype(np.int32),
+            max_new)))
+    return out
+
+
+def _pct(vals, q):
+    return float(np.percentile(np.asarray(vals, np.float64), q)) if vals else 0.0
+
+
+def _run_arrivals(cfg, sparams, traffic, *, label, chunk_tokens, gap_s=None,
+                  **kw):
+    """Serve an open-loop arrival schedule; returns (row, gap_s).
+
+    `gap_s` scales the unit-mean arrival gaps to seconds. None = calibrate
+    from this run's warmup tick time (the baseline does this; the chunked run
+    reuses the same value so both face the identical offered load). TTFT
+    counts from the SCHEDULED arrival, not the actual submit — when the loop
+    is stuck inside a long prefill, that queueing delay is the metric."""
+    srv = Server(cfg, sparams, ctx=ModelCtx(mode="serve"),
+                 chunk_tokens=chunk_tokens, **kw)
+    # warmup on the same instance: touch every signature the measured run
+    # will hit (short + long prefill buckets or the chunk step, decode), so
+    # no jit compile lands inside a timed tick
+    wrng = np.random.default_rng(99)
+    # one warmup request per prefill bucket the traffic actually hits (the
+    # chunked arm has no buckets — its requests warm the chunk + decode
+    # signatures instead); a missed bucket would drop a multi-second jit
+    # compile into the middle of the timed loop and corrupt the TTFT tail
+    if srv.chunk_tokens:
+        warm_lens = (4, (3 * srv.cache_len) // 4)
+    else:
+        by_bucket: dict = {}
+        for _, req in traffic:
+            b = srv._bucket(len(req.prompt))
+            by_bucket[b] = max(by_bucket.get(b, 0), len(req.prompt))
+        warm_lens = sorted(by_bucket.values())
+    for j, plen in enumerate(warm_lens):
+        srv.submit(Request(10_000 + j,
+                           wrng.integers(0, cfg.vocab, size=(plen,))
+                           .astype(np.int32), 2))
+    srv.run()
+    if gap_s is None:
+        # calibrate on a SECOND, hot warmup pass: the first run's wall time
+        # is dominated by jit compiles, which would inflate the arrival gaps
+        # by orders of magnitude and turn the open loop into an idle crawl.
+        # mean inter-arrival = 2 hot ticks: with slots*max_new decode ticks
+        # of work per request this offers near-saturation load, where the
+        # latency tail actually separates the two prefill policies
+        for j in range(2):
+            srv.submit(Request(20_000 + j,
+                               wrng.integers(0, cfg.vocab, size=(6,))
+                               .astype(np.int32), 4))
+        wt0 = time.perf_counter()
+        wticks = srv.run()
+        gap_s = 2.0 * (time.perf_counter() - wt0) / max(wticks, 1)
+    srv.completed.clear()
+
+    arr = [(g * gap_s, req) for g, req in traffic]
+    n = len(arr)
+    submit_t, first_t, done_t = {}, {}, {}
+    reqs = {req.rid: req for _, req in arr}
+    i = 0
+    t0 = time.perf_counter()
+    while True:
+        now = time.perf_counter() - t0
+        while i < n and arr[i][0] <= now:
+            ts, req = arr[i]
+            srv.submit(req)
+            submit_t[req.rid] = ts
+            i += 1
+        busy = (srv.queue or srv.preempted
+                or any(r is not None for r in srv.slot_req))
+        if not busy:
+            if i >= n:
+                break
+            time.sleep(max(0.0, arr[i][0] - (time.perf_counter() - t0)))
+            continue
+        srv.step()
+        now = time.perf_counter() - t0
+        for rid, req in reqs.items():
+            if rid not in submit_t:
+                continue
+            if req.out and rid not in first_t:
+                first_t[rid] = now
+            if req.done and rid not in done_t:
+                done_t[rid] = now
+    ttft = [first_t[r] - submit_t[r] for r in first_t]
+    itl = [(done_t[r] - first_t[r]) / (len(reqs[r].out) - 1)
+           for r in done_t if len(reqs[r].out) > 1]
+    toks = sum(len(r.out) for r in reqs.values())
+    span = max(done_t.values()) if done_t else 1.0
+    row = dict(
+        scenario="poisson", config=label,
+        ttft_p50_s=_pct(ttft, 50), ttft_p99_s=_pct(ttft, 99),
+        itl_p50_s=_pct(itl, 50), itl_p99_s=_pct(itl, 99),
+        tok_s=toks / span, requests=n,
+        mean_interarrival_s=gap_s,
+        jit_total=sum(srv.compile_counts.values()),
+        chunk_ticks=srv.stats["chunk_ticks"],
+        plan_hits=srv.stats["plan_hits"], fences=srv.stats["fences"],
+    )
+    return row, gap_s, srv
+
+
+def poisson_rows(cfg, sparams, *, requests=24, slots=4, cache_len=128,
+                 page_size=16, max_new=8, chunk_tokens=16):
+    """The arrival-process scenario: identical Poisson schedule, whole-prompt
+    prefill vs chunked prefill fused into the decode tick."""
+    kw = dict(slots=slots, cache_len=cache_len, paged=True,
+              page_size=page_size)
+    rows, gap, servers = [], None, []
+    for label, ct in (("whole-prompt", 0), ("chunked", chunk_tokens)):
+        traffic = _poisson_traffic(cfg, requests, np.random.default_rng(3),
+                                   cache_len, max_new)
+        row, gap, srv = _run_arrivals(cfg, sparams, traffic, label=label,
+                                      chunk_tokens=ct, gap_s=gap, **kw)
+        rows.append(row)
+        servers.append(srv)
+    return rows, servers
+
+
 def _ratio(rows, scenario, a, b, key="tok_per_tick"):
     sel = {r["config"]: r[key] for r in rows if r["scenario"] == scenario}
     return sel[a] / sel[b]
+
+
+def _print_rows(rows, header):
+    print(header)
+    keys = list(rows[0])
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(f"{r[k]:.4f}" if isinstance(r[k], float) else str(r[k])
+                       for k in keys))
 
 
 def main(argv=None):
@@ -219,55 +375,95 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--scenario", default="all",
+                    choices=("all", "scheduler", "decode-attn", "poisson"),
+                    help="'scheduler' = the mixed/shared-prefix/"
+                         "oversubscribed trio; 'poisson' = the open-loop "
+                         "arrival-process scenario only (the CI serving-lane "
+                         "smoke)")
+    ap.add_argument("--poisson-requests", type=int, default=24)
+    ap.add_argument("--chunk-tokens", type=int, default=16,
+                    help="chunk size for the poisson scenario's chunked arm")
+    ap.add_argument("--jit-budget", type=int, default=None,
+                    help="fail (exit 1) if any poisson-scenario server "
+                         "traced more total jit signatures than this — the "
+                         "CI recompile-regression gate for the arrival "
+                         "smoke")
     ap.add_argument("--json", default=None, metavar="OUT_JSON",
                     help="write rows + headline ratios (BENCH_serve.json "
                          "artifact for the CI bench lane)")
     args = ap.parse_args(argv)
-    rows = run(args.arch, args.requests, args.slots, args.cache_len,
-               args.page_size)
-    print("# serve bench (identical traffic within each scenario)")
-    keys = list(rows[0])
-    print(",".join(keys))
-    for r in rows:
-        print(",".join(f"{r[k]:.2f}" if isinstance(r[k], float) else str(r[k])
-                       for k in keys))
-    share_x = _ratio(rows, "shared-prefix", "share-on", "share-off")
-    preempt_x = _ratio(rows, "oversubscribed", "preempt", "reserve")
-    print(f"# shared-prefix admitted-throughput: {share_x:.2f}x with "
-          f"--prefix-share (acceptance floor 1.5x)")
-    print(f"# oversubscribed admitted-throughput: {preempt_x:.2f}x with "
-          f"--preempt")
+    out = {}
+    all_rows = []
 
-    attn_rows = decode_attn_rows()
-    print("# decode-attn micro-scenario (per-step attention read path; "
-          "interpret-mode wall time + modeled pool traffic)")
-    akeys = list(attn_rows[0])
-    print(",".join(akeys))
-    for r in attn_rows:
-        print(",".join(f"{r[k]:.2f}" if isinstance(r[k], float) else str(r[k])
-                       for k in akeys))
+    if args.scenario in ("all", "scheduler"):
+        rows = run(args.arch, args.requests, args.slots, args.cache_len,
+                   args.page_size)
+        _print_rows(rows, "# serve bench (identical traffic within each "
+                          "scenario)")
+        share_x = _ratio(rows, "shared-prefix", "share-on", "share-off")
+        preempt_x = _ratio(rows, "oversubscribed", "preempt", "reserve")
+        print(f"# shared-prefix admitted-throughput: {share_x:.2f}x with "
+              f"--prefix-share (acceptance floor 1.5x)")
+        print(f"# oversubscribed admitted-throughput: {preempt_x:.2f}x with "
+              f"--preempt")
+        out.update(rows=rows, shared_prefix_speedup_tok_per_tick=share_x,
+                   preempt_speedup_tok_per_tick=preempt_x)
+        all_rows += rows
 
-    def _attn(cfg_, al):
-        return next(r for r in attn_rows
-                    if r["config"] == cfg_ and r["active_len"] == al)
-    fused_x_1024 = (_attn("gather-full", 1024)["us_per_step"]
-                    / _attn("fused", 1024)["us_per_step"])
-    fused_bytes_x_1024 = (_attn("gather-full", 1024)["hbm_kv_bytes_per_step"]
-                          / _attn("fused", 1024)["hbm_kv_bytes_per_step"])
-    print(f"# decode-attn @1024 active: fused {fused_x_1024:.2f}x faster "
-          f"than the jitted gather (full width), {fused_bytes_x_1024:.2f}x "
-          f"less pool traffic")
+    if args.scenario in ("all", "poisson"):
+        cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                                  policy="ternary")
+        params = transformer.init(jax.random.PRNGKey(0), cfg)
+        sparams = transformer.pack_for_serve(params, cfg)
+        prows, servers = poisson_rows(
+            cfg, sparams, requests=args.poisson_requests, slots=args.slots,
+            cache_len=args.cache_len, page_size=args.page_size,
+            chunk_tokens=args.chunk_tokens)
+        _print_rows(prows, "# poisson arrival scenario (open loop, identical "
+                           "schedule; wall-clock seconds)")
+        sel = {r["config"]: r for r in prows}
+        ttft_x = (sel["whole-prompt"]["ttft_p99_s"]
+                  / max(sel["chunked"]["ttft_p99_s"], 1e-9))
+        print(f"# poisson p99 TTFT: {ttft_x:.2f}x better with chunked "
+              f"prefill (acceptance floor 2x)")
+        out.update(poisson_rows=prows, poisson_p99_ttft_speedup=ttft_x)
+        all_rows += prows
+        if args.jit_budget is not None:
+            for r in prows:
+                if r["jit_total"] > args.jit_budget:
+                    raise SystemExit(
+                        f"jit budget exceeded in poisson scenario "
+                        f"({r['config']}): {r['jit_total']} signatures > "
+                        f"committed budget {args.jit_budget}")
+
+    if args.scenario in ("all", "decode-attn"):
+        attn_rows = decode_attn_rows()
+        _print_rows(attn_rows, "# decode-attn micro-scenario (per-step "
+                               "attention read path; interpret-mode wall "
+                               "time + modeled pool traffic)")
+
+        def _attn(cfg_, al):
+            return next(r for r in attn_rows
+                        if r["config"] == cfg_ and r["active_len"] == al)
+        fused_x_1024 = (_attn("gather-full", 1024)["us_per_step"]
+                        / _attn("fused", 1024)["us_per_step"])
+        fused_bytes_x_1024 = (
+            _attn("gather-full", 1024)["hbm_kv_bytes_per_step"]
+            / _attn("fused", 1024)["hbm_kv_bytes_per_step"])
+        print(f"# decode-attn @1024 active: fused {fused_x_1024:.2f}x faster "
+              f"than the jitted gather (full width), {fused_bytes_x_1024:.2f}x "
+              f"less pool traffic")
+        out.update(decode_attn_rows=attn_rows,
+                   decode_attn_fused_speedup_at_1024=fused_x_1024,
+                   decode_attn_fused_bytes_ratio_at_1024=fused_bytes_x_1024)
+        all_rows += attn_rows
+
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"rows": rows, "decode_attn_rows": attn_rows,
-                       "shared_prefix_speedup_tok_per_tick": share_x,
-                       "preempt_speedup_tok_per_tick": preempt_x,
-                       "decode_attn_fused_speedup_at_1024": fused_x_1024,
-                       "decode_attn_fused_bytes_ratio_at_1024":
-                           fused_bytes_x_1024}, f,
-                      indent=1, default=str)
+            json.dump(out, f, indent=1, default=str)
         print(f"# wrote {args.json}")
-    return rows + attn_rows
+    return all_rows
 
 
 if __name__ == "__main__":

@@ -1,0 +1,45 @@
+"""Byte-level tokenizer: the smallest real tokenizer that exercises the
+serving path end to end (EOS retirement, prompt encoding, decode printing).
+
+Token space: ids 0..255 are raw bytes, then BOS=256, EOS=257, PAD=258 —
+259 ids total, which fits every `reduced()` config (vocab=512) as well as
+any production vocab. No merges, no training, no external files: encode is
+UTF-8 bytes, decode is the inverse (specials stripped), and round-tripping
+is exact for arbitrary text.
+
+This is deliberately NOT a BPE: the serving layer only needs a stable
+text <-> ids bijection plus a real EOS id to retire on
+(launch/serve.Request.eos). Swapping in a learned tokenizer later changes
+nothing in the server.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ByteTokenizer:
+    BOS = 256
+    EOS = 257
+    PAD = 258
+    vocab_size = 259
+
+    def __init__(self, vocab: int | None = None):
+        """`vocab`: optional model vocab to validate against (must hold all
+        259 ids; reduced configs use 512)."""
+        if vocab is not None and vocab < self.vocab_size:
+            raise ValueError(f"model vocab {vocab} cannot hold the "
+                             f"{self.vocab_size}-id byte tokenizer")
+
+    def encode(self, text: str, *, bos: bool = True,
+               eos: bool = False) -> np.ndarray:
+        ids = list(text.encode("utf-8"))
+        if bos:
+            ids.insert(0, self.BOS)
+        if eos:
+            ids.append(self.EOS)
+        return np.asarray(ids, dtype=np.int32)
+
+    def decode(self, ids) -> str:
+        by = bytes(int(i) for i in np.asarray(ids).ravel()
+                   if 0 <= int(i) < 256)
+        return by.decode("utf-8", errors="replace")

@@ -250,7 +250,8 @@ class PageTable:
         self.tokens[slot] = n_tokens
         return self.slot_pages(slot)
 
-    def admit_shared(self, slot: int, n_tokens: int, keys
+    def admit_shared(self, slot: int, n_tokens: int, keys, *,
+                     defer_index: bool = False
                      ) -> tuple[np.ndarray, np.ndarray]:
         """Claim `slot`, mapping share-index hits and allocating the misses.
 
@@ -260,7 +261,11 @@ class PageTable:
         index — the caller must NOT scatter prefill KV into those (their
         bytes already hold the shared prefix, and may hold a co-owner's live
         decode tokens past the key's coverage). Newly allocated pages are
-        registered under their key for future admissions to hit.
+        registered under their key for future admissions to hit — unless
+        `defer_index` is set: chunked prefill writes page bytes chunk by
+        chunk AFTER admission, and an indexed page must never be mappable
+        before its bytes exist, so the server registers progressively via
+        `index_pages` as chunks land instead.
         """
         need = pages_for(n_tokens, self.page_size)
         if len(keys) != need:
@@ -281,11 +286,43 @@ class PageTable:
                 parent = hit
             else:
                 (page,) = self._alloc(slot, 1)
-                self._index[(parent, key)] = page
-                self._page_key[page] = (parent, key)
+                if not defer_index:
+                    self._index[(parent, key)] = page
+                    self._page_key[page] = (parent, key)
                 parent = page
         self.tokens[slot] = n_tokens
         return self.slot_pages(slot), shared
+
+    def index_pages(self, slot: int, keys, covered: int):
+        """Deferred share-index registration (pairs with
+        `admit_shared(defer_index=True)`): register the slot's leading pages
+        whose key coverage lies within `covered` prompt tokens — i.e. whose
+        bytes the chunked prefill has now written. Idempotent: call after
+        every chunk with the growing `covered`; already-registered pages
+        (including shared hits mapped at admission) just advance the chain
+        parent. The final partial page's key covers the whole prompt, so it
+        registers only once the prefill completes — exactly when its bytes
+        match what the key promises.
+
+        If another slot won a registration race for the same (parent, key)
+        (two identical prompts admitted concurrently past the server's
+        deferral heuristic), this slot's duplicate page stays private and
+        registration stops — entries chained past an unregistered page would
+        be unreachable by `lookup_keys` anyway."""
+        if not self.active[slot]:
+            raise RuntimeError(f"slot {slot} not active")
+        parent = _ROOT
+        for i, key in enumerate(keys):
+            if i >= int(self.held[slot]) or key[0] > int(covered):
+                break
+            page = int(self.table[slot, i])
+            have = self._page_key.get(page)
+            if have is None:
+                if (parent, key) in self._index:
+                    break                      # lost the race: stay private
+                self._index[(parent, key)] = page
+                self._page_key[page] = (parent, key)
+            parent = page
 
     def extend(self, slot: int, n_tokens: int) -> list[int]:
         """Grow slot coverage to n_tokens; returns newly allocated (private,

@@ -26,20 +26,50 @@ Design (vLLM-style, shrunk to its essentials):
     of one per prompt length); its KV is scattered into the slot's pages
     (paged; shared pages are skipped — they already hold this prefix) or
     slab row (contiguous)
+  * `--chunk-tokens C` folds prefill INTO the decode tick: an admitted
+    request holds all its prompt pages up front but sits in a PREFILLING
+    state while one C-token chunk of its prompt runs per tick next to the
+    fused decode step (token budget per tick = active decode slots + C), so
+    a long prompt no longer freezes every in-flight decode slot. Chunked
+    prefill writes byte-identical KV to the whole-prompt path (the chunk
+    attention mirrors the blockless prefill algebra exactly —
+    models/attention.attn_prefill_chunk) and samples the identical first
+    token from the final chunk's logits, so every token-exactness oracle
+    holds with chunking on. One fixed chunk signature replaces the prefill
+    buckets in the jit budget. Falls back to whole-prompt prefill for archs
+    that can't represent a partial prefix in pages (recurrent/window state:
+    `exact_prefill`) and for the int8 KV cache (chunk-boundary requant is
+    not byte-identical)
   * one fused decode step advances every active slot each tick with a
     per-slot position vector — each slot's RoPE phase, cache-write index and
     validity mask follow its own clock, so mixed-length traffic decodes
     correctly (the old aligned-position decode used max(pos) for everyone)
+  * dispatch-ahead double buffering (`dispatch_ahead`, default on): while
+    step N's decode/chunk execute on device, the host already runs step
+    N+1's scheduling (admission, retire prediction, CoW forks, page
+    extends, the masked page table and chunk operands) and stores it as a
+    *prepared plan*. Correctness fence: every scheduler mutation bumps an
+    epoch counter; a plan is consumed only if its snapshot epoch still
+    matches (EOS/retire at fix-up, a new submit, or any fork/swap after the
+    plan was built fences it, and the tick rebuilds synchronously —
+    stats["fences"] vs stats["plan_hits"])
+  * EOS retirement: a request with `eos` set retires the step that token is
+    sampled — the slot's pages free immediately and later steps neither
+    sample nor write KV for it (data/tokenizer.ByteTokenizer supplies real
+    EOS ids)
   * retirement frees the slot's pages back to the pool (refcounted: shared
     pages survive for their co-owners); slot reuse, page churn, CoW forks and
-    swaps never re-jit (decode and fork signatures are fixed)
+    swaps never re-jit (decode, chunk and fork signatures are fixed)
   * packed weights: `pack_for_serve` (binary/ternary bit-planes, int8 codes)
 
-Request lifecycle states: WAITING (queued) -> RUNNING (slot + pages) ->
-PREEMPTED (host swap slab, no pages) -> RUNNING -> done. Priority is
-`(priority desc, rid asc)` — FCFS within a priority class; the scheduler
-never preempts a victim at-or-above the claimant's priority, so the oldest
-running request always finishes (no livelock).
+Request lifecycle states: WAITING (queued) -> [PREFILLING (chunked prompt
+in flight) ->] RUNNING (slot + pages) -> PREEMPTED (host swap slab, no
+pages) -> RUNNING -> done. A PREFILLING slot is never a preemption victim
+(no slot is simultaneously PREFILLING and PREEMPTED — partial-chunk swap
+images don't exist). Priority is `(priority desc, rid asc)` — FCFS within a
+priority class; the scheduler never preempts a victim at-or-above the
+claimant's priority, so the oldest running request always finishes (no
+livelock).
 
 Sampling: each request carries (temperature, seed); tokens are drawn
 host-side by `models.common.sample_token`, a *stateless* rng keyed by
@@ -55,7 +85,12 @@ run the same per-slot-position decode step. See docs/SERVING.md.
 psum), packed weights and the paged pool are device-placed by
 launch/sharding.py, and the result is token-exact vs. single-device serving
 (tests/test_serving_tp.py, tests/test_serving_sched.py). Admission, the
-PageTable (refcounts, hash index) and swap slabs stay host-side.
+PageTable (refcounts, hash index) and swap slabs stay host-side. When
+`slots` does not divide the data axis, the device batch is padded with
+inert phys slots (NULL page rows, position 0, token 0) so every lowered
+signature divides the axis — the CPU SPMD partitioner miscompiled
+non-dividing batches silently (wrong tokens at slots=3/data=2; regression
+in tests/test_serving_tp.py).
 
 On a pod this wraps the decode_32k/long_500k dry-run cells: same
 decode_step, mesh sharding from launch/sharding.py.
@@ -76,7 +111,8 @@ from repro.launch.kv_cache import NULL_PAGE, PageTable, pages_for
 from repro.models import transformer
 from repro.models.common import ModelCtx, sample_token
 
-WAITING, RUNNING, PREEMPTED = "WAITING", "RUNNING", "PREEMPTED"
+WAITING, PREFILLING, RUNNING, PREEMPTED = (
+    "WAITING", "PREFILLING", "RUNNING", "PREEMPTED")
 
 
 @dataclasses.dataclass
@@ -87,6 +123,7 @@ class Request:
     temperature: float = 0.0   # 0 => greedy argmax
     seed: int = 0              # stateless sampling stream (with token index)
     priority: int = 0          # larger = more important; FCFS within a class
+    eos: int | None = None     # stop token: retire the step it is sampled
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     state: str = WAITING
@@ -98,6 +135,25 @@ class _SwapState:
     numpy slab holding its page bytes + per-slot slab rows."""
     pos: int
     data: object
+
+
+@dataclasses.dataclass
+class _Plan:
+    """One prepared device tick: which slots decode, the masked page table
+    they see, and (chunked mode) the prefill chunk riding along. Built by
+    `_build_plan` — either synchronously at the top of a tick, or ahead of
+    time while the previous tick is still executing (dispatch-ahead).
+    `epoch` snapshots the scheduler-mutation counter at build completion; a
+    plan is only consumable while the snapshot still matches (the fence).
+    Token values and the position vector are NOT stored: they are filled at
+    dispatch from req.out[-1]/slot_pos, which the fence guarantees are the
+    values the plan was built for."""
+    epoch: int
+    active: list                    # decode slot ids (state RUNNING)
+    reqs: list                      # Request per active slot (fix-up targets)
+    table: np.ndarray | None        # masked (phys_slots, max_pages), paged only
+    chunk: dict | None              # chunk operands, see _plan_chunk
+    will_retire: tuple = ()         # predicted retires excluded from `active`
 
 
 def default_buckets(lo: int, hi: int) -> tuple[int, ...]:
@@ -115,12 +171,14 @@ class Server:
                  num_pages: int | None = None,
                  buckets: tuple[int, ...] | None = None,
                  prefix_share: bool = False, preempt: bool = False,
+                 chunk_tokens: int = 0, dispatch_ahead: bool = True,
                  ctx: ModelCtx | None = None, mesh=None):
         self.cfg = cfg
         self.sp = transformer.build_specs(cfg)
         self.params = params
         self.ctx = ctx or ModelCtx(mode="serve")
         self.mesh = mesh
+        data_dim = 1
         if mesh is not None:
             # tensor-parallel serving: qgemm runs under shard_map on the
             # "model" axis (column/row per layer spec), batch/pages shard
@@ -128,7 +186,16 @@ class Server:
             from repro.kernels.dispatch import TPSpec
             self.ctx = dataclasses.replace(
                 self.ctx, tp=TPSpec(mesh=mesh, axis="model"))
+            data_dim = int(mesh.shape["data"])
         self.slots = slots
+        # the CPU SPMD partitioner silently miscompiles batched serve steps
+        # whose slot dim does not divide the data axis (wrong tokens, not an
+        # error — seed-reproducible at slots=3/data=2). Pad the device batch
+        # to the next multiple with inert phys slots: NULL page rows,
+        # position 0, token 0 — their writes land on scratch page 0 and the
+        # scheduler never looks at them. Host-side scheduling stays at
+        # `slots`; only device shapes use `phys_slots`.
+        self.phys_slots = -(-slots // data_dim) * data_dim
         self.paged = paged
         self.page_size = page_size
         self.prefix_share = bool(prefix_share)
@@ -136,6 +203,9 @@ class Server:
         if (self.prefix_share or self.preempt) and not paged:
             raise ValueError("--prefix-share/--preempt need the paged cache "
                              "(--contiguous keeps the conservative slab path)")
+        if chunk_tokens and not paged:
+            raise ValueError("--chunk-tokens needs the paged cache (a partial "
+                             "prefix is only representable through pages)")
         if paged and cache_len % page_size:
             cache_len += page_size - cache_len % page_size
         self.cache_len = cache_len
@@ -145,6 +215,15 @@ class Server:
         # ring-full mask then attends the padding). Those archs bucket to
         # the exact prompt length instead.
         self.exact_prefill = any(k != "attn" for k in cfg.block_pattern)
+        # chunked prefill needs (a) a paged partial prefix — so no recurrent
+        # /window state — and (b) pool dtype == compute dtype, or the chunk
+        # boundary requant breaks KV byte-identity vs whole-prompt prefill.
+        # Fall back to whole-prompt bucketed prefill otherwise.
+        self.chunk_tokens = int(chunk_tokens or 0)
+        if self.chunk_tokens and (self.exact_prefill
+                                  or cfg.kv_cache_dtype == "int8"):
+            self.chunk_tokens = 0
+        self.dispatch_ahead = bool(dispatch_ahead)
         if buckets is None:
             buckets = default_buckets(page_size if paged else 8, cache_len)
         self.buckets = tuple(sorted(buckets))
@@ -157,15 +236,16 @@ class Server:
             self.max_pages = cache_len // page_size
             if num_pages is None:
                 num_pages = slots * self.max_pages + 1   # +1: scratch page 0
-            self.pt = PageTable(num_pages, page_size, slots, self.max_pages)
-            self.cache = transformer.init_cache(cfg, slots, cache_len,
+            self.pt = PageTable(num_pages, page_size, self.phys_slots,
+                                self.max_pages)
+            self.cache = transformer.init_cache(cfg, self.phys_slots, cache_len,
                                                 paged=(num_pages, page_size),
                                                 kv_dtype=kv_dtype)
-            self.paged_mask = kv_cache.paged_leaf_mask(cfg, slots, cache_len,
-                                                       num_pages, page_size)
+            self.paged_mask = kv_cache.paged_leaf_mask(
+                cfg, self.phys_slots, cache_len, num_pages, page_size)
         else:
             self.pt = None
-            self.cache = transformer.init_cache(cfg, slots, cache_len,
+            self.cache = transformer.init_cache(cfg, self.phys_slots, cache_len,
                                                 kv_dtype=kv_dtype)
             self.paged_mask = None
 
@@ -183,16 +263,26 @@ class Server:
                 self.cache, shardlib.serve_cache_shardings(mesh, self.cache))
 
         self.slot_req: list[Request | None] = [None] * slots
-        self.slot_pos = np.zeros(slots, np.int32)
+        self.slot_pos = np.zeros(self.phys_slots, np.int32)
         self.queue: list[Request] = []
         self.preempted: list[Request] = []
         self._swap: dict[int, _SwapState] = {}
+        self._prefill_ctx: dict[int, dict] = {}   # slot -> chunked-prefill state
         self.completed: list[Request] = []
         self.pos_trace: list[np.ndarray] = []   # per-tick active-slot positions
         self.stats = {"shared_pages": 0, "cow_forks": 0,
-                      "preemptions": 0, "resumes": 0, "peak_pages": 0}
+                      "preemptions": 0, "resumes": 0, "peak_pages": 0,
+                      "chunk_ticks": 0, "plan_hits": 0, "fences": 0}
+        # dispatch-ahead state: the prepared next tick and the mutation epoch
+        # that fences it (every scheduler mutation — admit, retire, preempt,
+        # resume, fork, submit — bumps the epoch; a plan built at epoch e is
+        # dead the moment the epoch moves past e)
+        self._epoch = 0
+        self._prepared: _Plan | None = None
 
-        self.compile_counts = {"prefill": 0, "decode": 0, "cow": 0}
+        self.compile_counts = {"prefill": 0, "decode": 0, "cow": 0, "chunk": 0}
+        self._signatures: dict[str, set] = {k: set()
+                                            for k in self.compile_counts}
         self._prefill = self._counted("prefill", lambda p, t, lp:
             transformer.prefill(p, t, self.sp, self.ctx,
                                 cache_len=self.cache_len, last_pos=lp))
@@ -204,15 +294,38 @@ class Server:
             # so fork traffic compiles exactly once
             self._cow = self._counted("cow", lambda c, a, b:
                 kv_cache.copy_page(c, a, b, self.paged_mask))
+            self._chunk = self._counted("chunk", lambda p, c, t, p0, rp, wp, nr, li:
+                transformer.prefill_chunk(p, c, t, p0, self.sp, self.ctx,
+                                          read_pages=rp, write_pages=wp,
+                                          nreal=nr, last_idx=li))
         else:
             self._decode = self._counted("decode", lambda p, c, t, pos:
                 transformer.decode_step(p, c, t, pos, self.sp, self.ctx))
 
+    @staticmethod
+    def _abstract_sig(args):
+        """Abstract signature of a traced call: treedef + per-leaf
+        (shape, dtype, weak_type) — exactly what decides whether jax.jit
+        re-traces, minus sharding/donation (which the server holds fixed)."""
+        leaves, treedef = jax.tree.flatten(args)
+        def leaf_sig(l):
+            a = getattr(l, "aval", None)
+            if a is not None:
+                return (tuple(a.shape), str(a.dtype),
+                        bool(getattr(a, "weak_type", False)))
+            return ("static", repr(l))
+        return (treedef, tuple(leaf_sig(l) for l in leaves))
+
     def _counted(self, key: str, fn):
-        """jit(fn) with a trace-time counter: each distinct signature traces
-        the wrapper exactly once, so compile_counts[key] == #signatures."""
+        """jit(fn) with signature-set accounting: compile_counts[key] is the
+        number of DISTINCT abstract signatures ever traced under `key` — not
+        a call-site trace tally. A re-trace of a signature already seen
+        (jit-cache eviction, jax.clear_caches) does not inflate the count,
+        and a new signature slipping through a reused key always raises it —
+        what the --jit-budget gate actually wants to bound."""
         def traced(*args):
-            self.compile_counts[key] += 1
+            self._signatures[key].add(self._abstract_sig(args))
+            self.compile_counts[key] = len(self._signatures[key])
             return fn(*args)
         return jax.jit(traced)
 
@@ -238,6 +351,7 @@ class Server:
                     f"shrink the request")
         req.state = WAITING
         self.queue.append(req)
+        self._epoch += 1   # fence: a prepared plan didn't see this arrival
 
     def _bucket(self, n: int) -> int:
         if self.exact_prefill:
@@ -270,10 +384,18 @@ class Server:
     def _fork_debt(self, extra_shared=frozenset()) -> int:
         """Pages CoW forks may still claim: one per active slot whose next
         decode write lands in a page that is shared (or would become shared
-        if the candidate admission maps the pages in `extra_shared`)."""
-        return sum(1 for s, r in enumerate(self.slot_req) if r is not None
-                   and self.pt.cow_pending(s, int(self.slot_pos[s]),
-                                           extra_shared))
+        if the candidate admission maps the pages in `extra_shared`). For a
+        PREFILLING slot the next decode write is at position n (its chunk
+        clock slot_pos is still inside the prompt)."""
+        debt = 0
+        for s, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            pos = (self._prefill_ctx[s]["n"] if r.state == PREFILLING
+                   else int(self.slot_pos[s]))
+            if self.pt.cow_pending(s, pos, extra_shared):
+                debt += 1
+        return debt
 
     def _admission_ok(self, req: Request, keys) -> bool:
         """Page-budget admission test for the queue head.
@@ -337,6 +459,60 @@ class Server:
         req.state = RUNNING
         self.slot_req[s] = req
         self.slot_pos[s] = n
+        self._epoch += 1
+        return True
+
+    def _defer_for_inflight(self, keys) -> bool:
+        """True if the queue head must wait one tick: its first prefix page
+        misses the share index but an in-flight PREFILLING slot is building
+        exactly that page (same first key). Admitting now would allocate a
+        private copy of a prefix about to become shareable — deferring keeps
+        chunked prefix sharing as effective as the whole-prompt path, where
+        admission and indexing were atomic."""
+        if not keys:
+            return False
+        if self.pt.lookup_keys(list(keys[:1]))[0] is not None:
+            return False
+        for s, r in enumerate(self.slot_req):
+            if r is not None and r.state == PREFILLING:
+                okeys = self._prefill_ctx[s]["keys"]
+                if okeys and okeys[0] == keys[0]:
+                    return True
+        return False
+
+    def _start_chunked(self, s: int) -> bool:
+        """Admit the queue head into slot s in PREFILLING state (chunked
+        prefill). All prompt pages are claimed up front — the page-budget
+        accounting is identical to `_try_start` — but no prefill runs here:
+        step() feeds one --chunk-tokens chunk per tick through the fused
+        chunk step. Leading shared pages already hold this prefix's KV, so
+        the chunk clock starts past them (always leaving >= 1 token: the
+        final chunk must produce the first-token logits). Share-index
+        registration of the slot's own pages is deferred until chunks
+        actually cover them (PageTable.index_pages at each chunk landing)."""
+        req = self.queue[0]
+        keys = (kv_cache.prefix_keys(req.prompt, self.page_size)
+                if self.prefix_share else None)
+        if not self._admission_ok(req, keys):
+            return False   # FIFO: the head waits for pages; no jumping
+        if self._defer_for_inflight(keys):
+            return False
+        self.queue.pop(0)
+        n = len(req.prompt)
+        shared = None
+        lead = 0
+        if keys is not None:
+            ids, shared = self.pt.admit_shared(s, n, keys, defer_index=True)
+            self.stats["shared_pages"] += int(shared.sum())
+            while lead < len(shared) and shared[lead]:
+                lead += 1
+        else:
+            self.pt.admit(s, n)
+        self._prefill_ctx[s] = {"keys": keys, "shared": shared, "n": n}
+        req.state = PREFILLING
+        self.slot_req[s] = req
+        self.slot_pos[s] = min(lead * self.page_size, n - 1)  # chunk clock
+        self._epoch += 1
         return True
 
     def _admit(self):
@@ -351,7 +527,9 @@ class Server:
                 continue
             if not self.queue:
                 break
-            if not self._try_start(s):
+            started = (self._start_chunked(s) if self.chunk_tokens
+                       else self._try_start(s))
+            if not started:
                 break
 
     # -- preemption / swap -----------------------------------------------------
@@ -370,13 +548,18 @@ class Server:
         self.slot_req[s] = None
         self.slot_pos[s] = 0
         self.stats["preemptions"] += 1
+        self._epoch += 1
 
     def _make_room(self, need_free: int, worse_than) -> bool:
         """Preempt strictly-lower-priority running requests (worst first)
         until `need_free` pages are free. False if victims run out."""
         while self.pt.free_pages < need_free:
+            # only RUNNING slots are eligible victims: a PREFILLING slot has
+            # no well-defined swap image (its pages are mid-chunk) and no
+            # saved decode position to resume from
             victims = [s for s, r in enumerate(self.slot_req)
-                       if r is not None and self._prio(r) > worse_than]
+                       if r is not None and r.state == RUNNING
+                       and self._prio(r) > worse_than]
             if not victims:
                 return False
             self._preempt(max(victims,
@@ -401,7 +584,8 @@ class Server:
         if self.pt.free_pages < need:
             reclaim = sum(int(self.pt.held[v])
                           for v, r in enumerate(self.slot_req)
-                          if r is not None and self._prio(r) > self._prio(req))
+                          if r is not None and r.state == RUNNING
+                          and self._prio(r) > self._prio(req))
             if not self.pt.can_admit(cover, reclaimable=reclaim):
                 return False
             # can_admit's reclaimable may overcount shared pages; verify by
@@ -423,29 +607,51 @@ class Server:
         self.slot_req[s] = req
         self.slot_pos[s] = st.pos
         self.stats["resumes"] += 1
+        self._epoch += 1
         return True
 
     # -- serving loop ----------------------------------------------------------
 
-    def _retire(self):
+    def _retire(self, skip=frozenset(), quiet=frozenset()):
+        """Clear completed slots: out of budget, cache full, or EOS sampled.
+
+        `skip`: slots with a token still in flight (dispatch-ahead build) —
+        their out list is one short of the truth, so they must not be judged
+        here (the will_retire prediction covers them). `quiet`: slots whose
+        retirement the prepared plan already predicted — retiring them does
+        NOT bump the epoch, so the prediction keeps the plan consumable.
+        PREFILLING slots never retire here: slot_pos is their chunk clock,
+        not a decode position (an n == cache_len prompt would falsely trip
+        the cache-full test mid-prefill)."""
         for s, req in enumerate(self.slot_req):
-            if req is None:
+            if req is None or s in skip or req.state == PREFILLING:
                 continue
-            if len(req.out) >= req.max_new or self.slot_pos[s] >= self.cache_len - 1:
+            eos = (req.eos is not None and req.out
+                   and req.out[-1] == req.eos)
+            if (len(req.out) >= req.max_new or eos
+                    or self.slot_pos[s] >= self.cache_len - 1):
                 req.done = True
                 self.completed.append(req)
                 if self.paged:
                     self.pt.retire(s)
                 self.slot_req[s] = None
                 self.slot_pos[s] = 0
+                self._prefill_ctx.pop(s, None)
+                if s not in quiet:
+                    self._epoch += 1
 
-    def _prepare_pages(self):
+    def _prepare_pages(self, skip=frozenset()):
         """Per-tick page work, most-important slot first: CoW-fork the write
         page if it is shared, then extend coverage for the write at
         slot_pos[s]. When the pool runs dry (--preempt only; the conservative
         reservation makes it unreachable otherwise), evict strictly-lower-
-        priority victims — or the claimant itself when none remain."""
-        order = sorted((s for s, r in enumerate(self.slot_req) if r is not None),
+        priority victims — or the claimant itself when none remain.
+        PREFILLING slots need no work (all prompt pages were claimed at
+        admission; chunks never CoW — shared pages are write-masked);
+        `skip` holds predicted-retire slots, which will never write again."""
+        order = sorted((s for s, r in enumerate(self.slot_req)
+                        if r is not None and r.state == RUNNING
+                        and s not in skip),
                        key=lambda v: self._prio(self.slot_req[v]))
         for s in order:
             req = self.slot_req[s]
@@ -471,55 +677,216 @@ class Server:
                     self.cache = self._cow(self.cache, jnp.int32(src),
                                            jnp.int32(dst))
                     self.stats["cow_forks"] += 1
+                    self._epoch += 1   # table remap: fences any stale plan
             self.pt.extend(s, pos + 1)
 
-    def step(self):
-        """One server tick: admit/resume -> page work (CoW fork, extend,
-        preempt) -> fused decode over active slots -> retire.
+    def _plan_chunk(self) -> dict | None:
+        """Operands for this tick's prefill chunk: the most-important
+        PREFILLING slot advances by min(chunk_tokens, remaining prompt).
+        `read` is the slot's real page row (attention must see shared-prefix
+        KV); `write` NULLs the shared pages so the chunk can never scribble
+        on a co-owner's bytes (its own tokens inside a fully-shared page are
+        already there, byte-identically, from whoever built the page)."""
+        cands = [s for s, r in enumerate(self.slot_req)
+                 if r is not None and r.state == PREFILLING]
+        if not cands:
+            return None
+        s = min(cands, key=lambda v: self._prio(self.slot_req[v]))
+        req = self.slot_req[s]
+        pctx = self._prefill_ctx[s]
+        n, C = pctx["n"], self.chunk_tokens
+        covered = int(self.slot_pos[s])
+        creal = min(C, n - covered)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :creal] = req.prompt[covered:covered + creal]
+        final = covered + creal >= n
+        read = self.pt.table[s].copy()
+        write = read.copy()
+        if pctx["shared"] is not None:
+            sh = np.asarray(pctx["shared"], bool)
+            write[:len(sh)][sh] = NULL_PAGE
+        return {"slot": s, "tokens": toks, "pos0": covered, "nreal": creal,
+                "final": final, "last_idx": creal - 1 if final else 0,
+                "read": read, "write": write}
 
-        The pre-decode retire pass clears requests that are already complete
-        at admission (max_new == 1, or a prompt that fills the cache) so they
-        never reach the decode step with nowhere left to write.
-        """
+    def _build_plan(self, pending=frozenset()) -> _Plan:
+        """One tick's scheduling: admit/resume -> retire -> predict retires
+        of in-flight slots -> page work (CoW fork, extend, preempt) -> the
+        masked device table and chunk operands. `pending` holds slots whose
+        token is still on device (dispatch-ahead): they are skipped by the
+        real retire pass (their out list is one short) and instead retired
+        *predictively* — excluded from the next actives, retired quietly at
+        fix-up. EOS cannot be predicted; it retires loudly and fences.
+
+        The epoch is snapshotted at the END: every mutation this build
+        itself makes (admissions, forks, preemptions...) is part of the
+        plan, not a reason to fence it."""
         self._admit()
-        self._retire()
+        self._retire(skip=pending)
+        will_retire = []
+        for s in pending:
+            req = self.slot_req[s]
+            if req is None or req.state != RUNNING:
+                continue
+            if (len(req.out) + 1 >= req.max_new
+                    or self.slot_pos[s] >= self.cache_len - 1):
+                will_retire.append(s)
+        skip = frozenset(will_retire)
         if self.paged:
-            self._prepare_pages()
+            self._prepare_pages(skip=skip)
             # physical pool pressure (aliasing-aware: shared pages count
             # once) — what the slab layout would need is Σ per-slot coverage
             self.stats["peak_pages"] = max(
                 self.stats["peak_pages"],
                 self.pt.usable_pages - self.pt.free_pages)
-        active = [s for s, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return bool(self.queue or self.preempted)
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for s in active:
-            tokens[s, 0] = self.slot_req[s].out[-1]
-        self.pos_trace.append(self.slot_pos[active].copy())
-        pos = jnp.asarray(self.slot_pos)                    # (slots,) per-slot
+        active = [s for s, r in enumerate(self.slot_req)
+                  if r is not None and r.state == RUNNING and s not in skip]
+        reqs = [self.slot_req[s] for s in active]
+        table = None
         if self.paged:
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(tokens), pos,
-                                              self.pt.device_table())
-        else:
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(tokens), pos)
-        if any(self.slot_req[s].temperature > 0 for s in active):
-            rows = np.asarray(logits[:, 0])        # (slots, V) to host
-            pick = lambda s: self._sample(self.slot_req[s], rows[s])
-        else:
-            # pure-greedy tick: argmax on device, transfer (slots,) ints —
-            # not the whole vocab matrix (np and jnp argmax both break ties
-            # to the lowest index, so this equals sample_token at temp 0)
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-            pick = lambda s: int(nxt[s])
+            # mask non-decoding rows to NULL: a PREFILLING slot's pages must
+            # not take the decode write at its chunk-clock position, and the
+            # inert phys-slot padding rows never had pages. NULL rows write
+            # scratch page 0 and read nothing valid (pos 0, token 0).
+            table = self.pt.table.copy()
+            rowmask = np.ones(len(table), bool)
+            rowmask[active] = False
+            table[rowmask] = NULL_PAGE
+        chunk = self._plan_chunk() if self.chunk_tokens else None
+        return _Plan(epoch=self._epoch, active=active, reqs=reqs,
+                     table=table, chunk=chunk,
+                     will_retire=tuple(will_retire))
+
+    def step(self):
+        """One server tick: consume the prepared plan (or build one) ->
+        dispatch the fused decode and the prefill chunk -> optimistically
+        advance host state and build the NEXT plan while the device works ->
+        fix-up (sample the landed tokens, retire).
+
+        Dispatch-ahead fence: the prepared plan is consumed iff its epoch
+        snapshot still matches — nothing (submit, EOS/unpredicted retire,
+        preemption, resume, fork) mutated the scheduler after it was built.
+        A mismatch trips stats["fences"] and rebuilds synchronously; a match
+        is stats["plan_hits"].
+
+        The pre-decode retire pass inside _build_plan clears requests that
+        are already complete at admission (max_new == 1, or a prompt that
+        fills the cache) so they never reach the decode step with nowhere
+        left to write."""
+        plan = None
+        if self._prepared is not None:
+            if self._prepared.epoch == self._epoch:
+                plan = self._prepared
+                self.stats["plan_hits"] += 1
+            else:
+                self.stats["fences"] += 1
+            self._prepared = None
+        if plan is None:
+            plan = self._build_plan()
+        active, chunk = plan.active, plan.chunk
+        if not active and chunk is None:
+            return bool(self.queue or self.preempted
+                        or any(r is not None for r in self.slot_req))
+        # -- dispatch: decode first, then the chunk. Functional cache
+        # chaining orders the device ops; the two touch disjoint pages (or
+        # read-only-shared ones — decode write pages are pre-forked), so
+        # either order is token-exact; decode-first matches the sequential
+        # oracle's schedule.
+        logits = greedy = nxt_dev = None
+        if active:
+            tokens = np.zeros((self.phys_slots, 1), np.int32)
+            pos = np.zeros(self.phys_slots, np.int32)
+            for i, s in enumerate(active):
+                tokens[s, 0] = plan.reqs[i].out[-1]
+                pos[s] = self.slot_pos[s]
+            self.pos_trace.append(self.slot_pos[active].copy())
+            if self.paged:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(pos), jnp.asarray(plan.table))
+            else:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(pos))
+            greedy = not any(r.temperature > 0 for r in plan.reqs)
+            if greedy:
+                # argmax on device, transfer (slots,) ints — not the whole
+                # vocab matrix (np and jnp argmax both break ties to the
+                # lowest index, so this equals sample_token at temp 0)
+                nxt_dev = jnp.argmax(logits[:, 0], axis=-1)
+        c_logits = None
+        chunk_req = None
+        if chunk is not None:
+            cs = chunk["slot"]
+            chunk_req = self.slot_req[cs]
+            self.stats["chunk_ticks"] += 1
+            c_logits, self.cache = self._chunk(
+                self.params, self.cache, jnp.asarray(chunk["tokens"]),
+                jnp.asarray([chunk["pos0"]], jnp.int32),
+                jnp.asarray(chunk["read"])[None],
+                jnp.asarray(chunk["write"])[None],
+                jnp.asarray([chunk["nreal"]], jnp.int32),
+                jnp.asarray([chunk["last_idx"]], jnp.int32))
+        # -- optimistic host advance (deterministic consequences of the
+        # dispatch — token VALUES stay unknown until fix-up)
         for s in active:
-            self.slot_req[s].out.append(pick(s))
             self.slot_pos[s] += 1
-        self._retire()
+        if chunk is not None:
+            cs = chunk["slot"]
+            self.slot_pos[cs] = chunk["pos0"] + chunk["nreal"]
+            pctx = self._prefill_ctx[cs]
+            if self.prefix_share and pctx["keys"] is not None:
+                # progressive share-index registration: pages whose keyed
+                # coverage the chunks now reach become mappable by later
+                # admissions (deferred from admit_shared)
+                self.pt.index_pages(cs, pctx["keys"],
+                                    int(self.slot_pos[cs]))
+            if chunk["final"]:
+                chunk_req.state = RUNNING
+                self._prefill_ctx.pop(cs, None)
+        # -- dispatch-ahead: overlap next tick's host scheduling with this
+        # tick's device work (the jitted calls above returned futures)
+        if self.dispatch_ahead:
+            pend = set(active)
+            if chunk is not None and chunk["final"]:
+                pend.add(chunk["slot"])
+            self._prepared = self._build_plan(pending=frozenset(pend))
+        # -- fix-up: the device tokens land in the Request objects CAPTURED
+        # at dispatch (plan.reqs) — a pending slot may have been preempted
+        # (or its slot re-assigned) during the ahead build
+        if active:
+            if greedy:
+                nxt = np.asarray(nxt_dev)
+                for i, s in enumerate(active):
+                    self._deliver(plan.reqs[i], int(nxt[s]))
+            else:
+                rows = np.asarray(logits[:, 0])        # (slots, V) to host
+                for i, s in enumerate(active):
+                    r = plan.reqs[i]
+                    self._deliver(r, self._sample(r, rows[s]))
+        if chunk is not None and chunk["final"]:
+            self._deliver(chunk_req,
+                          self._sample(chunk_req, np.asarray(c_logits)[0, 0]))
+        quiet = (frozenset(self._prepared.will_retire)
+                 if self._prepared is not None else frozenset())
+        self._retire(quiet=quiet)
         return bool(any(r is not None for r in self.slot_req) or self.queue
                     or self.preempted)
+
+    def _deliver(self, req: Request, tok: int):
+        """Append a landed token; finish a request that completed while
+        PREEMPTED (its slot was swapped out during the ahead build after its
+        last token dispatched — _retire only sees slotted requests, and a
+        resumed overrun past EOS would be wrong)."""
+        req.out.append(tok)
+        if req.state == PREEMPTED and (
+                len(req.out) >= req.max_new
+                or (req.eos is not None and tok == req.eos)):
+            req.done = True
+            self.completed.append(req)
+            self.preempted.remove(req)
+            del self._swap[req.rid]
+            self._epoch += 1   # the prepared plan may have planned its resume
 
     def run(self):
         ticks = 0
@@ -582,13 +949,30 @@ def main(argv=None):
                     help="admit on prompt pages only; when the pool runs dry "
                          "mid-decode, swap the lowest-priority running "
                          "request to a host slab and resume it later")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="fold prefill into the decode tick: one chunk of "
+                         "this many prompt tokens runs per tick next to the "
+                         "fused decode (0 = whole-prompt bucketed prefill). "
+                         "Token-exact and KV byte-identical vs whole-prompt; "
+                         "needs --paged")
+    ap.add_argument("--no-dispatch-ahead", dest="dispatch_ahead",
+                    action="store_false", default=True,
+                    help="disable double buffering (host prepares tick N+1 "
+                         "while tick N runs on device; an epoch fence "
+                         "rebuilds when a submit/EOS/preemption invalidates "
+                         "the prepared plan)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token id: a request retires the step this "
+                         "token is sampled (pages free immediately; later "
+                         "steps neither sample nor write KV for it)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy); "
                          "stateless rng keyed by (seed, token index)")
     ap.add_argument("--jit-budget", type=int, default=None,
                     help="fail (exit 1) if the total trace-time compile "
-                         "signatures (prefill buckets + decode + cow) exceed "
-                         "this — the CI recompile-regression gate")
+                         "signatures (prefill buckets + decode + cow + "
+                         "chunk) exceed this — the CI recompile-regression "
+                         "gate")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -627,9 +1011,14 @@ def main(argv=None):
                  paged=args.paged, page_size=args.page_size,
                  num_pages=args.num_pages, mesh=mesh,
                  prefix_share=args.prefix_share, preempt=args.preempt,
+                 chunk_tokens=args.chunk_tokens,
+                 dispatch_ahead=args.dispatch_ahead,
                  ctx=ModelCtx(mode="serve", backend=args.backend,
                               impl=args.impl, tune=tune,
                               paged_attn=args.paged_attn))
+    if args.chunk_tokens and not srv.chunk_tokens:
+        print("chunked prefill disabled: arch needs exact-length prefill "
+              "or int8 KV (fell back to whole-prompt buckets)")
     if args.paged:
         fused = (args.paged_attn == "fused"
                  or (args.paged_attn == "auto" and args.backend == "pallas"))
@@ -657,7 +1046,8 @@ def main(argv=None):
             elif i == 1:
                 prompt = first.copy()
         srv.submit(Request(i, prompt, args.max_new,
-                           temperature=args.temperature, seed=i))
+                           temperature=args.temperature, seed=i,
+                           eos=args.eos_id))
     ticks = srv.run()
     dt = time.time() - t0
     total_new = sum(len(r.out) for r in srv.completed)
@@ -668,7 +1058,14 @@ def main(argv=None):
     total_sigs = sum(srv.compile_counts.values())
     print(f"jit signatures: prefill={srv.compile_counts['prefill']} "
           f"(buckets={list(srv.buckets)}), decode={srv.compile_counts['decode']}, "
-          f"cow={srv.compile_counts['cow']}, total={total_sigs}")
+          f"cow={srv.compile_counts['cow']}, "
+          f"chunk={srv.compile_counts['chunk']}, total={total_sigs}")
+    if srv.chunk_tokens:
+        print(f"chunked prefill: {srv.stats['chunk_ticks']} chunk ticks "
+              f"(--chunk-tokens {srv.chunk_tokens})")
+    if srv.dispatch_ahead:
+        print(f"dispatch-ahead: {srv.stats['plan_hits']} plan hits, "
+              f"{srv.stats['fences']} fences")
     if args.paged:
         print(f"page pool: {srv.pt.usable_pages} usable pages x "
               f"{srv.pt.page_size} tokens, {srv.pt.free_pages} free at exit")

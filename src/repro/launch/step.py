@@ -175,6 +175,27 @@ def make_decode_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
     return decode_step
 
 
+def make_chunk_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
+    """Serve chunked-prefill step (transformer.prefill_chunk): one prompt
+    chunk scattered/attended through the paged pool at a position offset —
+    the piece the mixed prefill/decode server tick dispatches alongside
+    `make_decode_step` so long prompts stop stalling the decode slots.
+
+    `batch` carries tokens (B, C), pos0 (B,), read_pages/write_pages
+    (B, max_pages), nreal (B,) and last_idx (B,) — all fixed shapes for a
+    given chunk budget C, so chunked traffic compiles exactly one extra
+    signature next to the decode step (the serve driver's --jit-budget
+    accounting counts it under the "chunk" key)."""
+    ctx = ctx or ModelCtx(mode="serve")
+
+    def chunk_step(params, batch):
+        return transformer.prefill_chunk(
+            params, batch["cache"], batch["tokens"], batch["pos0"], sp, ctx,
+            read_pages=batch["read_pages"], write_pages=batch["write_pages"],
+            nreal=batch["nreal"], last_idx=batch["last_idx"])
+    return chunk_step
+
+
 # ---------------------------------------------------------------------------
 # shape/sharding assembly for a (cfg, workload shape, mesh) cell
 # ---------------------------------------------------------------------------

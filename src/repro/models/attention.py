@@ -413,6 +413,68 @@ def attn_decode(p, x, cache, pos, specs: AttnSpecs, cfg: ArchConfig,
     return out, {"k": k, "v": v}
 
 
+def attn_prefill_chunk(p, x, cache, pos0, specs: AttnSpecs, cfg: ArchConfig,
+                       ctx: ModelCtx, *, read_pages, write_pages, nreal):
+    """Prefill one prompt *chunk* against the paged cache at a position offset.
+
+    x: (B, C, D) — C chunk tokens (right-padded past `nreal`); pos0: (B,)
+    absolute position of the chunk's first token; read_pages/write_pages:
+    (B, max_pages) page rows. Token t sits at absolute position pos0+t, its
+    KV is scattered to write_pages[(pos0+t)//P] offset (pos0+t)%P, and its
+    query attends every pooled token at position <= pos0+t — the already-
+    written prefix chunks plus this chunk's own tokens (scatter happens
+    before the gather, so in-chunk causal attention reads through the pool).
+
+    Two page rows because prefix sharing masks WRITES, not reads: a shared
+    page already holds this prefix's KV (bytes are a pure function of the
+    token prefix), so its write_pages entry is NULL_PAGE (scratch) while
+    read_pages keeps the real id. Padding tokens (t >= nreal) are likewise
+    redirected to scratch.
+
+    Byte-exactness contract (tests/test_serving.py): this path must produce
+    bit-identical KV to whole-prompt `attn_apply` prefill. It therefore
+    mirrors `_gqa_scores_blockless` exactly — same einsum contractions, same
+    masked softmax — relying on two XLA-CPU invariances the serving oracles
+    already lean on: row-slicing a matmul and padding a masked key axis are
+    both bit-exact. Requires the pool dtype == compute dtype (the int8 KV
+    cache re-quantizes at chunk boundaries, which whole-prompt prefill does
+    not — the server disables chunking there).
+    """
+    b, c, _ = x.shape
+    y = common.linear_apply(p["qkv"], x, specs.qkv, ctx)
+    q, k_new, v_new = _split_qkv(y, cfg)
+    positions = (jnp.asarray(pos0, jnp.int32)[:, None]
+                 + jnp.arange(c, dtype=jnp.int32)[None, :])          # (B, C)
+    q = common.rope(q, positions, cfg.rope_theta)
+    k_new = common.rope(k_new, positions, cfg.rope_theta)
+
+    cd = cache["k"].dtype
+    kq, vq = _kv_quant(k_new, cd), _kv_quant(v_new, cd)              # (B,C,Hk,dh)
+    page_size = cache["k"].shape[1]
+    rows = jnp.arange(b)
+    tvalid = jnp.arange(c)[None, :] < jnp.asarray(nreal, jnp.int32)[:, None]
+    pidx = jnp.minimum(positions // page_size, write_pages.shape[1] - 1)
+    pid = jnp.where(tvalid, write_pages[rows[:, None], pidx], 0)     # NULL_PAGE
+    off = positions % page_size
+    k = cache["k"].at[pid, off].set(kq)
+    v = cache["v"].at[pid, off].set(vq)
+
+    s = read_pages.shape[1] * page_size
+    kf = _kv_dequant(k[read_pages].reshape(b, s, *k.shape[2:]), x.dtype)
+    vf = _kv_dequant(v[read_pages].reshape(b, s, *v.shape[2:]), x.dtype)
+    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]    # (B, C, S)
+
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hk
+    qg = q.reshape(b, c, hk, g, dh)
+    sc = jnp.einsum("bthgd,bshd->bhgts", qg, kf).astype(jnp.float32) / dh ** 0.5
+    sc = jnp.where(valid[:, None, None, :, :], sc, NEG_INF)
+    a = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgts,bshd->bthgd", a, vf).reshape(b, c, h * dh)
+    out = common.linear_apply(p["out"], o, specs.out, ctx)
+    return out, {"k": k, "v": v}
+
+
 # -- cross attention (whisper decoder) ----------------------------------------
 
 def cross_attn_apply(p, x, enc_kv, specs: AttnSpecs, cfg: ArchConfig, ctx: ModelCtx):

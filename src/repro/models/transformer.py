@@ -242,6 +242,33 @@ def block_decode(p, x, cache, pos, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCt
     return x, cache
 
 
+def block_chunk(p, x, cache, pos0, bs: BlockSpecs, cfg: ArchConfig,
+                ctx: ModelCtx, *, read_pages, write_pages, nreal):
+    """Chunked-prefill through one block. x: (B, C, D); pos0: (B,).
+
+    Only full-attention blocks are chunkable: window rings and recurrent
+    states have no pageable representation of a partial prefix (the server
+    falls back to whole-prompt prefill for those archs — `exact_prefill`).
+    """
+    if bs.kind != "attn":
+        raise ValueError(f"chunked prefill requires attn blocks, got {bs.kind}")
+    h = common.norm_apply(p["norm1"], x, cfg.norm)
+    sub = {k: v for k, v in cache.items() if k in ("k", "v")}
+    m, sub = attention.attn_prefill_chunk(
+        p["mixer"], h, sub, pos0, bs.mixer, cfg, ctx,
+        read_pages=read_pages, write_pages=write_pages, nreal=nreal)
+    cache = {**cache, **sub}
+    x = x + m
+    if bs.ffn is not None:
+        h2 = common.norm_apply(p["norm2"], x, cfg.norm)
+        if bs.is_moe:
+            y, _ = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
+        else:
+            y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
+        x = x + y
+    return x, cache
+
+
 def block_pack(p, bs: BlockSpecs):
     """Train-layout block params -> packed serve layout."""
     out = {k: v for k, v in p.items() if k.startswith("norm")}
@@ -551,6 +578,49 @@ def prefill(params, tokens, sp: ModelSpecs, ctx: ModelCtx, *, frontend_embeds=No
         x_last = jnp.take_along_axis(x, idx, axis=1)
     logits = _logits(params, x_last, sp, ctx)
     return logits, caches
+
+
+def prefill_chunk(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx, *,
+                  read_pages, write_pages, nreal, last_idx):
+    """One prompt *chunk* through the stack against the paged cache.
+
+    tokens: (B, C) — C chunk tokens starting at absolute position pos0 (B,),
+    right-padded past `nreal` (B,). read_pages/write_pages: (B, max_pages)
+    page rows (write row has NULL_PAGE at shared-prefix pages). Returns
+    (logits, cache) where logits (B, 1, V) are taken at chunk-local index
+    `last_idx` (B,) — only meaningful on the final chunk of a prompt, where
+    the server points it at the prompt's last token to sample the first
+    output (garbage otherwise, ignored by the caller).
+
+    Byte-exactness: each chunk writes exactly the KV bytes whole-prompt
+    `prefill` would (see attention.attn_prefill_chunk), and the final chunk's
+    last-row hidden state is bit-identical to whole-prompt `last_pos` gather,
+    so the sampled first token matches the sequential oracle.
+    """
+    cfg = sp.cfg
+    x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
+    kw = dict(read_pages=read_pages, write_pages=write_pages, nreal=nreal)
+    new_cache: dict[str, Any] = {}
+    x, new_cache["first"] = block_chunk(params["first"], x, cache["first"], pos0,
+                                        sp.first, cfg, ctx, **kw)
+    if sp.n_periods:
+        def period(xx, scanned):
+            pp, cc = scanned
+            ncs = {}
+            for t, bs in enumerate(sp.mid):
+                xx, ncs[f"b{t}"] = block_chunk(pp[f"b{t}"], xx, cc[f"b{t}"], pos0,
+                                               bs, cfg, ctx, **kw)
+            return xx, ncs
+        x, new_cache["mid"] = jax.lax.scan(period, x, (params["mid"], cache["mid"]))
+    for t, bs in enumerate(sp.rem):
+        x, new_cache[f"rem{t}"] = block_chunk(params[f"rem{t}"], x, cache[f"rem{t}"],
+                                              pos0, bs, cfg, ctx, **kw)
+    x, new_cache["last"] = block_chunk(params["last"], x, cache["last"], pos0,
+                                       sp.last, cfg, ctx, **kw)
+    idx = jnp.asarray(last_idx, jnp.int32).reshape(-1, 1, 1)
+    x_last = jnp.take_along_axis(x, idx, axis=1)
+    logits = _logits(params, x_last, sp, ctx)
+    return logits, new_cache
 
 
 def decode_step(params, cache, tokens, pos, sp: ModelSpecs, ctx: ModelCtx, *,

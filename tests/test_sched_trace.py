@@ -1,0 +1,211 @@
+"""Scheduler state-machine trace test: random interleavings of submit /
+chunked-prefill / decode / preempt / resume / EOS-retire must preserve the
+PageTable and lifecycle invariants at EVERY tick, and the dispatch-ahead
+epoch fence must behave exactly (a prepared plan is consumed iff nothing
+mutated the scheduler after it was built — a submit, fork or swap in
+between always fences it).
+
+The device calls are stubbed with numpy fakes (no jit, no model): the fake
+model deterministically emits token (write_position + 1) % vocab, so the
+expected output of every request is a pure function of its prompt length,
+max_new and eos — computable without running a transformer. That turns the
+whole scheduler into a fast, exhaustively-checkable state machine: hundreds
+of random traces per second instead of seconds per trace. The real-model
+byte/token exactness is locked down separately (test_serving.py,
+test_serving_sched.py); THIS test's job is the bookkeeping — refcounts,
+free-list conservation, state exclusivity, fence correctness — under
+interleavings no hand-written test would enumerate.
+
+Uses tests/_hypothesis_compat: real hypothesis when installed, a seeded
+deterministic fallback otherwise.
+"""
+import dataclasses
+import functools
+import random
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.launch.kv_cache import NULL_PAGE
+from repro.launch.serve import (PREEMPTED, PREFILLING, RUNNING, WAITING,
+                                Request, Server)
+from repro.models import transformer
+from repro.models.common import ModelCtx
+
+CACHE_LEN = 32
+PAGE_SIZE = 4
+VOCAB = 512
+SLOTS = 3
+NUM_PAGES = 8        # 7 usable: tight enough to force preempt/defer paths
+
+
+@functools.lru_cache(maxsize=None)
+def _built():
+    cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(),
+                              policy="ternary")
+    params = transformer.init(__import__("jax").random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    return cfg, sparams
+
+
+def _stub_server(*, chunk_tokens, prefix_share):
+    """A real Server whose jitted device calls are replaced by numpy fakes.
+    The fake model's next token is (position_being_written + 1) % VOCAB:
+    decode at position p emits p+1; the final prefill chunk of an n-token
+    prompt emits n. All real host-side machinery (PageTable, swap slabs,
+    CoW planning, epochs, plans) runs unchanged."""
+    cfg, sparams = _built()
+    srv = Server(cfg, sparams, slots=SLOTS, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, num_pages=NUM_PAGES,
+                 prefix_share=prefix_share, preempt=True,
+                 chunk_tokens=chunk_tokens,
+                 ctx=ModelCtx(mode="serve"))
+
+    def fake_decode(params, cache, tokens, pos, pages):
+        p = np.asarray(pos)
+        logits = np.zeros((srv.phys_slots, 1, VOCAB), np.float32)
+        logits[np.arange(srv.phys_slots), 0, (p + 1) % VOCAB] = 1.0
+        return logits, cache
+
+    def fake_chunk(params, cache, tokens, pos0, read, write, nreal, last_idx):
+        nxt = (int(np.asarray(pos0)[0]) + int(np.asarray(nreal)[0])) % VOCAB
+        logits = np.zeros((1, 1, VOCAB), np.float32)
+        logits[0, 0, nxt] = 1.0
+        return logits, cache
+
+    def fake_prefill(*a):
+        raise AssertionError("whole-prompt prefill dispatched with "
+                             "chunk_tokens > 0 — chunked admission broken")
+
+    srv._decode = fake_decode
+    srv._chunk = fake_chunk
+    srv._prefill = fake_prefill
+    srv._cow = lambda cache, a, b: cache
+    return srv
+
+
+def _expected_out(req, plen):
+    """The stub model's full output: n, n+1, ... truncated by max_new (and
+    by eos the step it is emitted). plen + max_new <= 21 << VOCAB, so the
+    eos match index is unambiguous."""
+    out = [(plen + j) % VOCAB for j in range(req.max_new)]
+    if req.eos is not None and req.eos in out:
+        out = out[: out.index(req.eos) + 1]
+    return out
+
+
+def _check_invariants(srv, reqs):
+    pt = srv.pt
+    # -- page-table conservation: every non-free page is referenced exactly
+    # refcount times by {slot tables} ∪ {share index}, free list disjoint
+    assert pt.free_pages + int((pt.refcount[1:] > 0).sum()) == pt.usable_pages
+    assert all(pt.refcount[p] == 0 for p in pt._free)
+    for s in range(srv.slots):
+        held = int(pt.held[s])
+        live = pt.table[s, :held]
+        assert (live != NULL_PAGE).all(), (s, pt.table[s])
+        assert (pt.table[s, held:] == NULL_PAGE).all(), (s, pt.table[s])
+        assert all(pt.refcount[p] > 0 for p in live), (s, live)
+        r = srv.slot_req[s]
+        if r is None:
+            assert held == 0 and not pt.active[s]
+        else:
+            assert r.state in (RUNNING, PREFILLING), r.state
+            assert 0 <= srv.slot_pos[s] <= CACHE_LEN
+    # -- lifecycle exclusivity: one home per request, states consistent
+    slotted = [r for r in srv.slot_req if r is not None]
+    for r in reqs:
+        homes = (int(r in srv.queue) + int(r in slotted)
+                 + int(r in srv.preempted) + int(r in srv.completed))
+        assert homes == 1, (r.rid, r.state, homes)
+    for r in srv.preempted:
+        # never simultaneously PREFILLING and PREEMPTED: a partial-chunk
+        # swap image does not exist
+        assert r.state == PREEMPTED, (r.rid, r.state)
+        assert r.rid in srv._swap
+    for s, r in enumerate(srv.slot_req):
+        if r is not None and r.state == PREFILLING:
+            assert s in srv._prefill_ctx
+    for s in srv._prefill_ctx:
+        assert (srv.slot_req[s] is not None
+                and srv.slot_req[s].state == PREFILLING)
+    # -- fence sanity: a plan from the future cannot exist
+    if srv._prepared is not None:
+        assert srv._prepared.epoch <= srv._epoch
+
+
+def _step_checked(srv, reqs):
+    """One tick with the fence contract asserted exactly: a prepared plan is
+    consumed iff its epoch snapshot still matches — any submit/fork/swap/
+    loud-retire since the build must fence it."""
+    prep, epoch = srv._prepared, srv._epoch
+    hits, fences = srv.stats["plan_hits"], srv.stats["fences"]
+    srv.step()
+    if prep is not None:
+        if prep.epoch == epoch:
+            assert srv.stats["plan_hits"] == hits + 1
+            assert srv.stats["fences"] == fences
+        else:
+            assert srv.stats["fences"] == fences + 1
+            assert srv.stats["plan_hits"] == hits
+    _check_invariants(srv, reqs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6), st.booleans())
+def test_random_interleavings_preserve_invariants(seed, chunk_tokens,
+                                                  prefix_share):
+    """Random admit/chunk/decode/preempt/resume/EOS traces over a tight
+    pool: invariants hold at every tick, the fence fires exactly when it
+    must, every request completes with the stub model's predicted output,
+    and the pool drains to fully free."""
+    rng = random.Random(seed)
+    srv = _stub_server(chunk_tokens=chunk_tokens, prefix_share=prefix_share)
+    reqs, plens = [], {}
+    n_reqs = rng.randint(3, 8)
+    shared_prompt = np.asarray(
+        [rng.randrange(VOCAB) for _ in range(6)], np.int32)
+
+    def submit_one():
+        rid = len(reqs)
+        if prefix_share and rng.random() < 0.4:
+            prompt = shared_prompt.copy()          # exact-duplicate traffic
+        else:
+            plen = rng.randint(1, 12)
+            prompt = np.asarray([rng.randrange(VOCAB) for _ in range(plen)],
+                                np.int32)
+        max_new = rng.randint(1, 6)
+        eos = None
+        if rng.random() < 0.5:
+            # eos the stub model will really emit at step j (or never, when
+            # j >= max_new — the max_new bound must win then)
+            j = rng.randint(0, 7)
+            eos = (len(prompt) + j) % VOCAB
+        req = Request(rid, prompt, max_new, priority=rng.choice((0, 1)),
+                      eos=eos)
+        plens[rid] = len(prompt)
+        reqs.append(req)
+        srv.submit(req)
+
+    submit_one()
+    for _ in range(rng.randint(5, 40)):
+        if len(reqs) < n_reqs and rng.random() < 0.35:
+            submit_one()
+            _check_invariants(srv, reqs)   # submit alone must not corrupt
+        else:
+            _step_checked(srv, reqs)
+    for _ in range(400):                   # drain, livelock-bounded
+        if not (srv.queue or srv.preempted
+                or any(r is not None for r in srv.slot_req)):
+            break
+        _step_checked(srv, reqs)
+    else:
+        raise AssertionError("scheduler failed to drain in 400 ticks")
+
+    assert len(srv.completed) == len(reqs)
+    assert not srv._swap and not srv._prefill_ctx
+    assert srv.pt.free_pages == srv.pt.usable_pages
+    for r in reqs:
+        want = _expected_out(r, plens[r.rid])
+        assert r.out == want, (seed, r.rid, r.out, want)

@@ -250,3 +250,203 @@ def test_paged_long_decode_extends_pages():
     srv.submit(Request(0, prompt, max_new))
     srv.run()
     assert srv.completed[0].out == want
+
+
+# -- chunked prefill + dispatch-ahead + EOS (PR 7) ----------------------------
+
+
+def test_chunked_prefill_kv_byte_identical():
+    """The chunked-prefill contract at its strongest: running a prompt
+    through `transformer.prefill_chunk` in C-token chunks (C NOT dividing n,
+    so the padded final chunk is exercised) writes the SAME BYTES into the
+    paged pool as the whole-prompt bucketed `prefill` + `scatter_prefill`
+    path, and the final chunk's last-position logits are bit-identical to
+    the whole-prompt last-position logits. jit-vs-jit on both sides: eager
+    vs jit fuses RoPE differently (~1 ulp in K), and the server only ever
+    runs the jitted calls — byte identity is claimed for what actually
+    executes, not for an eager reference."""
+    import jax.tree_util as jtu
+
+    from repro.launch import kv_cache
+
+    cfg, sp, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    P, max_pages = PAGE_SIZE, CACHE_LEN // PAGE_SIZE
+    num_pages = 1 + max_pages
+    n, bucket, C = 14, 16, 5     # C does not divide n: final chunk is padded
+    prompt = _prompts(cfg, lens=(n,), seed=7)[0]
+
+    toks = np.zeros((1, bucket), np.int32)
+    toks[0, :n] = prompt
+    prefill_j = jax.jit(lambda p, t, lp: transformer.prefill(
+        p, t, sp, ctx, cache_len=CACHE_LEN, last_pos=lp))
+    logits_w, rc = prefill_j(sparams, jnp.asarray(toks),
+                             jnp.asarray([n - 1], jnp.int32))
+    cache_w = transformer.init_cache(cfg, 1, CACHE_LEN, paged=(num_pages, P),
+                                     kv_dtype=ctx.dtype)
+    pm = kv_cache.paged_leaf_mask(cfg, 1, CACHE_LEN, num_pages, P)
+    ids = np.arange(1, kv_cache.pages_for(n, P) + 1, dtype=np.int32)
+    pad = kv_cache.pages_for(bucket, P) - len(ids)
+    sc_ids = np.concatenate([ids, np.full(pad, kv_cache.NULL_PAGE, np.int32)])
+    cache_w = kv_cache.scatter_prefill(cache_w, rc, 0, paged_mask=pm,
+                                       page_ids=sc_ids, page_size=P)
+
+    cache_c = transformer.init_cache(cfg, 1, CACHE_LEN, paged=(num_pages, P),
+                                     kv_dtype=ctx.dtype)
+    table = np.zeros((1, max_pages), np.int32)
+    table[0, :len(ids)] = ids
+    step = jax.jit(lambda pr, c, t, p0, rp, wp, nr, li:
+                   transformer.prefill_chunk(pr, c, t, p0, sp, ctx,
+                                             read_pages=rp, write_pages=wp,
+                                             nreal=nr, last_idx=li))
+    covered, logits_c = 0, None
+    while covered < n:
+        creal = min(C, n - covered)
+        ct = np.zeros((1, C), np.int32)
+        ct[0, :creal] = prompt[covered:covered + creal]
+        li = creal - 1 if covered + creal == n else 0
+        logits_c, cache_c = step(sparams, cache_c, jnp.asarray(ct),
+                                 jnp.asarray([covered], jnp.int32),
+                                 jnp.asarray(table), jnp.asarray(table),
+                                 jnp.asarray([creal], jnp.int32),
+                                 jnp.asarray([li], jnp.int32))
+        covered += creal
+
+    compared = 0
+    for (pw, aw), (_, ac), (_, ispaged) in zip(
+            jtu.tree_leaves_with_path(cache_w),
+            jtu.tree_leaves_with_path(cache_c),
+            jtu.tree_leaves_with_path(pm)):
+        if not ispaged:
+            continue
+        compared += 1
+        if aw.ndim == 5:     # scanned mid stack: (periods, pages, P, Hk, dh)
+            gw = np.asarray(aw)[:, ids].reshape(
+                aw.shape[0], -1, *aw.shape[-2:])[:, :n]
+            gc = np.asarray(ac)[:, ids].reshape(
+                ac.shape[0], -1, *ac.shape[-2:])[:, :n]
+        else:
+            gw = np.asarray(aw)[ids].reshape(-1, *aw.shape[-2:])[:n]
+            gc = np.asarray(ac)[ids].reshape(-1, *ac.shape[-2:])[:n]
+        assert np.array_equal(gw, gc), \
+            f"pool bytes diverge at {jtu.keystr(pw)}"
+    assert compared > 0, "no paged leaves compared — mask/layout changed?"
+    assert np.array_equal(np.asarray(logits_w[0, -1]),
+                          np.asarray(logits_c[0, 0]))
+
+
+@pytest.mark.parametrize("dispatch_ahead", [True, False])
+def test_chunked_serve_matches_sequential(dispatch_ahead):
+    """Mixed-length traffic through the server with --chunk-tokens (chunk
+    size NOT dividing the prompt lengths) == sequential greedy reference,
+    token for token, with and without dispatch-ahead double buffering. The
+    jit budget collapses to {chunk, decode}: no prefill bucket signatures."""
+    cfg, sp, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompts = _prompts(cfg)
+    want = [_greedy_reference(cfg, sp, sparams, ctx, p, MAX_NEW)
+            for p in prompts]
+    srv = _serve(cfg, sparams, ctx, prompts, paged=True, chunk_tokens=5,
+                 dispatch_ahead=dispatch_ahead)
+    got = {r.rid: r.out for r in srv.completed}
+    for i, w in enumerate(want):
+        assert got[i] == w, (dispatch_ahead, i, got[i], w)
+    assert srv.stats["chunk_ticks"] > 0
+    assert srv.compile_counts["prefill"] == 0, srv.compile_counts
+    assert srv.compile_counts["chunk"] == 1, srv.compile_counts
+    assert srv.compile_counts["decode"] == 1, srv.compile_counts
+    if dispatch_ahead:
+        assert srv.stats["plan_hits"] > 0, srv.stats
+    assert srv.pt.free_pages == srv.pt.usable_pages
+
+
+def test_eos_retires_slot_and_frees_pages():
+    """EOS retirement: a request stops the very step its eos token is
+    sampled — output truncated at the EOS, the slot's pages back in the pool
+    that same tick, and later ticks neither sample nor write KV for it
+    (pos_trace stops growing once the server is drained). A co-running
+    request without eos is unaffected."""
+    cfg, sp, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    p_eos, p_other = _prompts(cfg, lens=(5, 9), seed=17)
+    max_new = 6
+    ref_eos = _greedy_reference(cfg, sp, sparams, ctx, p_eos, max_new)
+    ref_other = _greedy_reference(cfg, sp, sparams, ctx, p_other, max_new)
+    eos_tok = ref_eos[2]               # retire after the 3rd sampled token...
+    k = ref_eos.index(eos_tok)         # ...or wherever it first appears
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, ctx=ctx)
+    req = Request(0, p_eos, max_new, eos=eos_tok)
+    srv.submit(req)
+    srv.submit(Request(1, p_other, max_new))
+    while not req.done:
+        srv.step()
+    assert req.out == ref_eos[:k + 1]
+    # pages freed the retire tick, not at drain (slot 1 still holds its own)
+    assert srv.pt.held[0] == 0
+    out_after_eos = list(req.out)
+    srv.run()
+    assert req.out == out_after_eos, "sampled past EOS"
+    got = {r.rid: r.out for r in srv.completed}
+    assert got[1] == ref_other
+    assert srv.pt.free_pages == srv.pt.usable_pages
+    # once drained, extra steps dispatch nothing (no KV writes, no samples)
+    ticks = len(srv.pos_trace)
+    for _ in range(3):
+        assert srv.step() is False
+    assert len(srv.pos_trace) == ticks
+
+
+def test_byte_tokenizer_roundtrip_and_eos_serves():
+    """data.tokenizer.ByteTokenizer: exact text round-trip, ids fit the
+    reduced vocab, and an encoded prompt serves through the full path with
+    Request.eos = ByteTokenizer.EOS wired up."""
+    from repro.data.tokenizer import ByteTokenizer
+
+    cfg, sp, sparams = _built("ternary")
+    tok = ByteTokenizer(vocab=cfg.vocab)
+    text = "BrainTTA: 35 fJ/op — ñaé"
+    ids = tok.encode(text, eos=True)
+    assert ids[0] == ByteTokenizer.BOS and ids[-1] == ByteTokenizer.EOS
+    assert ids.max() < cfg.vocab
+    assert tok.decode(ids) == text
+    with pytest.raises(ValueError):
+        ByteTokenizer(vocab=128)
+    prompt = tok.encode("hi", eos=False)[:8].astype(np.int32)
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    want = _greedy_reference(cfg, sp, sparams, ctx, prompt, MAX_NEW)
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, ctx=ctx)
+    srv.submit(Request(0, prompt, MAX_NEW, eos=ByteTokenizer.EOS))
+    srv.run()
+    stop = (want.index(ByteTokenizer.EOS) + 1
+            if ByteTokenizer.EOS in want else MAX_NEW)
+    assert srv.completed[0].out == want[:stop]
+
+
+def test_jit_counters_are_signature_exact():
+    """compile_counts counts DISTINCT abstract signatures, not call-site
+    traces: jax.clear_caches() forces a re-trace of already-seen signatures
+    and must NOT inflate any counter, while a genuinely new prompt bucket
+    afterwards must raise the prefill count by exactly one."""
+    cfg, _, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, ctx=ctx)
+    prompts = _prompts(cfg, lens=(3, 9), seed=23)   # buckets 4 and 16
+    for i, p in enumerate(prompts):
+        srv.submit(Request(i, p, 2))
+    srv.run()
+    before = dict(srv.compile_counts)
+    assert before["prefill"] == 2 and before["decode"] == 1, before
+    jax.clear_caches()          # evict every XLA executable: forced re-trace
+    for i, p in enumerate(prompts):
+        srv.submit(Request(10 + i, p, 2))
+    srv.run()
+    assert dict(srv.compile_counts) == before, \
+        (srv.compile_counts, before, "re-trace of a seen signature counted")
+    # a new bucket (len 5 -> bucket 8) is a genuinely new signature: +1
+    srv.submit(Request(20, _prompts(cfg, lens=(5,), seed=29)[0], 2))
+    srv.run()
+    assert srv.compile_counts["prefill"] == before["prefill"] + 1
+    assert srv.compile_counts["decode"] == before["decode"]

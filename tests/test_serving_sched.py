@@ -150,6 +150,34 @@ def test_cow_isolates_sampled_divergence():
         assert outs[i] == want, (i, outs[i], want)
 
 
+@pytest.mark.parametrize("chunk_tokens", [3, 5])
+def test_chunked_share_preempt_token_exact(chunk_tokens):
+    """Chunked prefill under the full scheduler gauntlet: shared-prefix
+    traffic (incl. an exact duplicate) with --prefix-share AND --preempt
+    over a page-tight pool, sampling at temperature > 0 so CoW divergence
+    is forced — token-exact vs the sequential oracle. The chunk sizes do
+    not divide the prompt lengths (padded final chunk) and straddle page
+    boundaries; deferred share-index registration must still alias pages
+    (shared_pages > 0) even though the prefix is built chunk by chunk, and
+    the whole run compiles zero prefill-bucket signatures."""
+    cfg, sp, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompts = _shared_prefix_prompts(cfg)
+    want = [_reference(cfg, sp, sparams, ctx, p, MAX_NEW, temperature=0.9,
+                       seed=50 + i) for i, p in enumerate(prompts)]
+    reqs = [Request(i, p, MAX_NEW, temperature=0.9, seed=50 + i)
+            for i, p in enumerate(prompts)]
+    srv = _serve(cfg, sparams, ctx, reqs, slots=3, num_pages=9,
+                 prefix_share=True, preempt=True, chunk_tokens=chunk_tokens)
+    assert srv.stats["chunk_ticks"] > 0, srv.stats
+    assert srv.stats["shared_pages"] > 0, srv.stats
+    assert srv.compile_counts["prefill"] == 0, srv.compile_counts
+    assert srv.compile_counts["chunk"] == 1, srv.compile_counts
+    got = {r.rid: r.out for r in srv.completed}
+    for i, w in enumerate(want):
+        assert got[i] == w, (chunk_tokens, i, got[i], w)
+
+
 def test_preemption_swaps_out_and_resumes_token_exact():
     """A pool too small for two decode lifetimes with --preempt: both
     requests admit immediately (prompt-only admission), the pool runs dry

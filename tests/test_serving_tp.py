@@ -95,3 +95,64 @@ def test_tp_serve_token_exact_vs_single_device(tp):
                        timeout=900)
     assert r.returncode == 0, r.stderr[-4000:]
     assert f"SERVING_TP_OK {tp}" in r.stdout, r.stdout[-2000:]
+
+
+SCRIPT_ODD = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8
+from repro.configs import get_config
+from repro.launch.serve import Request, Server
+from repro.models import transformer
+from repro.models.common import ModelCtx
+
+# slots=3 over data=2: the non-dividing batch that the CPU SPMD partitioner
+# silently miscompiled (wrong tokens, no error) before the inert phys-slot
+# padding. 3 prompts so all three slots really co-run.
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+PROMPT_LENS, MAX_NEW, CACHE_LEN, PAGE_SIZE = (3, 9, 14), 4, 32, 4
+NUM_PAGES = 24
+rng = np.random.default_rng(7)
+cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(),
+                          policy="ternary")
+params = transformer.init(jax.random.PRNGKey(0), cfg)
+sparams = transformer.pack_for_serve(params, cfg)
+prompts = [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)
+           for n in PROMPT_LENS]
+ctx = ModelCtx(mode="serve", backend="jnp", dtype=jnp.float32)
+
+def serve(mesh_):
+    srv = Server(cfg, sparams, slots=3, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, num_pages=NUM_PAGES, ctx=ctx,
+                 mesh=mesh_)
+    # the device batch pads to the next data-axis multiple; host-side
+    # scheduling stays at 3 slots
+    assert srv.phys_slots == (4 if mesh_ is not None else 3), srv.phys_slots
+    for i, p in enumerate(prompts):
+        srv.submit(Request(i, p, MAX_NEW))
+    srv.run()
+    assert len(srv.completed) == 3
+    assert srv.pt.free_pages == srv.pt.usable_pages
+    return {r.rid: r.out for r in srv.completed}
+
+want = serve(None)
+got = serve(mesh)
+assert got == want, ("odd-slots TP serve diverged", got, want)
+print("ODD_SLOTS_OK")
+'''
+
+
+def test_tp_odd_slots_vs_single_device():
+    """slots=3 on a data=2 mesh — the divisibility regression: before the
+    inert phys-slot padding, the CPU SPMD partitioner produced WRONG TOKENS
+    (silently) for any slot count not dividing the data axis. Now the device
+    batch pads to phys_slots=4 and the tokens must match single-device
+    serving exactly."""
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    r = subprocess.run([sys.executable, "-c", SCRIPT_ODD],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ODD_SLOTS_OK" in r.stdout, r.stdout[-2000:]
