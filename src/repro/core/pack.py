@@ -24,12 +24,16 @@ import jax.numpy as jnp
 WORD = 32  # bits per packed word
 NIBBLES = 8  # int4 codes per 32-bit word (v_C=8 for the s4 format)
 
+#: total bit-planes of each plane-decomposable weight precision (two's
+#: complement: plane 0 is the sign plane, coefficient -2^(b-1))
+PLANE_BITS = {"int4": 4, "int8": 8}
+
 #: K elements per unit of each packed leaf's storage axis — THE pack-factor
 #: table every layer consults (`kernels.dispatch.tp_plan` for shard_map
 #: compute, `launch.sharding` for device layout). A leaf absent here is
 #: unpacked (one element per storage unit).
 K_QUANTUM = {"w_packed": WORD, "w_mask": WORD, "w_sign": WORD,
-             "w_q4": NIBBLES}
+             "w_q4": NIBBLES, "w_planes": WORD}
 
 
 def shardable_words(units: int, n_shards: int) -> bool:
@@ -147,6 +151,67 @@ def unpack_int4_i8(words: jnp.ndarray, k: int) -> jnp.ndarray:
     nib = ((words[..., None] >> shifts) & jnp.uint32(0xF)).astype(jnp.int32)
     nib = nib.reshape(*words.shape[:-1], words.shape[-1] * NIBBLES)[..., :k]
     return jnp.where(nib >= 8, nib - 16, nib).astype(jnp.int8)
+
+
+# -- bit-plane stacks (int4/int8 as shifted sums of binary planes) -----------
+#
+# Exact two's-complement decomposition of a b-bit code c:
+#
+#     c = -2^(b-1) * bit_{b-1} + sum_{j<b-1} 2^j * bit_j
+#
+# stored MSB-first along a NEW plane axis inserted before the last two axes,
+# so a (N, K) code matrix becomes a (b, N, K/32) uint32 stack and an expert
+# stack (E, N, K) becomes (E, b, N, K/32). MSB-first ordering makes plane
+# truncation a leading slice `w_planes[:P]` with UNCHANGED per-plane
+# coefficients — the storage trick self-speculative decoding exploits (a
+# truncated-plane pass over the same weights is the draft model). The plane
+# axis never touches the K storage axis, so K_QUANTUM["w_planes"] stays the
+# 32-operand word quantum and the tensor-parallel shard rules apply verbatim.
+
+
+def plane_coeffs(bits: int) -> tuple[int, ...]:
+    """MSB-first per-plane coefficients of the b-bit two's-complement
+    decomposition: (-2^(b-1), 2^(b-2), ..., 2, 1). Python ints — static in
+    every jit trace, so truncated stacks keep their original coefficients."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"plane decomposition supports 2..8 bits, got {bits}")
+    return (-(1 << (bits - 1)),) + tuple(
+        1 << (bits - 1 - i) for i in range(1, bits))
+
+
+def pack_planes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Decompose b-bit two's-complement codes (int dtype, last axis = K) into
+    a stacked bit-plane tensor: uint32 (..., bits, N, K/32), MSB-first.
+
+    Bit-exact inverse is `unpack_planes_i8(planes, k, bits)`; a leading
+    slice `planes[..., :P, :, :]` is the truncated-plane approximation
+    (floor(c / 2^(b-P)) * 2^(b-P), rounding toward -inf)."""
+    coeffs = plane_coeffs(bits)          # validates bits
+    del coeffs
+    _check_k(codes.shape[-1])
+    if codes.ndim < 2:
+        raise ValueError("pack_planes needs at least a (N, K) matrix")
+    field = codes.astype(jnp.int32) & ((1 << bits) - 1)   # b-bit 2c field
+    planes = [pack_bits(((field >> (bits - 1 - i)) & 1).astype(jnp.uint8))
+              for i in range(bits)]
+    return jnp.stack(planes, axis=-3)
+
+
+def unpack_planes_i8(planes: jnp.ndarray, k: int, bits: int) -> jnp.ndarray:
+    """Compose a (possibly truncated) plane stack back to int8 codes.
+
+    planes: uint32 (..., P, N, K/32) with P <= bits leading (MSB-first)
+    planes of the ORIGINAL b-bit decomposition; k: unpacked K. P == bits
+    reproduces the stored codes exactly (round-trip contract); P < bits
+    gives the truncation floor(c / 2^(b-P)) * 2^(b-P). The canonical
+    plane->operand decoder — the jnp accumulator and the Pallas MacBody
+    both derive from the same coefficients, so jnp-vs-pallas equivalence
+    stays an algebra check."""
+    p_live = planes.shape[-3]
+    coeffs = jnp.asarray(plane_coeffs(bits)[:p_live], jnp.int32)
+    bitsmat = unpack_bits(planes, k).astype(jnp.int32)    # (..., P, N, k)
+    vals = jnp.sum(bitsmat * coeffs[..., :, None, None], axis=-3)
+    return vals.astype(jnp.int8)
 
 
 # -- packed dot products (the XNOR/gated-XNOR algebra, §II-A) ----------------

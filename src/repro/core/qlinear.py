@@ -198,6 +198,10 @@ def pack_params(p: Params, spec: QLinearSpec) -> Params:
              w_scale   f32[(E,) out]
     int8   : w_q       int8[(E,) in, out]
              w_scale   f32[(E,) out]
+    int4/int8 weights with int8 acts additionally carry the stacked
+    bit-plane twin of the same codes (word-aligned in_dim only):
+             w_planes  uint32[(E,) bits, out, in/32]  (MSB-first 2c planes)
+    feeding the impl="planes" cells and their truncated-plane drafts.
     none   : w         bf16 (dense weights, cast)
     `a_scale` (f32 scalar) is a calibrated activation scale for int8 acts.
     Weight and activation precisions are independent (mixed w/a operating
@@ -220,11 +224,20 @@ def pack_params(p: Params, spec: QLinearSpec) -> Params:
         out["w_scale"] = jnp.sum(jnp.abs(wt) * jnp.abs(q), axis=-1) / nz
     elif prec == "int4":
         s = int4_scale(wt, axis=-1)            # per-out-channel, reduce in
-        out["w_q4"] = pack.pack_int4(int4_codes(wt, s))
+        codes = int4_codes(wt, s)
+        out["w_q4"] = pack.pack_int4(codes)
+        if spec.lq.acts.precision == "int8" and spec.in_dim % pack.WORD == 0:
+            # stacked bit-plane twin of the SAME codes (plane-composed cells
+            # + truncated-plane speculative drafts); word-aligned K only
+            out["w_planes"] = pack.pack_planes(codes, pack.PLANE_BITS[prec])
         out["w_scale"] = jnp.squeeze(s, axis=-1)
     elif prec == "int8":
         s = int8_scale(w, axis=(w.ndim - 2,))  # reduce in_dim, keep experts
-        out["w_q"] = int8_codes(w, s)
+        codes = int8_codes(w, s)
+        out["w_q"] = codes
+        if spec.lq.acts.precision == "int8" and spec.in_dim % pack.WORD == 0:
+            out["w_planes"] = pack.pack_planes(
+                jnp.swapaxes(codes, -1, -2), pack.PLANE_BITS[prec])
         out["w_scale"] = jnp.squeeze(s, axis=w.ndim - 2)
     else:
         out["w"] = w.astype(jnp.bfloat16)
@@ -251,9 +264,15 @@ def serve_param_shapes(spec: QLinearSpec) -> dict[str, jax.ShapeDtypeStruct]:
         out["w_scale"] = sd(e + (n,), jnp.float32)
     elif prec == "int4":
         out["w_q4"] = sd(e + (n, k // pack.NIBBLES), jnp.uint32)
+        if spec.lq.acts.precision == "int8" and k % pack.WORD == 0:
+            out["w_planes"] = sd(e + (pack.PLANE_BITS[prec], n, k // pack.WORD),
+                                 jnp.uint32)
         out["w_scale"] = sd(e + (n,), jnp.float32)
     elif prec == "int8":
         out["w_q"] = sd(e + (k, n), jnp.int8)
+        if spec.lq.acts.precision == "int8" and k % pack.WORD == 0:
+            out["w_planes"] = sd(e + (pack.PLANE_BITS[prec], n, k // pack.WORD),
+                                 jnp.uint32)
         out["w_scale"] = sd(e + (n,), jnp.float32)
     else:
         out["w"] = sd(e + (k, n), jnp.bfloat16)

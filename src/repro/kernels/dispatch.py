@@ -60,7 +60,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import pack
 from repro.core.quantize import int8_codes, ternarize
 
-from . import bgemm, i4gemm, i8gemm, tgemm
+from . import bgemm, i4gemm, i8gemm, pgemm, tgemm
 from . import harness
 from .harness import Tile  # re-export: the OperatingPoint tile override type
 
@@ -88,10 +88,17 @@ class OperatingPoint:
     impl: str = "popcount"
     backend: str = "jnp"
     tile: Tile | None = None
+    #: leading (MSB-first) plane count a plane-composed cell contracts; None
+    #: = the full stack. An execution choice like backend/tile, NOT part of
+    #: the registry key — the self-speculative draft pass runs the SAME cell
+    #: over the same weights with planes=1/2 (truncated-plane approximation).
+    planes: int | None = None
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
             raise ValueError(f"backend={self.backend!r}; have {_BACKENDS}")
+        if self.planes is not None and self.planes < 1:
+            raise ValueError(f"planes={self.planes!r}: need >= 1 or None")
 
     @property
     def key(self) -> tuple[str, str, str]:
@@ -100,7 +107,9 @@ class OperatingPoint:
 
     @property
     def tag(self) -> str:
-        return f"w{self.wprec[:4]}/a{self.aprec[:4]}/{self.impl}@{self.backend}"
+        trunc = "" if self.planes is None else f":p{self.planes}"
+        return (f"w{self.wprec[:4]}/a{self.aprec[:4]}/{self.impl}{trunc}"
+                f"@{self.backend}")
 
     @classmethod
     def for_spec(cls, spec, *, impl: str = "popcount", backend: str = "jnp",
@@ -350,6 +359,16 @@ def _acc_wint4_aint8(x_ops, w_ops, k):
                                preferred_element_type=jnp.int32)
 
 
+def _acc_planes(x_ops, w_ops, k, *, bits):
+    """Plane-composed weights x int8 activation codes: the stacked binary
+    planes compose back to the exact b-bit codes (or their leading-P
+    truncation), then one int8 MXU dot — integer arithmetic end to end, so
+    the result is bit-identical to the direct int4/int8 cells."""
+    w = pack.unpack_planes_i8(w_ops[0], k, bits)       # (N, K) composed codes
+    return jax.lax.dot_general(x_ops[0], w, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
 def _acc_wonly_binary(x_ops, w_ops, k):
     w = pack.unpack_pm1_i8(w_ops[0], k)                # (N, K)
     return x_ops[0] @ w.astype(x_ops[0].dtype).T
@@ -402,6 +421,19 @@ register(GemmCell(_op("ternary", "int8", "*"), ("w_mask", "w_sign"),
                   _prep_int8, _acc_wternary_aint8, body=tgemm.TERNARY_W_I8A))
 register(GemmCell(_op("int4", "int8", "*"), ("w_q4",),
                   _prep_int8, _acc_wint4_aint8, body=i4gemm.INT4_W_I8A))
+
+# plane-composed cells: int4/int8 weights stored as stacked binary planes
+# (pack.pack_planes, MSB-first two's complement), contracted by looping the
+# binary plane datapath with shifted coefficients — bit-exact vs the direct
+# cells above. impl="planes" coexists with the "*" wildcard rows: exact key
+# wins in lookup(), so a policy pair resolves to these only when asked.
+# OperatingPoint.planes truncates the stack (the self-speculative draft).
+register(GemmCell(_op("int4", "int8", "planes"), ("w_planes",),
+                  _prep_int8, functools.partial(_acc_planes, bits=4),
+                  body=pgemm.PLANES_W4_I8A))
+register(GemmCell(_op("int8", "int8", "planes"), ("w_planes",),
+                  _prep_int8, functools.partial(_acc_planes, bits=8),
+                  body=pgemm.PLANES_W8_I8A))
 
 # weight-only cells: bf16 acts end-to-end so the row-parallel TP partial-sum
 # reduces in bf16 (2x wire, §Perf A); requant stays in bf16 (wide=False).
@@ -463,9 +495,9 @@ class TPSpec:
 
 #: per-leaf axis positions (negative = from the end; leading expert axis ok)
 _N_AXIS = {"w_packed": -2, "w_mask": -2, "w_sign": -2, "w_q4": -2,
-           "w_q": -1, "w": -1, "w_scale": -1, "b": -1}
+           "w_planes": -2, "w_q": -1, "w": -1, "w_scale": -1, "b": -1}
 _K_AXIS = {"w_packed": -1, "w_mask": -1, "w_sign": -1, "w_q4": -1,
-           "w_q": -2, "w": -2}
+           "w_planes": -1, "w_q": -2, "w": -2}
 
 
 def tp_plan(cell: GemmCell, spec, parallel: str, tp: TPSpec | None) -> str | None:
@@ -495,6 +527,32 @@ def tp_plan(cell: GemmCell, spec, parallel: str, tp: TPSpec | None) -> str | Non
     if spec.in_dim % q:
         return None
     return "row" if pack.shardable_words(spec.in_dim // q, ns) else None
+
+
+def _weight_ops(cell: GemmCell, op: OperatingPoint, p: Mapping) -> tuple:
+    """Fetch the cell's weight operands, applying the OperatingPoint's plane
+    truncation (leading MSB-first slice; coefficients are positional, so the
+    sliced stack needs no re-scaling). planes on a cell without a stacked
+    leaf is a loud error — silently running full precision would make a
+    draft pass lie about its cost."""
+    w_ops = tuple(p[nm] for nm in cell.weight_names)
+    if op.planes is None:
+        return w_ops
+    if "w_planes" not in cell.weight_names:
+        raise ValueError(
+            f"OperatingPoint planes={op.planes} needs a plane-composed cell; "
+            f"{cell.key} has no stacked w_planes leaf")
+    out = []
+    for nm, wv in zip(cell.weight_names, w_ops):
+        if nm == "w_planes":
+            ax = wv.ndim - 3                 # plane axis (skips expert lead)
+            if not 1 <= op.planes <= wv.shape[ax]:
+                raise ValueError(
+                    f"planes={op.planes} outside the stored stack depth "
+                    f"{wv.shape[ax]} for {cell.key}")
+            wv = jax.lax.slice_in_dim(wv, 0, op.planes, axis=ax)
+        out.append(wv)
+    return tuple(out)
 
 
 def _dp_axis(tp: TPSpec, dim: int) -> str | None:
@@ -538,7 +596,7 @@ def _tp_row(cell, p, x, spec, op, tp):
     e = spec.experts
     x3 = x.reshape((e, -1, k) if e else (-1, k))
     m = x3.shape[-2]
-    w_ops = tuple(p[nm] for nm in cell.weight_names)
+    w_ops = _weight_ops(cell, op, p)
     shared = {nm: p[nm] for nm in ("a_scale",) if nm in p}
     use_pallas = op.backend == "pallas" and cell.body is not None
     tile = _resolve_tile(op)
@@ -667,7 +725,7 @@ def qgemm(p: dict, x: jnp.ndarray, spec, op: OperatingPoint | None = None, *,
     lead = x.shape[:-1]
     x2d = x.reshape(-1, k)
     x_ops, a_scale = cell.prep(x2d, p, spec)
-    w_ops = tuple(p[nm] for nm in cell.weight_names)
+    w_ops = _weight_ops(cell, op, p)
     w_scale = p.get("w_scale")
     bias = p.get("b")
 

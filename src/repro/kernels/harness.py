@@ -82,6 +82,12 @@ class MacBody:
     default_bkq: int = 16
     xk_per_q: int | None = None  # activation storage density (None = k_per_q)
     wk_per_q: int | None = None  # weight storage density (None = k_per_q)
+    w_stack: int = 0         # >0: weight operands carry a leading stacked
+                             # plane axis — (planes, N, Kq) — swept whole per
+                             # grid step (plane-composed cells). The value is
+                             # the FULL stack depth (the vmem model's worst
+                             # case); the live depth is the operand's shape[0]
+                             # (a truncated stack just traces a smaller tile).
 
     @property
     def xk(self) -> int:
@@ -189,14 +195,21 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
     q, xk, wk = body.k_per_q, body.xk, body.wk
     assert q % xk == 0 and q % wk == 0, (body.name, q, xk, wk)
     m = x_ops[0].shape[0]
-    n = w_ops[0].shape[0] if not body.w_kmajor else w_ops[0].shape[1]
+    if body.w_stack:
+        n = w_ops[0].shape[-2]
+    else:
+        n = w_ops[0].shape[0] if not body.w_kmajor else w_ops[0].shape[1]
     units = k // q                  # grid-quantum count along K
     assert units * q == k, (body.name, k, q)
     for xo in x_ops:
         assert xo.shape == (m, k // xk), (xo.shape, m, k, xk)
     for wo in w_ops:
-        assert wo.shape == ((n, k // wk) if not body.w_kmajor
-                            else (k // wk, n)), (wo.shape, n, k, wk)
+        if body.w_stack:
+            assert wo.ndim == 3 and wo.shape[-2:] == (n, k // wk) \
+                and 1 <= wo.shape[0] <= body.w_stack, (wo.shape, n, k, wk)
+        else:
+            assert wo.shape == ((n, k // wk) if not body.w_kmajor
+                                else (k // wk, n)), (wo.shape, n, k, wk)
     bm = fit_block(tile.bm, m, align=8)
     bn = fit_block(tile.bn, n)
     bkq = fit_block(tile.bkq if tile.bkq is not None else body.default_bkq,
@@ -212,7 +225,13 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
         bias = jnp.zeros((n,), jnp.float32)
 
     x_spec = pl.BlockSpec((bm, bx), lambda i, j, kk: (i, kk))
-    if body.w_kmajor:
+    if body.w_stack:
+        # stacked plane axis rides whole in every grid step (the plane loop
+        # lives inside the MacBody); live depth is the operand's, so a
+        # truncated draft stack traces a proportionally smaller tile
+        stack = w_ops[0].shape[0]
+        w_spec = pl.BlockSpec((stack, bn, bw), lambda i, j, kk: (0, j, kk))
+    elif body.w_kmajor:
         w_spec = pl.BlockSpec((bw, bn), lambda i, j, kk: (kk, j))
     else:
         w_spec = pl.BlockSpec((bn, bw), lambda i, j, kk: (j, kk))
@@ -249,8 +268,9 @@ def vmem_tile_bytes(body: MacBody, tile: Tile | None = None) -> int:
                 if body.unpacks_f32 else 0)          # f32 ±1/trit operands
     if body.unpacks_i8:
         unpacked += body.n_w * bn * k_elems          # int8 unpacked weights
+    stack = body.w_stack or 1                        # full-depth worst case
     return (body.n_x * bm * bx * xb                  # activation tiles
-            + body.n_w * bn * bw * wb                # weight tiles
+            + body.n_w * bn * bw * wb * stack        # weight tiles (x planes)
             + unpacked                               # MXU-body intermediates
             + body.n_acc * bm * bn * 4               # int32 accumulators
             + bm * bn * 2                            # bf16 out tile

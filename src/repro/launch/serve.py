@@ -40,6 +40,13 @@ Design (vLLM-style, shrunk to its essentials):
     that can't represent a partial prefix in pages (recurrent/window state:
     `exact_prefill`) and for the int8 KV cache (chunk-boundary requant is
     not byte-identical)
+  * `--spec-draft planes:P --spec-k K` self-speculative decoding: a DRAFT
+    pass over the SAME packed weights — int4/int8 layers contract to their
+    P leading bit-planes (kernels.dispatch plane-composed cells) — proposes
+    K-1 tokens per tick; one full-precision multi-token VERIFY step (the
+    chunk-attention algebra) checks them and the longest exactly-matching
+    prefix plus one corrected token land at once. Acceptance is exact token
+    match, so serving stays token-exact vs the sequential oracle
   * one fused decode step advances every active slot each tick with a
     per-slot position vector — each slot's RoPE phase, cache-write index and
     validity mask follow its own clock, so mixed-length traffic decodes
@@ -172,6 +179,7 @@ class Server:
                  buckets: tuple[int, ...] | None = None,
                  prefix_share: bool = False, preempt: bool = False,
                  chunk_tokens: int = 0, dispatch_ahead: bool = True,
+                 spec_draft: str | None = None, spec_k: int = 4,
                  ctx: ModelCtx | None = None, mesh=None):
         self.cfg = cfg
         self.sp = transformer.build_specs(cfg)
@@ -224,6 +232,50 @@ class Server:
                                   or cfg.kv_cache_dtype == "int8"):
             self.chunk_tokens = 0
         self.dispatch_ahead = bool(dispatch_ahead)
+        # self-speculative decoding: a truncated-bit-plane DRAFT pass over
+        # the SAME packed weights and pages proposes spec_k-1 tokens per
+        # tick; one full-precision multi-token VERIFY step (the chunk
+        # attention algebra) checks them, and the accepted prefix plus the
+        # first corrected token land at once. Token-exact vs sequential
+        # decoding — acceptance is exact token match against what the
+        # full-precision pass samples, never a distribution test.
+        self.spec = bool(spec_draft)
+        self.spec_k = int(spec_k)
+        self.spec_planes = 1
+        if self.spec:
+            kind, _, depth = spec_draft.partition(":")
+            if kind != "planes":
+                raise ValueError(f"unknown --spec-draft kind {kind!r} "
+                                 "(only 'planes[:DEPTH]' exists)")
+            self.spec_planes = int(depth) if depth else 1
+            if self.spec_k < 1:
+                raise ValueError("--spec-k must be >= 1")
+            if not paged:
+                raise ValueError("--spec-draft needs the paged cache (the "
+                                 "verify step replays a multi-token range "
+                                 "through pages)")
+            if self.chunk_tokens:
+                raise ValueError("--spec-draft and --chunk-tokens are "
+                                 "mutually exclusive")
+            if self.exact_prefill or cfg.kv_cache_dtype == "int8":
+                # verify rides the chunk attention path: recurrent/window
+                # state can't replay a token range, and the int8 KV requant
+                # is not byte-identical at chunk boundaries — fall back to
+                # plain sequential decoding rather than lose exactness
+                self.spec = False
+            else:
+                self.dispatch_ahead = False   # spec ticks schedule in line
+        if self.spec:
+            # layers packed in a direct int4/int8 layout need the plane twin
+            # for the draft pass to read (policies with no such layers fall
+            # back to a full-precision draft via operating_point's impl
+            # fallback — trivially exact, accept-rate 1)
+            leaves = {getattr(p[-1], "key", None) for p, _ in
+                      jax.tree_util.tree_leaves_with_path(params)}
+            if {"w_q", "w_q4"} & leaves and "w_planes" not in leaves:
+                raise ValueError(
+                    "--spec-draft needs the bit-plane weight twin; pack "
+                    "with transformer.pack_for_serve(..., plane_twins=True)")
         if buckets is None:
             buckets = default_buckets(page_size if paged else 8, cache_len)
         self.buckets = tuple(sorted(buckets))
@@ -272,7 +324,9 @@ class Server:
         self.pos_trace: list[np.ndarray] = []   # per-tick active-slot positions
         self.stats = {"shared_pages": 0, "cow_forks": 0,
                       "preemptions": 0, "resumes": 0, "peak_pages": 0,
-                      "chunk_ticks": 0, "plan_hits": 0, "fences": 0}
+                      "chunk_ticks": 0, "plan_hits": 0, "fences": 0,
+                      "spec_ticks": 0, "spec_proposed": 0,
+                      "spec_accepted": 0, "spec_emitted": 0}
         # dispatch-ahead state: the prepared next tick and the mutation epoch
         # that fences it (every scheduler mutation — admit, retire, preempt,
         # resume, fork, submit — bumps the epoch; a plan built at epoch e is
@@ -280,7 +334,8 @@ class Server:
         self._epoch = 0
         self._prepared: _Plan | None = None
 
-        self.compile_counts = {"prefill": 0, "decode": 0, "cow": 0, "chunk": 0}
+        self.compile_counts = {"prefill": 0, "decode": 0, "cow": 0,
+                               "chunk": 0, "draft": 0, "verify": 0}
         self._signatures: dict[str, set] = {k: set()
                                             for k in self.compile_counts}
         self._prefill = self._counted("prefill", lambda p, t, lp:
@@ -298,6 +353,22 @@ class Server:
                 transformer.prefill_chunk(p, c, t, p0, self.sp, self.ctx,
                                           read_pages=rp, write_pages=wp,
                                           nreal=nr, last_idx=li))
+            if self.spec:
+                # draft context: layers that resolve to a plane-composed
+                # cell contract to the leading spec_planes MSB planes (the
+                # sign plane alone at depth 1); everything else — and every
+                # policy pair without a plane cell — runs full precision,
+                # so the draft degrades toward exact instead of breaking
+                draft_ctx = dataclasses.replace(self.ctx, impl="planes",
+                                                draft_planes=self.spec_planes)
+                self._draft = self._counted("draft", lambda p, c, t, pos, pg:
+                    transformer.decode_step(p, c, t, pos, self.sp, draft_ctx,
+                                            pages=pg))
+                self._verify = self._counted("verify",
+                    lambda p, c, t, p0, rp, wp, nr:
+                        transformer.decode_verify(p, c, t, p0, self.sp,
+                                                  self.ctx, read_pages=rp,
+                                                  write_pages=wp, nreal=nr))
         else:
             self._decode = self._counted("decode", lambda p, c, t, pos:
                 transformer.decode_step(p, c, t, pos, self.sp, self.ctx))
@@ -381,20 +452,43 @@ class Server:
             pages_for(self._need_tokens(r), self.page_size) - int(self.pt.held[s])
             for s, r in enumerate(self.slot_req) if r is not None)
 
-    def _fork_debt(self, extra_shared=frozenset()) -> int:
-        """Pages CoW forks may still claim: one per active slot whose next
-        decode write lands in a page that is shared (or would become shared
-        if the candidate admission maps the pages in `extra_shared`). For a
-        PREFILLING slot the next decode write is at position n (its chunk
-        clock slot_pos is still inside the prompt)."""
-        debt = 0
+    def _fork_debt(self, extra_shared=frozenset(),
+                   extra_writer_pages=()) -> int:
+        """Pages CoW forks may still claim, counted exactly per PHYSICAL
+        page: a page with effective refcount r and w slots whose next decode
+        write lands inside it can absorb at most min(w, r - 1) forks — each
+        fork drops the refcount by one, and the last co-owner standing
+        writes in place, no copy. The old per-slot tally (one page per slot
+        with a pending CoW, plus one for the candidate's own shared
+        boundary page) overcounted aliased writers and double-counted a
+        page against both the candidate and the slot it shares with — e.g.
+        an in-flight PREFILLING slot whose deferred index registration is
+        about to cover that very page — rejecting admissible work under
+        --prefix-share + --chunk-tokens.
+
+        `extra_shared`: pages a candidate admission would map (effective
+        refcount +1 each). `extra_writer_pages`: pages the candidate itself
+        will write into on its first decode (its boundary page when that
+        arrives shared). For a PREFILLING slot the next decode write is at
+        position n (its chunk clock slot_pos is still inside the prompt)."""
+        writers: dict[int, int] = {}
         for s, r in enumerate(self.slot_req):
             if r is None:
                 continue
             pos = (self._prefill_ctx[s]["n"] if r.state == PREFILLING
                    else int(self.slot_pos[s]))
-            if self.pt.cow_pending(s, pos, extra_shared):
-                debt += 1
+            idx = pos // self.page_size
+            if idx >= int(self.pt.held[s]):
+                continue              # next write opens a fresh page
+            pid = int(self.pt.table[s, idx])
+            writers[pid] = writers.get(pid, 0) + 1
+        for pid in extra_writer_pages:
+            writers[pid] = writers.get(pid, 0) + 1
+        debt = 0
+        for pid, w in writers.items():
+            rc = int(self.pt.refcount[pid]) + (1 if pid in extra_shared else 0)
+            if rc > 1:
+                debt += min(w, rc - 1)
         return debt
 
     def _admission_ok(self, req: Request, keys) -> bool:
@@ -416,9 +510,16 @@ class Server:
         lifetime = pages_for(self._need_tokens(req), self.page_size) - nhit
         debt = 0
         if self.prefix_share:
-            debt = self._fork_debt({p for p in hits if p is not None})
-            if hits and hits[-1] is not None and len(req.prompt) % self.page_size:
-                debt += 1    # its own boundary page arrives shared
+            # the candidate's own first decode write lands in its final
+            # prompt page; when that page arrives shared (a boundary hit) it
+            # is one more writer in the same per-page accounting — not an
+            # unconditional +1 on top (that double-counted it against the
+            # slot it shares with)
+            boundary = (hits[-1],) if (hits and hits[-1] is not None
+                                       and len(req.prompt) % self.page_size
+                                       ) else ()
+            debt = self._fork_debt({p for p in hits if p is not None},
+                                   boundary)
         return self.pt.free_pages - self._outstanding_demand() - debt >= lifetime
 
     def _try_start(self, s: int) -> bool:
@@ -539,7 +640,14 @@ class Server:
         slab, release its pages (refcounted — shared pages survive for their
         co-owners), and park the request on the preempted list."""
         req = self.slot_req[s]
-        ids = self.pt.slot_pages(s)
+        # gather exactly the pages the resume will scatter back: those
+        # covering the decode position. Speculative ticks extend coverage
+        # past pos (the verify step writes lookahead rows); those pages hold
+        # rejected-draft garbage and must not enter the swap image —
+        # swap_in_slot scatters pages_for(pos) pages, a larger slab would
+        # shape-mismatch. swap_out below still releases EVERY held page.
+        ids = self.pt.slot_pages(s)[: pages_for(int(self.slot_pos[s]),
+                                                self.page_size)]
         data = kv_cache.swap_out_slot(self.cache, s, ids, self.paged_mask)
         self.pt.swap_out(s)
         self._swap[req.rid] = _SwapState(int(self.slot_pos[s]), data)
@@ -626,8 +734,14 @@ class Server:
         for s, req in enumerate(self.slot_req):
             if req is None or s in skip or req.state == PREFILLING:
                 continue
-            eos = (req.eos is not None and req.out
-                   and req.out[-1] == req.eos)
+            eos = False
+            if req.eos is not None and req.eos in req.out:
+                # a multi-token accept can land tokens PAST the stop token
+                # in one tick; generation ends at EOS, so truncate there and
+                # retire now. (The old `out[-1] == eos` test only caught a
+                # final-position EOS and kept decoding past a mid-batch one.)
+                del req.out[req.out.index(req.eos) + 1:]
+                eos = True
             if (len(req.out) >= req.max_new or eos
                     or self.slot_pos[s] >= self.cache_len - 1):
                 req.done = True
@@ -640,15 +754,22 @@ class Server:
                 if s not in quiet:
                     self._epoch += 1
 
-    def _prepare_pages(self, skip=frozenset()):
-        """Per-tick page work, most-important slot first: CoW-fork the write
-        page if it is shared, then extend coverage for the write at
-        slot_pos[s]. When the pool runs dry (--preempt only; the conservative
-        reservation makes it unreachable otherwise), evict strictly-lower-
-        priority victims — or the claimant itself when none remain.
-        PREFILLING slots need no work (all prompt pages were claimed at
-        admission; chunks never CoW — shared pages are write-masked);
-        `skip` holds predicted-retire slots, which will never write again."""
+    def _prepare_pages(self, skip=frozenset(), lookahead=None):
+        """Per-tick page work, most-important slot first: CoW-fork every
+        shared page the tick will write into, then extend coverage through
+        the write range. When the pool runs dry (--preempt only; the
+        conservative reservation makes it unreachable otherwise), evict
+        strictly-lower-priority victims — or the claimant itself when none
+        remain. PREFILLING slots need no work (all prompt pages were claimed
+        at admission; chunks never CoW — shared pages are write-masked);
+        `skip` holds predicted-retire slots, which will never write again.
+
+        `lookahead` (speculative ticks): slot -> token positions the tick
+        writes, [pos, pos+la). The draft chain and the verify step both
+        scribble across the whole range before the accept decision, so every
+        shared held page in it must fork NOW — a shared page left in place
+        would take rejected-draft bytes a co-owner could read. Default la=1
+        is exactly the sequential single-write behavior."""
         order = sorted((s for s, r in enumerate(self.slot_req)
                         if r is not None and r.state == RUNNING
                         and s not in skip),
@@ -658,10 +779,17 @@ class Server:
             if req is None:
                 continue           # preempted by a more important slot's claim
             pos = int(self.slot_pos[s])
-            need = max(0, pages_for(pos + 1, self.page_size)
-                       - int(self.pt.held[s]))
-            if self.prefix_share and self.pt.cow_pending(s, pos):
-                need += 1
+            la = 1 if lookahead is None else int(lookahead.get(s, 1))
+            last_pg = (pos + la - 1) // self.page_size
+            need = max(0, (last_pg + 1) - int(self.pt.held[s]))
+            forkable = []
+            if self.prefix_share:
+                for idx in range(pos // self.page_size,
+                                 min(last_pg + 1, int(self.pt.held[s]))):
+                    tokpos = max(pos, idx * self.page_size)
+                    if self.pt.cow_pending(s, tokpos):
+                        forkable.append(tokpos)
+                need += len(forkable)
             if need > self.pt.free_pages:
                 if not self.preempt or not self._make_room(need, self._prio(req)):
                     if self.preempt:
@@ -670,15 +798,15 @@ class Server:
                     raise RuntimeError(
                         "page pool exhausted mid-decode without --preempt "
                         "(admission reservation should have prevented this)")
-            if self.prefix_share:
-                fork = self.pt.fork_cow(s, pos)
+            for tokpos in forkable:
+                fork = self.pt.fork_cow(s, tokpos)
                 if fork is not None:
                     src, dst = fork
                     self.cache = self._cow(self.cache, jnp.int32(src),
                                            jnp.int32(dst))
                     self.stats["cow_forks"] += 1
                     self._epoch += 1   # table remap: fences any stale plan
-            self.pt.extend(s, pos + 1)
+            self.pt.extend(s, pos + la)
 
     def _plan_chunk(self) -> dict | None:
         """Operands for this tick's prefill chunk: the most-important
@@ -757,6 +885,123 @@ class Server:
                      table=table, chunk=chunk,
                      will_retire=tuple(will_retire))
 
+    def _spec_step(self):
+        """One self-speculative tick: DRAFT up to spec_k-1 tokens per slot
+        with the truncated-plane context, VERIFY them in one full-precision
+        multi-token step, accept the longest exactly-matching prefix plus
+        the first corrected token.
+
+        Token-exactness: every ACCEPTED token is sampled (same stateless
+        (seed, index) rng) from verify logits computed over exactly the
+        inputs the sequential path would have fed — row t of the verify
+        chunk consumes [last_token, draft_0..draft_{t-1}], and the accept
+        loop only reaches row t when all those drafts matched the verify
+        samples (transformer.decode_verify). The draft decides HOW MANY
+        rows are usable, never WHAT tokens land.
+
+        The draft chain threads a throwaway cache lineage: reduced-precision
+        draft KV feeds later draft steps but never survives — verify starts
+        from the pre-draft cache and rewrites the whole [pos, pos+k) range
+        with exact KV, so rejected-draft bytes cannot leak into any future
+        read. Positions past the accepted point hold garbage from rejected
+        inputs; they are overwrite-before-read safe (the next tick scatters
+        from the rewound position before its gather, and its causal mask
+        never reaches past its own rows)."""
+        self._admit()
+        self._retire()
+        # per-slot window: never past the request budget or the final cache
+        # slot (the _retire above guarantees >= 1 for every RUNNING slot)
+        keff = {}
+        for s, r in enumerate(self.slot_req):
+            if r is not None and r.state == RUNNING:
+                keff[s] = max(1, min(self.spec_k, r.max_new - len(r.out),
+                                     self.cache_len - 1 - int(self.slot_pos[s])))
+        self._prepare_pages(lookahead=keff)
+        active = [s for s in sorted(keff) if self.slot_req[s] is not None
+                  and self.slot_req[s].state == RUNNING]
+        self.stats["peak_pages"] = max(
+            self.stats["peak_pages"],
+            self.pt.usable_pages - self.pt.free_pages)
+        if not active:
+            return bool(self.queue or self.preempted
+                        or any(r is not None for r in self.slot_req))
+        reqs = {s: self.slot_req[s] for s in active}
+        base = {s: int(self.slot_pos[s]) for s in active}
+        self.pos_trace.append(self.slot_pos[active].copy())
+        table = self.pt.table.copy()
+        rowmask = np.ones(len(table), bool)
+        rowmask[active] = False
+        table[rowmask] = NULL_PAGE
+        # -- draft: sequential truncated-plane decode steps, batched over
+        # the slots still inside their window (finished rows mask to NULL)
+        drafts = {s: [] for s in active}
+        cur = {s: reqs[s].out[-1] for s in active}
+        dcache = self.cache
+        for j in range(self.spec_k - 1):
+            live = [s for s in active if j < keff[s] - 1]
+            if not live:
+                break
+            tokens = np.zeros((self.phys_slots, 1), np.int32)
+            pos = np.zeros(self.phys_slots, np.int32)
+            dtab = table.copy()
+            dmask = np.ones(len(dtab), bool)
+            dmask[live] = False
+            dtab[dmask] = NULL_PAGE
+            for s in live:
+                tokens[s, 0] = cur[s]
+                pos[s] = base[s] + j
+            dlogits, dcache = self._draft(self.params, dcache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(pos), jnp.asarray(dtab))
+            rows = np.asarray(dlogits[:, 0])
+            for s in live:
+                r = reqs[s]
+                d = sample_token(rows[s], r.temperature, r.seed,
+                                 len(r.out) + j)
+                drafts[s].append(d)
+                cur[s] = d
+        # -- verify: one chunk-algebra step over [last_token, drafts...] per
+        # slot, writing exact KV across the whole window (read and write
+        # tables coincide: the lookahead fork above made every page in the
+        # write range exclusively owned)
+        tokens = np.zeros((self.phys_slots, self.spec_k), np.int32)
+        pos0 = np.zeros(self.phys_slots, np.int32)
+        nreal = np.zeros(self.phys_slots, np.int32)
+        for s in active:
+            row = [reqs[s].out[-1]] + drafts[s]
+            tokens[s, :len(row)] = row
+            pos0[s] = base[s]
+            nreal[s] = keff[s]
+        vlogits, self.cache = self._verify(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos0),
+            jnp.asarray(table), jnp.asarray(table), jnp.asarray(nreal))
+        vrows = np.asarray(vlogits)
+        self.stats["spec_ticks"] += 1
+        for s in active:
+            r = reqs[s]
+            emitted = []
+            n_acc = 0
+            for t in range(keff[s]):
+                v = sample_token(vrows[s, t], r.temperature, r.seed,
+                                 len(r.out) + t)
+                emitted.append(v)
+                if t < len(drafts[s]):
+                    if drafts[s][t] != v:
+                        break
+                    n_acc += 1
+            self.stats["spec_proposed"] += len(drafts[s])
+            self.stats["spec_accepted"] += n_acc
+            self.stats["spec_emitted"] += len(emitted)
+            r.out.extend(emitted)
+            # exact-KV coverage = inputs consumed by the accepted rows; the
+            # last emitted token was never fed, so the next tick feeds it at
+            # exactly this position (garbage beyond is overwritten there)
+            self.slot_pos[s] = base[s] + len(emitted)
+        self._epoch += 1
+        self._retire()   # truncates at a mid-batch EOS before retiring
+        return bool(any(r is not None for r in self.slot_req) or self.queue
+                    or self.preempted)
+
     def step(self):
         """One server tick: consume the prepared plan (or build one) ->
         dispatch the fused decode and the prefill chunk -> optimistically
@@ -773,6 +1018,8 @@ class Server:
         are already complete at admission (max_new == 1, or a prompt that
         fills the cache) so they never reach the decode step with nowhere
         left to write."""
+        if self.spec:
+            return self._spec_step()
         plan = None
         if self._prepared is not None:
             if self._prepared.epoch == self._epoch:
@@ -910,10 +1157,14 @@ def main(argv=None):
                     help="GEMM backend half of each layer's OperatingPoint "
                          "(precisions come from the policy per layer; both "
                          "backends route through kernels.dispatch.qgemm)")
-    ap.add_argument("--impl", default="popcount", choices=("popcount", "mxu"),
-                    help="binary/ternary GEMM formulation half of the "
-                         "OperatingPoint (int8/int4/mixed cells are "
-                         "formulation-agnostic)")
+    ap.add_argument("--impl", default="popcount",
+                    choices=("popcount", "mxu", "planes"),
+                    help="GEMM formulation half of the OperatingPoint: "
+                         "popcount/mxu pick the binary/ternary cell "
+                         "(int8/int4/mixed cells are formulation-agnostic); "
+                         "'planes' routes int4/int8-weight layers through "
+                         "the bit-plane-composed cells (per-layer fallback "
+                         "to popcount where no plane cell exists)")
     ap.add_argument("--paged-attn", default="auto",
                     choices=("auto", "gather", "fused"),
                     help="paged decode-attention read path: 'auto' runs the "
@@ -955,6 +1206,16 @@ def main(argv=None):
                          "fused decode (0 = whole-prompt bucketed prefill). "
                          "Token-exact and KV byte-identical vs whole-prompt; "
                          "needs --paged")
+    ap.add_argument("--spec-draft", default=None, metavar="KIND[:DEPTH]",
+                    help="self-speculative decoding: draft next tokens with "
+                         "a truncated formulation over the SAME packed "
+                         "weights ('planes:1' = sign-plane-only draft), "
+                         "verify with one full-precision multi-token step "
+                         "per tick; token-exact vs sequential decoding. "
+                         "Needs --paged; exclusive with --chunk-tokens")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative window: draft K-1 tokens and verify "
+                         "K rows per tick (with --spec-draft)")
     ap.add_argument("--no-dispatch-ahead", dest="dispatch_ahead",
                     action="store_false", default=True,
                     help="disable double buffering (host prepares tick N+1 "
@@ -994,7 +1255,9 @@ def main(argv=None):
               f"qgemm under shard_map, paged pool sharded over data")
 
     params = transformer.init(jax.random.PRNGKey(0), cfg)
-    sparams = transformer.pack_for_serve(params, cfg)
+    sparams = transformer.pack_for_serve(
+        params, cfg,
+        plane_twins=args.spec_draft is not None or args.impl == "planes")
     train_b = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
     serve_b = sum(np.asarray(x).nbytes for x in jax.tree.leaves(sparams))
     print(f"packed weights: {train_b/2**20:.1f} MiB -> {serve_b/2**20:.1f} MiB "
@@ -1013,12 +1276,17 @@ def main(argv=None):
                  prefix_share=args.prefix_share, preempt=args.preempt,
                  chunk_tokens=args.chunk_tokens,
                  dispatch_ahead=args.dispatch_ahead,
+                 spec_draft=args.spec_draft, spec_k=args.spec_k,
                  ctx=ModelCtx(mode="serve", backend=args.backend,
                               impl=args.impl, tune=tune,
                               paged_attn=args.paged_attn))
     if args.chunk_tokens and not srv.chunk_tokens:
         print("chunked prefill disabled: arch needs exact-length prefill "
               "or int8 KV (fell back to whole-prompt buckets)")
+    if args.spec_draft and not srv.spec:
+        print("speculative decoding disabled: arch needs exact-length "
+              "prefill or int8 KV (verify rides the chunk path); "
+              "fell back to sequential decode")
     if args.paged:
         fused = (args.paged_attn == "fused"
                  or (args.paged_attn == "auto" and args.backend == "pallas"))
@@ -1059,10 +1327,20 @@ def main(argv=None):
     print(f"jit signatures: prefill={srv.compile_counts['prefill']} "
           f"(buckets={list(srv.buckets)}), decode={srv.compile_counts['decode']}, "
           f"cow={srv.compile_counts['cow']}, "
-          f"chunk={srv.compile_counts['chunk']}, total={total_sigs}")
+          f"chunk={srv.compile_counts['chunk']}, "
+          f"draft={srv.compile_counts['draft']}, "
+          f"verify={srv.compile_counts['verify']}, total={total_sigs}")
     if srv.chunk_tokens:
         print(f"chunked prefill: {srv.stats['chunk_ticks']} chunk ticks "
               f"(--chunk-tokens {srv.chunk_tokens})")
+    if srv.spec:
+        prop = srv.stats["spec_proposed"]
+        acc = srv.stats["spec_accepted"]
+        sticks = max(srv.stats["spec_ticks"], 1)
+        print(f"speculative: {srv.stats['spec_ticks']} spec ticks, "
+              f"accept-rate {acc}/{prop} ({acc / max(prop, 1):.0%}), "
+              f"{srv.stats['spec_emitted'] / sticks:.2f} tokens/tick "
+              f"(--spec-draft {args.spec_draft}, --spec-k {srv.spec_k})")
     if srv.dispatch_ahead:
         print(f"dispatch-ahead: {srv.stats['plan_hits']} plan hits, "
               f"{srv.stats['fences']} fences")

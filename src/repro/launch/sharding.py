@@ -101,6 +101,15 @@ def param_spec(path, leaf, *, fsdp: bool = True, scanned_ok: bool = True) -> P:
                  ("w", "w_q") or (name in _PACKED and ndim == 3) or
                  (name == "w_scale" and ndim == 2) or (name == "b" and ndim == 2))
 
+    if name == "w_planes":                     # ((E,) bits, out, K/32) stack
+        # NOT the generic packed rule: the leading plane axis makes the
+        # non-expert leaf 3D, which the `is_expert` heuristic below would
+        # misread as an expert stack. Planes replicate (they are facets of
+        # ONE logical weight); out/K shard exactly like the 2D packed leaves.
+        if ndim == 4:                          # expert stack (E, b, out, K/32)
+            return out("model", None, None, fs) if not row \
+                else out("model", None, fs, None)
+        return out(None, fs, "model") if row else out(None, "model", fs)
     if name == "w" or name == "w_q":           # dense (in, out) train/int8
         if is_expert:                          # (E, in, out): EP + FSDP
             return out("model", fs, None) if not row else out("model", None, fs)

@@ -43,6 +43,12 @@ class ModelCtx:
                                  # Pallas kernel iff backend == "pallas"),
                                  # "fused" (force the kernel), "gather"
                                  # (force the jnp oracle path)
+    draft_planes: int | None = None  # self-speculative DRAFT context: layers
+                                 # resolving to a plane-composed cell contract
+                                 # only the leading N MSB planes (clamped to
+                                 # the cell's stack depth); other layers run
+                                 # full precision. None everywhere but the
+                                 # serve driver's draft pass.
 
 
 TRAIN = ModelCtx(mode="train")
@@ -107,8 +113,22 @@ def operating_point(spec: QLinearSpec, ctx: ModelCtx):
     (else qgemm falls back to the shipped default table). This per-layer
     resolution is what lets one policy serve heterogeneous operating points
     — e.g. s4 ffn_up next to ternary attn_out — with no global flag pair."""
+    from repro.core import pack
+    from repro.kernels import dispatch
     from repro.kernels.dispatch import OperatingPoint
     op = OperatingPoint.for_spec(spec, impl=ctx.impl, backend=ctx.backend)
+    try:
+        cell = dispatch.lookup(op)
+    except KeyError:
+        # impl fallback: a formulation only SOME pairs implement (e.g.
+        # impl="planes" exists for int4/int8 x int8 only) resolves per layer
+        # — pairs without it run their default cell instead of erroring, so
+        # one --impl planes flag serves a heterogeneous policy end to end.
+        op = dataclasses.replace(op, impl="popcount")
+        cell = dispatch.lookup(op)
+    if ctx.draft_planes is not None and "w_planes" in cell.weight_names:
+        op = dataclasses.replace(
+            op, planes=min(ctx.draft_planes, pack.PLANE_BITS[op.wprec]))
     if ctx.tune is not None:
         op = dataclasses.replace(op, tile=ctx.tune.tile_for(op))
     return op

@@ -380,8 +380,24 @@ def init(rng, cfg: ArchConfig) -> dict:
     return p
 
 
-def pack_for_serve(params: dict, cfg: ArchConfig) -> dict:
-    """Convert train-layout params to the packed serve layout (bit-planes)."""
+def _strip_plane_twins(t):
+    if isinstance(t, dict):
+        return {k: _strip_plane_twins(v)
+                for k, v in t.items() if k != "w_planes"}
+    return t
+
+
+def pack_for_serve(params: dict, cfg: ArchConfig, *,
+                   plane_twins: bool = False) -> dict:
+    """Convert train-layout params to the packed serve layout (bit-planes).
+
+    `plane_twins=True` keeps the stacked bit-plane twin (`w_planes`) that
+    `qlinear.pack_params` emits next to the direct int4/int8 layout — the
+    `impl="planes"` cells and the `--spec-draft` truncated-plane draft read
+    it. The default strips it: the twin duplicates those layers' weight
+    bytes, and the paper's packed-footprint ladder (binary < ternary < int8
+    < none) is a claim about the serving layout, not the plane machinery.
+    """
     sp = build_specs(cfg)
     out: dict[str, Any] = {
         "embed": {"w": params["embed"]["w"].astype(jnp.bfloat16)},
@@ -402,7 +418,7 @@ def pack_for_serve(params: dict, cfg: ArchConfig) -> dict:
         out[f"enc{t}"] = block_pack(params[f"enc{t}"], bs)
     if sp.encoder:
         out["enc_norm"] = params["enc_norm"]
-    return out
+    return out if plane_twins else _strip_plane_twins(out)
 
 
 # ---------------------------------------------------------------------------
@@ -580,26 +596,16 @@ def prefill(params, tokens, sp: ModelSpecs, ctx: ModelCtx, *, frontend_embeds=No
     return logits, caches
 
 
-def prefill_chunk(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx, *,
-                  read_pages, write_pages, nreal, last_idx):
-    """One prompt *chunk* through the stack against the paged cache.
-
-    tokens: (B, C) — C chunk tokens starting at absolute position pos0 (B,),
-    right-padded past `nreal` (B,). read_pages/write_pages: (B, max_pages)
-    page rows (write row has NULL_PAGE at shared-prefix pages). Returns
-    (logits, cache) where logits (B, 1, V) are taken at chunk-local index
-    `last_idx` (B,) — only meaningful on the final chunk of a prompt, where
-    the server points it at the prompt's last token to sample the first
-    output (garbage otherwise, ignored by the caller).
-
-    Byte-exactness: each chunk writes exactly the KV bytes whole-prompt
-    `prefill` would (see attention.attn_prefill_chunk), and the final chunk's
-    last-row hidden state is bit-identical to whole-prompt `last_pos` gather,
-    so the sampled first token matches the sequential oracle.
-    """
+def _chunk_stack(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx,
+                 kw):
+    """Shared multi-token paged traversal: embed `tokens` (B, C) and run the
+    chunk path (attention reads prior pool KV + the chunk's own causal
+    prefix, writes the chunk KV through `write_pages`) through every block.
+    Returns (hidden (B, C, D), new_cache). Backs both `prefill_chunk`
+    (chunked prompt prefill) and `decode_verify` (speculative multi-token
+    verification) — one algebra, two logits policies."""
     cfg = sp.cfg
     x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
-    kw = dict(read_pages=read_pages, write_pages=write_pages, nreal=nreal)
     new_cache: dict[str, Any] = {}
     x, new_cache["first"] = block_chunk(params["first"], x, cache["first"], pos0,
                                         sp.first, cfg, ctx, **kw)
@@ -617,9 +623,58 @@ def prefill_chunk(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx, *,
                                               pos0, bs, cfg, ctx, **kw)
     x, new_cache["last"] = block_chunk(params["last"], x, cache["last"], pos0,
                                        sp.last, cfg, ctx, **kw)
+    return x, new_cache
+
+
+def prefill_chunk(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx, *,
+                  read_pages, write_pages, nreal, last_idx):
+    """One prompt *chunk* through the stack against the paged cache.
+
+    tokens: (B, C) — C chunk tokens starting at absolute position pos0 (B,),
+    right-padded past `nreal` (B,). read_pages/write_pages: (B, max_pages)
+    page rows (write row has NULL_PAGE at shared-prefix pages). Returns
+    (logits, cache) where logits (B, 1, V) are taken at chunk-local index
+    `last_idx` (B,) — only meaningful on the final chunk of a prompt, where
+    the server points it at the prompt's last token to sample the first
+    output (garbage otherwise, ignored by the caller).
+
+    Byte-exactness: each chunk writes exactly the KV bytes whole-prompt
+    `prefill` would (see attention.attn_prefill_chunk), and the final chunk's
+    last-row hidden state is bit-identical to whole-prompt `last_pos` gather,
+    so the sampled first token matches the sequential oracle.
+    """
+    kw = dict(read_pages=read_pages, write_pages=write_pages, nreal=nreal)
+    x, new_cache = _chunk_stack(params, cache, tokens, pos0, sp, ctx, kw)
     idx = jnp.asarray(last_idx, jnp.int32).reshape(-1, 1, 1)
     x_last = jnp.take_along_axis(x, idx, axis=1)
     logits = _logits(params, x_last, sp, ctx)
+    return logits, new_cache
+
+
+def decode_verify(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx, *,
+                  read_pages, write_pages, nreal):
+    """Full-precision multi-token VERIFY step for self-speculative decoding.
+
+    tokens: (B, K) — row b is [last accepted token, draft_0, .., draft_{K-2}]
+    at absolute positions pos0[b] .. pos0[b]+K-1, right-padded past nreal[b]
+    (slots verifying fewer than K tokens this tick). Same chunk algebra as
+    `prefill_chunk` — causal attention over prior pool KV plus the chunk's
+    own prefix, KV scattered through `write_pages` — but logits are returned
+    for EVERY chunk row (B, K, V): row i is the exact next-token distribution
+    after consuming tokens[:, :i+1], i.e. what sequential `decode_step` would
+    produce at position pos0+i. The server samples each row with the same
+    stateless (seed, index) rng as sequential decode and accepts the longest
+    draft prefix that matches — so speculative serving stays token-exact.
+
+    KV written for rows past the accepted prefix is garbage from rejected
+    draft inputs; it is harmless because every future decode write lands at
+    the slot's (rewound) position before any read reaches it, and the
+    scheduler forks shared pages across the whole [pos0, pos0+K) write range
+    before dispatch (see launch/serve.py `_spec_tick`).
+    """
+    kw = dict(read_pages=read_pages, write_pages=write_pages, nreal=nreal)
+    x, new_cache = _chunk_stack(params, cache, tokens, pos0, sp, ctx, kw)
+    logits = _logits(params, x, sp, ctx)
     return logits, new_cache
 
 

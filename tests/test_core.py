@@ -89,6 +89,66 @@ def test_pack_rejects_bad_k():
         pack.pack_bits(jnp.zeros((4, 33), jnp.uint8))
 
 
+def _rand_codes(rng, bits, shape):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return rng.integers(lo, hi + 1, size=shape).astype(np.int8)
+
+
+@given(st.sampled_from([4, 8]), st.integers(1, 5).map(lambda i: i * 32),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=24, deadline=None)
+def test_pack_planes_roundtrip_and_truncation_floor(bits, k, seed):
+    """Property (bit-plane weight cells): a full plane stack reproduces the
+    two's-complement codes EXACTLY — negative extremes included, odd word
+    counts included — and slicing to the P leading MSB planes with UNCHANGED
+    coefficients is the floor truncation floor(c / 2^(b-P)) * 2^(b-P), which
+    is what the self-speculative draft contracts to."""
+    rng = np.random.default_rng(seed)
+    codes = _rand_codes(rng, bits, (6, k))
+    codes[0, 0] = -(1 << (bits - 1))        # sign plane carries -2^(b-1)
+    codes[0, 1] = (1 << (bits - 1)) - 1
+    planes = pack.pack_planes(jnp.asarray(codes), bits)
+    assert planes.shape == (bits, 6, k // pack.WORD)
+    assert planes.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(pack.unpack_planes_i8(planes, k, bits)), codes)
+    for keep in range(1, bits + 1):
+        trunc = np.asarray(pack.unpack_planes_i8(planes[:keep], k, bits))
+        want = (codes.astype(np.int32) >> (bits - keep)) << (bits - keep)
+        np.testing.assert_array_equal(trunc.astype(np.int32), want,
+                                      err_msg=f"keep={keep}")
+
+
+def test_pack_planes_expert_axis_and_coeffs():
+    """Leading (expert) dims stack the plane axis at -3; the MSB-first
+    coefficient tuple is static python ints (jit-safe truncation)."""
+    rng = np.random.default_rng(3)
+    codes = _rand_codes(rng, 4, (2, 5, 64))
+    planes = pack.pack_planes(jnp.asarray(codes), 4)
+    assert planes.shape == (2, 4, 5, 2)
+    np.testing.assert_array_equal(
+        np.asarray(pack.unpack_planes_i8(planes, 64, 4)), codes)
+    assert pack.plane_coeffs(4) == (-8, 4, 2, 1)
+    assert pack.plane_coeffs(8)[0] == -128
+    assert sum(pack.plane_coeffs(8)[1:]) == 127
+    for bad in (1, 9):
+        with pytest.raises(ValueError):
+            pack.plane_coeffs(bad)
+
+
+def test_pack_planes_k_quantum_and_shardability():
+    """w_planes packs 32 K-operands per word (K_QUANTUM) and follows the
+    same whole-word TP-shardability predicate as every bit-plane format;
+    non-multiple-of-32 K and vector inputs are rejected."""
+    assert pack.K_QUANTUM["w_planes"] == pack.WORD
+    assert pack.shardable_words(96 // pack.WORD, 3)
+    assert not pack.shardable_words(96 // pack.WORD, 2)
+    with pytest.raises(ValueError):
+        pack.pack_planes(jnp.zeros((4, 33), jnp.int8), 4)
+    with pytest.raises(ValueError):
+        pack.pack_planes(jnp.zeros((64,), jnp.int8), 4)
+
+
 @given(st.integers(0, 2**31 - 1), st.integers(1, 3).map(lambda i: i * 32))
 @settings(max_examples=20, deadline=None)
 def test_binary_dot_matches_float(seed, k):

@@ -230,6 +230,42 @@ def test_all_cells_match_dequant_oracle(wprec, aprec, impl):
                                   err_msg=str((wprec, aprec, impl)))
 
 
+@settings(max_examples=16, deadline=None)
+@given(st.sampled_from([("int4", "int8"), ("int8", "int8")]),
+       st.integers(1, 8), st.sampled_from(["jnp", "pallas"]),
+       st.integers(0, 5))
+def test_plane_truncation_matches_snapped_code_oracle(pair, keep, backend,
+                                                      seed):
+    """OperatingPoint.planes truncation (the self-speculative draft's
+    contract): running a plane cell on its P leading MSB planes with the
+    ORIGINAL coefficients is bit-identical to the full fp32 oracle over
+    floor-snapped codes floor(c / 2^(b-P)) * 2^(b-P) — and the full-depth
+    stack is bit-identical to the formulation-agnostic direct cell."""
+    wprec, aprec = pair
+    bits = pack.PLANE_BITS[wprec]
+    keep = min(keep, bits)
+    spec = _spec(wprec, aprec)
+    p = _packed(spec, seed=seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 11),
+                          (4, spec.in_dim)) * 0.2
+    op = dataclasses.replace(_op(spec, "planes", backend), planes=keep)
+    y = dispatch.qgemm(p, x, spec, op)
+    codes = np.asarray(pack.unpack_planes_i8(
+        p["w_planes"], spec.in_dim, bits)).astype(np.int32)
+    snapped = (codes >> (bits - keep)) << (bits - keep)      # (N, K) floor
+    xq, asc = _quant_codes_x(p, x, spec)
+    want = (xq @ jnp.asarray(snapped, jnp.float32).T
+            ).astype(jnp.float32) * p["w_scale"][None, :] * asc[:, None]
+    np.testing.assert_array_equal(
+        np.asarray(y, np.float32),
+        np.asarray(want.astype(jnp.bfloat16), np.float32),
+        err_msg=str((pair, keep, backend, seed)))
+    if keep == bits:
+        direct = dispatch.qgemm(p, x, spec, _op(spec, "popcount", backend))
+        np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                      np.asarray(direct, np.float32))
+
+
 # ---------------------------------------------------------------------------
 # 3. registry completeness — regenerated from the POLICIES table
 # ---------------------------------------------------------------------------
@@ -345,6 +381,40 @@ def test_tune_table_roundtrip(tmp_path):
     assert back.tile_for(OperatingPoint("none", "none")) is None
     with open(path) as f:
         assert set(json.load(f)) == {"source", "cells"}
+
+
+def test_exact_key_beats_wildcard_regardless_of_order(tmp_path):
+    """Precedence pin: an exact (wprec, aprec, impl) row wins over the
+    (wprec, aprec, '*') wildcard in BOTH lookup() and TuneTable.tile_for,
+    independent of JSON/registration order. The plane-composed cells coexist
+    with the formulation-agnostic int4/int8 wildcard cell exactly because of
+    this rule — a regression here silently reroutes --impl planes to the
+    dense-code cell."""
+    # registry side: the exact planes cell resolves, other impls hit '*'
+    planes = dispatch.lookup("int4", "int8", "planes")
+    assert planes.key == ("int4", "int8", "planes")
+    assert "w_planes" in planes.weight_names
+    assert dispatch.lookup("int4", "int8", "mxu").key == ("int4", "int8", "*")
+    assert dispatch.lookup("int8", "int8", "planes").key == \
+        ("int8", "int8", "planes")
+    # tune-table side: exact-over-wildcard for either insertion order
+    rows = {"int4/int8/*": {"bm": 128, "bn": 128, "bkq": 64},
+            "int4/int8/planes": {"bm": 32, "bn": 32, "bkq": 8}}
+    for name, order in (("wild_first", list(rows)),
+                        ("exact_first", list(rows)[::-1])):
+        path = str(tmp_path / f"{name}.json")
+        with open(path, "w") as f:
+            json.dump({"source": name,
+                       "cells": {k: rows[k] for k in order}}, f)
+        tune = TuneTable.load(path)
+        assert tune.tile_for(OperatingPoint("int4", "int8", "planes")) == \
+            Tile(32, 32, 8), name
+        assert tune.tile_for(OperatingPoint("int4", "int8", "popcount")) == \
+            Tile(128, 128, 64), name
+    # the shipped table pins the plane cells explicitly
+    shipped = dispatch.default_tune()
+    for key in (("int4", "int8", "planes"), ("int8", "int8", "planes")):
+        assert key in shipped.tiles, key
 
 
 def test_shipped_tune_table_keys_are_registered():

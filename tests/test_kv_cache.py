@@ -203,11 +203,14 @@ def _keys_for(pid: int, n: int, page_size: int) -> list:
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_shared_cow_swap_traces_maintain_invariants(seed):
-    """Random traces over the FULL action set — shared admit, extend, CoW
-    fork, swap out/in, retire — keep every allocator invariant: refcounts
-    mirror the table, a page is freed iff its refcount hits zero, forks are
-    private and unindexed, decode growth is never shared, swapped-in pages
-    are fresh, and the share index never points at a free page."""
+    """Random traces over the FULL action set — shared admit (sometimes with
+    deferred indexing + progressive `index_pages`, the chunked-prefill
+    protocol), extend, CoW fork, swap out/in, retire — keep every allocator
+    invariant: refcounts mirror the table, a page is freed iff its refcount
+    hits zero, forks are private and unindexed, decode growth is never
+    shared, swapped-in pages are fresh, deferred pages stay unindexed until
+    their bytes are declared written, and the share index never points at a
+    free page."""
     rng = random.Random(seed)
     page_size = rng.choice([1, 2, 4])
     slots = rng.randint(2, 5)
@@ -217,6 +220,7 @@ def test_shared_cow_swap_traces_maintain_invariants(seed):
     cap = max_pages * page_size
     model: dict[int, int] = {}
     swapped: list[int] = []         # token counts of swapped-out requests
+    pending: dict[int, tuple] = {}  # slot -> (keys, n, covered) deferred
 
     for _ in range(80):
         s = rng.randrange(slots)
@@ -226,17 +230,40 @@ def test_shared_cow_swap_traces_maintain_invariants(seed):
             keys = _keys_for(rng.randrange(3), n, page_size)
             hits = pt.lookup_keys(keys)
             misses = sum(1 for h in hits if h is None)
+            defer = rng.random() < 0.5
             if pt.free_pages >= misses:
-                ids, shared = pt.admit_shared(s, n, keys)
+                ids, shared = pt.admit_shared(s, n, keys, defer_index=defer)
                 assert len(ids) == pages_for(n, page_size)
                 assert int(shared.sum()) == len(hits) - misses
                 for i, h in enumerate(hits):
                     if h is not None:      # every hit really aliased
                         assert int(ids[i]) == h and shared[i]
+                    elif defer:            # misses unindexed until bytes land
+                        assert int(ids[i]) not in pt._page_key
+                if defer and misses:
+                    fresh = {int(ids[i]) for i, h in enumerate(hits)
+                             if h is None}
+                    pending[s] = (keys, n, 0, fresh)
                 model[s] = n
             else:
                 with pytest.raises(RuntimeError):
-                    pt.admit_shared(s, n, keys)
+                    pt.admit_shared(s, n, keys, defer_index=defer)
+        elif pt.active[s] and s in pending and op < 0.5:
+            # a prefill chunk landed: register the now-written leading pages
+            keys, n, covered, fresh = pending[s]
+            covered = min(n, covered + rng.randint(1, n))
+            pt.index_pages(s, keys, covered)
+            for i, key in enumerate(keys):
+                pid = int(pt.table[s, i])
+                # freshly-allocated pages whose bytes are not yet declared
+                # written must stay out of the share index (a hit would hand
+                # a co-owner garbage KV); hits were indexed all along
+                if key[0] > covered and pid in fresh:
+                    assert pid not in pt._page_key
+            if covered >= n:
+                pending.pop(s)
+            else:
+                pending[s] = (keys, n, covered, fresh)
         elif not pt.active[s] and swapped and op < 0.5:
             n = swapped[-1]
             if pt.can_admit(n):
@@ -286,12 +313,61 @@ def test_shared_cow_swap_traces_maintain_invariants(seed):
             # freed exactly the pages whose refcount hit zero
             assert set(freed) == {p for p in held if pt.refcount[p] == 0}
             swapped.append(model.pop(s))
+            pending.pop(s, None)
         elif pt.active[s]:
             held = [int(p) for p in pt.slot_pages(s)]
             freed = pt.retire(s)
             assert set(freed) == {p for p in held if pt.refcount[p] == 0}
             model.pop(s)
+            pending.pop(s, None)
         _check_invariants(pt, model)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fork_debt_formula_matches_realized_forks(seed):
+    """The server's admission reservation (`Server._fork_debt`) prices CoW
+    exposure per PHYSICAL page as min(#writers, refcount - 1): of the
+    writers poised to dirty a shared page, the first rc-1 must fork (each
+    fork drops one reference) and the last finds itself sole owner and
+    writes in place. Property: that closed-form count equals the number of
+    forks actually realized when every slot performs its pending write, in
+    ANY order — so admission can reserve exactly, without double-counting
+    aliased writers (the PR 8 `can_admit` fix)."""
+    rng = random.Random(seed)
+    page_size = rng.choice([1, 2, 4])
+    slots = rng.randint(2, 6)
+    max_pages = rng.randint(1, 4)
+    # pool sized so admits and every predicted fork always fit
+    num_pages = slots * (max_pages + 1) + 2
+    pt = PageTable(num_pages, page_size, slots, max_pages)
+    cap = max_pages * page_size
+    model: dict[int, int] = {}
+    for s in range(slots):
+        n = rng.randint(1, cap)
+        # two "prompt streams" only: heavy aliasing across slots
+        pt.admit_shared(s, n, _keys_for(rng.randrange(2), n, page_size))
+        model[s] = n
+    # each slot is about to write one covered position (a decode write into
+    # its current page, or a CoW-guarded rewrite) — possibly aliasing
+    pos = {s: rng.randrange(model[s]) for s in model}
+    writers: dict[int, int] = {}
+    for s, p in pos.items():
+        pid = int(pt.table[s, p // page_size])
+        writers[pid] = writers.get(pid, 0) + 1
+    predicted = sum(min(w, int(pt.refcount[pid]) - 1)
+                    for pid, w in writers.items())
+    # realize the writes in a random order and count actual forks
+    order = list(pos)
+    rng.shuffle(order)
+    forks = 0
+    for s in order:
+        assert pt.cow_pending(s, pos[s]) == \
+            (int(pt.refcount[int(pt.table[s, pos[s] // page_size])]) > 1)
+        if pt.fork_cow(s, pos[s]) is not None:
+            forks += 1
+    assert forks == predicted
+    _check_invariants(pt, model)
 
 
 def test_prefix_keys_exact_coverage_contract():

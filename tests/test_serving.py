@@ -35,7 +35,7 @@ def _built(policy: str):
     cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(), policy=policy)
     sp = transformer.build_specs(cfg)
     params = transformer.init(jax.random.PRNGKey(0), cfg)
-    sparams = transformer.pack_for_serve(params, cfg)
+    sparams = transformer.pack_for_serve(params, cfg, plane_twins=True)
     return cfg, sp, sparams
 
 
@@ -450,3 +450,131 @@ def test_jit_counters_are_signature_exact():
     srv.run()
     assert srv.compile_counts["prefill"] == before["prefill"] + 1
     assert srv.compile_counts["decode"] == before["decode"]
+
+
+# -- self-speculative decoding + EOS truncation (PR 8) ------------------------
+
+
+def test_retire_truncates_mid_batch_eos():
+    """Regression for the `out[-1] == eos` retire test: a multi-token accept
+    can land tokens PAST the stop token in one tick. _retire must truncate
+    req.out at the FIRST EOS and retire the slot that same tick (pages
+    freed), never letting post-EOS tokens survive or the slot keep
+    decoding."""
+    cfg, _, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompt = _prompts(cfg, lens=(5,), seed=31)[0]
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, ctx=ctx)
+    req = Request(0, prompt, 8)
+    srv.submit(req)
+    srv.step()                       # admitted + first tokens sampled
+    s = srv.slot_req.index(req)
+    eos = int(max(req.out)) + 1      # a token the request never sampled
+    req.eos = eos
+    # simulate a speculative tick that emitted [x, EOS, y, z] at once
+    head = list(req.out)
+    req.out.extend([eos, 7, 9])
+    srv.slot_pos[s] += 3
+    srv._retire()
+    assert req.done
+    assert req.out == head + [eos], req.out
+    assert srv.pt.held[s] == 0, "pages not freed on mid-batch EOS retire"
+
+
+@pytest.mark.parametrize("policy", ["binary", "ternary", "int8", "w4a8"])
+def test_spec_serving_matches_sequential(policy):
+    """Self-speculative decoding (sign-plane draft, full-precision verify)
+    is TOKEN-EXACT vs the sequential greedy oracle for every policy class —
+    plane-composed draft cells where they exist (w4a8), per-layer popcount
+    fallback elsewhere — with exactly one draft and one verify signature."""
+    cfg, sp, sparams = _built(policy)
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompts = _prompts(cfg)
+    want = [_greedy_reference(cfg, sp, sparams, ctx, p, MAX_NEW)
+            for p in prompts]
+    srv = _serve(cfg, sparams, ctx, prompts, paged=True,
+                 spec_draft="planes:1", spec_k=3)
+    got = {r.rid: r.out for r in srv.completed}
+    for i, w in enumerate(want):
+        assert got[i] == w, (policy, i, got[i], w)
+    assert srv.stats["spec_ticks"] > 0
+    assert srv.compile_counts["draft"] == 1, srv.compile_counts
+    assert srv.compile_counts["verify"] == 1, srv.compile_counts
+    assert srv.pt.free_pages == srv.pt.usable_pages
+
+
+def test_spec_serving_with_prefix_share_and_preempt():
+    """Speculation composes with the full scheduler: prefix-shared prompts
+    (CoW forks must cover the whole lookahead write range) and a pool tight
+    enough to preempt mid-decode — still token-exact, and the swap images
+    survive coverage extended past the decode position (the _preempt trim).
+    Request 1 duplicates request 0 exactly, so the co-running pair shares
+    its boundary page and must fork before draft/verify scribble in it."""
+    cfg, sp, sparams = _built("w4a8")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    rng = np.random.default_rng(41)
+    prefix = rng.integers(0, cfg.vocab, size=(PAGE_SIZE,)).astype(np.int32)
+    mk = lambda n: np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)])
+    p0 = mk(5)
+    prompts = [p0, p0.copy(), mk(3), mk(7)]
+    max_new = 6
+    want = [_greedy_reference(cfg, sp, sparams, ctx, p, max_new)
+            for p in prompts]
+    srv = Server(cfg, sparams, slots=3, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, num_pages=11, ctx=ctx,
+                 prefix_share=True, preempt=True,
+                 spec_draft="planes:2", spec_k=4)
+    for i, p in enumerate(prompts):
+        srv.submit(Request(i, p, max_new))
+    srv.run()
+    got = {r.rid: r.out for r in srv.completed}
+    for i, w in enumerate(want):
+        assert got[i] == w, (i, got[i], w)
+    assert srv.stats["shared_pages"] > 0, srv.stats
+    assert srv.stats["cow_forks"] > 0, srv.stats
+    assert srv.pt.free_pages == srv.pt.usable_pages
+
+
+def test_spec_serving_eos_stops_inside_window():
+    """An EOS sampled inside the speculative window retires the request with
+    its output truncated exactly where the sequential oracle stops — accepted
+    tokens past the stop token must not leak into req.out."""
+    cfg, sp, sparams = _built("ternary")
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompt = _prompts(cfg, lens=(5,), seed=17)[0]
+    max_new = 6
+    ref = _greedy_reference(cfg, sp, sparams, ctx, prompt, max_new)
+    eos_tok = ref[2]
+    k = ref.index(eos_tok)
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, ctx=ctx,
+                 spec_draft="planes:1", spec_k=4)
+    srv.submit(Request(0, prompt, max_new, eos=eos_tok))
+    srv.run()
+    assert srv.completed[0].out == ref[:k + 1], \
+        (srv.completed[0].out, ref, k)
+    assert srv.pt.free_pages == srv.pt.usable_pages
+
+
+def test_spec_falls_back_where_verify_cannot_be_exact():
+    """Archs that cannot replay a multi-token range exactly (window/recurrent
+    state) silently fall back to sequential decoding instead of serving
+    wrong tokens — and stay token-exact."""
+    cfg = dataclasses.replace(get_config("gemma3-4b").reduced(),
+                              policy="ternary", window=8)
+    sp = transformer.build_specs(cfg)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    prompt = _prompts(cfg, lens=(9,), seed=21)[0]
+    want = _greedy_reference(cfg, sp, sparams, ctx, prompt, MAX_NEW)
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, ctx=ctx,
+                 spec_draft="planes:1", spec_k=4)
+    assert not srv.spec
+    srv.submit(Request(0, prompt, MAX_NEW))
+    srv.run()
+    assert srv.completed[0].out == want
+    assert srv.stats["spec_ticks"] == 0
