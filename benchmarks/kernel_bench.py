@@ -191,6 +191,17 @@ def retune(out_path: str, reps: int = 2) -> TuneTable:
     tiles[pa.TUNE_KEY] = Tile(1, 1, best_bkp)
     print(f"  {'paged_attn/decode/*':24s} -> bkq={best_bkp} "
           f"(pages/block, {best_us:.0f}us)")
+    # carry rows the sweep didn't remeasure (e.g. a real-TPU table's wildcard
+    # entries), then prune keys no registered cell can resolve anymore —
+    # renamed impls / retired precision pairs must not ride along forever
+    import os
+    if os.path.exists(out_path):
+        for key, tile in TuneTable.load(out_path).tiles.items():
+            tiles.setdefault(key, tile)
+    tiles, dropped = dispatch.prune_stale_tiles(tiles,
+                                                extra_keys=(pa.TUNE_KEY,))
+    for key in dropped:
+        print(f"  pruned stale row {'/'.join(key)} (no registered cell)")
     table = TuneTable(
         tiles=tiles,
         source=f"kernel_bench --retune: interpret-mode CPU, m{M} k{K} n{N}, "

@@ -45,7 +45,15 @@ Scenarios:
                 excluded by a warmup workload that touches every signature
                 before the clock starts
 
-A fourth micro-scenario, `decode-attn`, drops below the scheduler and times
+  multi-tenant  two tenants (pure-attn + windowed arch, different precision
+                policies) co-scheduled on ONE shared page pool with prefix
+                sharing, preemption and the tiered (device→host→disk)
+                prefix cache, then a cold-restart pass over the same slab
+                directory — the reuse win is *prefix pages promoted from
+                the tier instead of re-prefilled* (per-tenant p50/p99
+                TTFT/ITL from the SLO counters ride along)
+
+A further micro-scenario, `decode-attn`, drops below the scheduler and times
 the decode attention READ path itself at a fixed provisioned page-table
 width while the active length sweeps 128→4096: the jitted server's gather
 path always materializes (and dequantizes) the full table width per step,
@@ -288,6 +296,85 @@ def decode_attn_rows(active_lens=(128, 512, 1024, 2048, 4096), *, slots=4,
     return rows
 
 
+def multi_tenant_rows(*, requests=3, max_new=6, cache_len=32, page_size=4,
+                      tier_dir=None):
+    """The `multi-tenant` scenario: two tenants (pure-attn llama + windowed
+    gemma, different precision policies) co-scheduled on ONE shared page
+    pool with prefix sharing, cross-tenant preemption, and the tiered
+    prefix cache — then a COLD-RESTART pass: a fresh MultiServer over the
+    same disk-slab directory serving identical traffic, measuring how many
+    prefixes it re-admits from the tier instead of re-prefilling
+    (`tier_hits`, `prefill_skips`). Per-tenant p50/p99 TTFT/ITL come from
+    the scheduler's SLO counters (ticks are the interpret-mode-stable
+    metric; wall seconds ride along). Pool occupancy is PageTable.stats()'s
+    live/usable fraction — page 0 scratch is not demand."""
+    import tempfile
+    import zlib
+
+    from repro.launch.cache_tiers import PageStore
+    from repro.launch.multi_serve import MultiServer, TenantSpec
+
+    tier_dir = tier_dir or tempfile.mkdtemp(prefix="serve-bench-tier-")
+    tenants = [
+        TenantSpec(model_id="llama#0", arch="llama3.2-3b", policy="ternary",
+                   slots=2, cache_len=cache_len, weight=2, priority=1,
+                   reduced=True),
+        TenantSpec(model_id="gemma#1", arch="gemma3-4b", policy="w-ternary",
+                   slots=2, cache_len=cache_len, weight=1, priority=0,
+                   reduced=True),
+    ]
+
+    def traffic(t, vocab):
+        # page-aligned common prefix, stable per tenant AND across phases,
+        # so the share index aliases within a phase and the restart pass
+        # probes the exact disk-tier keys the cold pass flushed
+        prng = np.random.default_rng(zlib.crc32(t.model_id.encode()))
+        head = prng.integers(0, vocab, size=(page_size,))
+        tails = np.random.default_rng(1)
+        return [np.concatenate(
+            [head, tails.integers(0, vocab, size=(3 + 2 * i,))]
+        ).astype(np.int32) for i in range(requests)]
+
+    rows = []
+    for phase in ("cold", "restart"):
+        ms = MultiServer(tenants, page_size=page_size, prefix_share=True,
+                         preempt=True,
+                         tier=PageStore(host_capacity=16, disk_dir=tier_dir))
+        for t in tenants:
+            for p in traffic(t, ms.servers[t.model_id].cfg.vocab):
+                ms.submit(t.model_id, p, max_new)
+        t0 = time.perf_counter()
+        ticks = ms.run()
+        dt = time.perf_counter() - t0
+        ms.flush_tier()
+        stt = ms.stats()
+        for t in tenants:
+            r = stt[t.model_id]
+            toks = sum(len(q.out)
+                       for q in ms.servers[t.model_id].completed)
+            rows.append(dict(
+                scenario="multi-tenant", config=f"{phase}:{t.model_id}",
+                completed=r["completed"], tok_s=toks / dt,
+                tok_per_tick=toks / max(ticks, 1),
+                ttft_p50_ticks=r["ttft_ticks_p50"],
+                ttft_p99_ticks=r["ttft_ticks_p99"],
+                itl_p50_ticks=r["itl_ticks_p50"],
+                itl_p99_ticks=r["itl_ticks_p99"],
+                ttft_p50_s=r["ttft_s_p50"], ttft_p99_s=r["ttft_s_p99"],
+                itl_p50_s=r["itl_s_p50"], itl_p99_s=r["itl_s_p99"],
+                shared_pages=r["shared_pages"],
+                preemptions=r["preemptions"],
+                tier_hits=(r["tier_hits_device"] + r["tier_hits_host"]
+                           + r["tier_hits_disk"]),
+                tier_hits_promoted=(r["tier_hits_host"]
+                                    + r["tier_hits_disk"]),
+                prefill_skips=r["prefill_skips"],
+                jit_signatures=r["jit_signatures"],
+                pool_occupancy_exit=stt["pool"]["occupancy"],
+            ))
+    return rows
+
+
 def _poisson_traffic(cfg, n, rng, cache_len, max_new, long_frac=0.25):
     """Open-loop arrival schedule: (arrival_gap_units, Request) with unit-mean
     exponential inter-arrival gaps (scaled to seconds by the caller) and a
@@ -443,12 +530,18 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--scenario", default="all",
                     choices=("all", "scheduler", "decode-attn", "poisson",
-                             "spec"),
+                             "spec", "multi-tenant"),
                     help="'scheduler' = the mixed/shared-prefix/"
                          "oversubscribed trio; 'poisson' = the open-loop "
                          "arrival-process scenario only (the CI serving-lane "
                          "smoke); 'spec' = self-speculative decoding on "
-                         "draft-friendly snapped w4a8 weights")
+                         "draft-friendly snapped w4a8 weights; "
+                         "'multi-tenant' = two archs x two policies on one "
+                         "shared pool + tiered cache, with a cold-restart "
+                         "prefix-reuse pass")
+    ap.add_argument("--tier-dir", default=None,
+                    help="disk-slab directory for the multi-tenant "
+                         "scenario's tiered cache (default: a temp dir)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="tokens proposed per tick in the spec scenario")
     ap.add_argument("--poisson-requests", type=int, default=24)
@@ -521,6 +614,29 @@ def main(argv=None):
         out.update(spec_rows=srows, spec_accept_rate=acc_rate,
                    spec_tokens_per_tick_speedup=spec_x)
         all_rows += srows
+
+    if args.scenario in ("all", "multi-tenant"):
+        mrows = multi_tenant_rows(tier_dir=args.tier_dir)
+        _print_rows(mrows, "# multi-tenant scenario (2 archs x 2 policies, "
+                           "one shared pool, tiered prefix cache; cold run "
+                           "then cold-restart reuse)")
+        restart = [r for r in mrows if r["config"].startswith("restart:")]
+        reuse_hits = sum(r["tier_hits_promoted"] for r in restart)
+        reuse_skips = sum(r["prefill_skips"] for r in restart)
+        attn = {p: next(r for r in mrows
+                        if r["config"] == f"{p}:llama#0")
+                for p in ("cold", "restart")}
+        ttft_x = (attn["cold"]["ttft_p50_ticks"]
+                  / max(attn["restart"]["ttft_p50_ticks"], 1e-9))
+        print(f"# multi-tenant restart reuse: {reuse_hits} prefix pages "
+              f"promoted from host/disk, {reuse_skips} prefills skipped "
+              f"outright; attn-tenant p50 TTFT {ttft_x:.2f}x vs cold "
+              f"(acceptance floor: >= 1 page reused without re-prefill)")
+        out.update(multi_tenant_rows=mrows,
+                   multi_tenant_restart_tier_hits=reuse_hits,
+                   multi_tenant_restart_prefill_skips=reuse_skips,
+                   multi_tenant_restart_ttft_p50_speedup=ttft_x)
+        all_rows += mrows
 
     if args.scenario in ("all", "decode-attn"):
         attn_rows = decode_attn_rows()

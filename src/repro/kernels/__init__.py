@@ -8,8 +8,8 @@ bgemm    — binary XNOR+popcount (vBMAC) + beyond-paper MXU MacBodies
 tgemm    — ternary gated-XNOR (vTMAC) + MXU + mixed w-ternary×a-int8 bodies
 i8gemm   — int8 MXU dot MacBody (8-bit vMAC)
 i4gemm   — int4 (s4 nibble) × int8 MacBody (W4A8)
-ops      — DEPRECATED compat shim over dispatch; ref — pure-jnp oracles.
+ref      — pure-jnp oracles.
 """
-from . import bgemm, dispatch, harness, i4gemm, i8gemm, ops, ref, tgemm  # noqa: F401
+from . import bgemm, dispatch, harness, i4gemm, i8gemm, ref, tgemm  # noqa: F401
 from . import flash_attn  # noqa: F401
 from .dispatch import OperatingPoint, Tile, TuneTable, qgemm  # noqa: F401

@@ -267,6 +267,29 @@ class TuneTable:
             f.write("\n")
 
 
+def valid_tune_keys(extra_keys=()) -> set:
+    """Every tune-table key the CURRENT registry can resolve: exact cell
+    keys, the `(wprec, aprec, "*")` wildcard of each registered pair (the
+    `tile_for` fallback), plus pseudo-cell keys owned by non-qgemm kernels
+    (the paged-attn decode walk passes its own via `extra_keys`)."""
+    keys = set(_REGISTRY)
+    keys |= {(w, a, "*") for (w, a, _i) in _REGISTRY}
+    keys |= set(extra_keys)
+    return keys
+
+
+def prune_stale_tiles(tiles: Mapping, extra_keys=()
+                      ) -> tuple[dict, list]:
+    """Split a tune-table tile map into (kept, dropped_keys): rows whose op
+    key no longer matches any registered cell (a renamed impl, a retired
+    precision pair) are dead data — `tile_for` can never reach them — and
+    `kernel_bench --retune` prunes them instead of carrying them forever."""
+    valid = valid_tune_keys(extra_keys)
+    kept = {k: t for k, t in tiles.items() if k in valid}
+    dropped = sorted(k for k in tiles if k not in valid)
+    return kept, dropped
+
+
 @functools.lru_cache(maxsize=1)
 def default_tune() -> TuneTable:
     if os.path.exists(DEFAULT_TUNE_PATH):

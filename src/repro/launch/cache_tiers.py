@@ -1,0 +1,356 @@
+"""Tiered prefix cache: device → host → disk retention of indexed KV pages.
+
+The base `PageTable` frees an indexed page the moment its refcount hits
+zero — a prefix computed once is gone as soon as its last owner retires, so
+a later identical prompt (or a restarted server) pays full prefill again.
+This module keeps prefix pages alive past refcount 0 across three tiers:
+
+  * **device** — `TieredPageTable` parks refcount-0 indexed pages in an LRU
+    set instead of freeing them. They stay mappable through the share index
+    (a later `admit_shared` hit re-admits them at zero cost) but are
+    reclaimable on demand: allocation evicts the LRU parked page when the
+    free list runs dry, so the tier never blocks real work. An optional
+    watermark bounds the parked set continuously.
+  * **host** — eviction demotes the page's bytes to a host-side `PageStore`
+    slab (same numpy-image mechanism as preemption swap), keyed by the
+    page's exact prefix chain. A bounded LRU, like the device tier.
+  * **disk** — host overflow (and an explicit `flush()`, e.g. at clean
+    shutdown) demotes slabs to an on-disk directory, one file per page,
+    so a *restarted* server re-admits previously seen prefixes without
+    re-prefilling.
+
+Content addressing: a page's store key is `(covered, rolling_hash, chain)`
+where `chain` is the concatenation of every ancestor key's verbatim bytes
+(namespace included) up to and including its own — the flat equivalent of
+the share index's parent-physical-page chaining, which cannot survive a
+restart (physical ids are meaningless across processes). Both the store and
+the probe compute the chain from the same `prefix_keys` material, so a hit
+proves the full token prefix (and the model namespace) matches verbatim;
+the 64-bit hash in the filename is only a prefilter.
+
+Crash consistency: a disk slab is written to a temp file and atomically
+renamed into place, and carries a CRC-32 over its payload; a torn or
+corrupted slab fails the checksum on load and is deleted and counted
+(`corrupt_dropped`) rather than served. A benign filename collision
+(checksum passes, chain differs) is a miss, not corruption.
+
+Exactness: a parked page is in no slot's table row, so no decode write can
+reach it (writes land via table rows only); its bytes stay exactly what the
+share index key promises. Demotion gathers the whole page including bytes
+past the key's coverage (a former owner's decode tail); promotion restores
+them unchanged, and readers mask validity by position exactly as they do
+for freshly shared pages — the token-exactness argument is unchanged from
+plain prefix sharing. See docs/SERVING.md §Tiered prefix cache.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import struct
+import zlib
+from collections import OrderedDict
+from pathlib import Path
+
+from repro.launch.kv_cache import NULL_PAGE, PageTable
+
+_MAGIC = b"KVS1"
+
+
+def _slab_name(key) -> str:
+    covered, h, chain = key
+    return f"{int(covered)}-{int(h):016x}-{zlib.crc32(chain):08x}.slab"
+
+
+class PageStore:
+    """Host + disk slab store for demoted prefix pages.
+
+    `put`/`get` speak store keys `(covered, rolling_hash, chain_bytes)` and
+    numpy page-image pytrees (`kv_cache.gather_pages`). The host tier is a
+    bounded LRU dict; overflow demotes the oldest entry to `disk_dir` (or
+    drops it when no disk tier is configured). `get` never promotes back
+    into the host tier — a hit's next stop is the device pool anyway.
+    """
+
+    def __init__(self, host_capacity: int = 64,
+                 disk_dir: str | os.PathLike | None = None):
+        self.host_capacity = int(host_capacity)
+        self.disk_dir = Path(disk_dir) if disk_dir is not None else None
+        if self.disk_dir is not None:
+            self.disk_dir.mkdir(parents=True, exist_ok=True)
+        self._host: OrderedDict = OrderedDict()
+        self.stats = {"host_hits": 0, "disk_hits": 0, "misses": 0,
+                      "disk_writes": 0, "dropped": 0, "corrupt_dropped": 0}
+
+    def __len__(self) -> int:
+        return len(self._host)
+
+    def put(self, key, image):
+        """Store a page image under its content key; spill LRU overflow to
+        disk. Idempotent per key (content-addressed: same key => same
+        bytes, so last-writer-wins is harmless)."""
+        self._host[key] = image
+        self._host.move_to_end(key)
+        while len(self._host) > self.host_capacity:
+            old_key, old_img = self._host.popitem(last=False)
+            self._spill(old_key, old_img)
+
+    def get(self, key):
+        """Look `key` up across tiers: returns `(image, tier)` with tier in
+        {"host", "disk"}, or `(None, None)` on a miss. A host hit stays in
+        the host tier (refreshed); a disk hit is read, verified, and left
+        on disk."""
+        img = self._host.get(key)
+        if img is not None:
+            self._host.move_to_end(key)
+            self.stats["host_hits"] += 1
+            return img, "host"
+        img = self._disk_read(key)
+        if img is not None:
+            self.stats["disk_hits"] += 1
+            return img, "disk"
+        self.stats["misses"] += 1
+        return None, None
+
+    def flush(self):
+        """Demote every host-tier slab to disk (clean-shutdown path: state
+        that should survive the process must reach the disk tier)."""
+        while self._host:
+            key, img = self._host.popitem(last=False)
+            self._spill(key, img)
+
+    # -- disk tier -------------------------------------------------------------
+
+    def _spill(self, key, image):
+        if self.disk_dir is None:
+            self.stats["dropped"] += 1
+            return
+        blob = pickle.dumps({"chain": key[2], "image": image},
+                            protocol=pickle.HIGHEST_PROTOCOL)
+        path = self.disk_dir / _slab_name(key)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            f.write(_MAGIC)
+            f.write(struct.pack("<II", zlib.crc32(blob), len(blob)))
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)       # atomic: readers see old bytes or new
+        self.stats["disk_writes"] += 1
+
+    def _disk_read(self, key):
+        if self.disk_dir is None:
+            return None
+        path = self.disk_dir / _slab_name(key)
+        try:
+            raw = path.read_bytes()
+        except OSError:
+            return None
+        ok = len(raw) >= 12 and raw[:4] == _MAGIC
+        if ok:
+            crc, n = struct.unpack("<II", raw[4:12])
+            blob = raw[12:]
+            ok = len(blob) == n and zlib.crc32(blob) == crc
+        if not ok:
+            # torn or corrupted slab (partial write survived a crash, or
+            # bit rot): drop it rather than deserialize garbage
+            path.unlink(missing_ok=True)
+            self.stats["corrupt_dropped"] += 1
+            return None
+        rec = pickle.loads(blob)
+        if rec["chain"] != key[2]:
+            return None             # benign filename collision: just a miss
+        return rec["image"]
+
+
+class TieredPageTable(PageTable):
+    """`PageTable` whose indexed pages survive refcount 0.
+
+    A released indexed page parks in a device-resident LRU (`_cached`)
+    instead of returning to the free list; it stays findable through the
+    share index, so the next identical prefix maps it for free (a
+    *device-tier hit*, counted in `tier_stats`). Allocation pressure evicts
+    parked pages LRU-first — demoting their bytes to `store` when one is
+    configured — so `free_pages` counts parked pages as available and every
+    admission-budget invariant of the base class keeps holding.
+
+    Namespaces: `_current_ns` (stamped by `SlotView` on index-writing calls,
+    or set once by a single-tenant server) records which tenant's device
+    cache pool a page's bytes live in; the matching registered demoter
+    gathers from that pool at eviction. Chains: `_page_chain[p]` accumulates
+    the verbatim key bytes root→p at registration, giving eviction the
+    page's restart-stable store key.
+
+    `adopt` is the promotion inverse: the serving layer allocates a page for
+    a store hit, registers it under the probing request's `(parent, key)`,
+    scatters the slab bytes in, and the page starts life parked at
+    refcount 0 — indistinguishable from a page whose last owner just
+    retired.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, slots: int,
+                 max_pages_per_slot: int, *, store: PageStore | None = None,
+                 watermark: int = 0):
+        super().__init__(num_pages, page_size, slots, max_pages_per_slot)
+        self.store = store
+        self.watermark = int(watermark)   # max parked pages; 0 = unbounded
+        self._cached: OrderedDict = OrderedDict()   # page -> True (LRU)
+        self._page_ns: dict[int, bytes] = {}
+        self._page_chain: dict[int, bytes] = {}
+        self._demoters: dict = {}
+        self._current_ns = b""
+        self._pinned: frozenset = frozenset()
+        self.tier_stats = {"device_hits": 0, "evictions": 0, "demotions": 0,
+                           "promotions": 0, "cached_peak": 0}
+
+    def register_demoter(self, namespace: bytes, gather_fn):
+        """`gather_fn(page_id) -> page image` for pages indexed under
+        `namespace` (each tenant's pages live in its own device cache pool,
+        so eviction must gather from the right one)."""
+        self._demoters[bytes(namespace)] = gather_fn
+
+    def is_cached(self, page: int) -> bool:
+        return page in self._cached
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self._cached)
+
+    @property
+    def free_pages(self) -> int:
+        # parked pages are reclaimable on demand (eviction below), so they
+        # count as free for every admission/extend budget check
+        return len(self._free) + len(self._cached)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["cached_pages"] = len(self._cached)
+        return out
+
+    def free_pages_for(self, keys) -> int:
+        """Effective page supply for an admission probing `keys`: parked
+        pages that the probe HITS are not supply — they will be mapped, not
+        reclaimed — so they must come off the `free_pages` optimism. The
+        serving layer's admission test uses this instead of `free_pages`
+        whenever it holds prefix keys."""
+        hits = self.lookup_keys(keys) if keys else []
+        pinned = sum(1 for p in hits if p is not None and p in self._cached)
+        return self.free_pages - pinned
+
+    # -- base-class hook overrides ---------------------------------------------
+
+    def admit_shared(self, slot: int, n_tokens: int, keys, *,
+                     defer_index: bool = False):
+        # pin the probe's parked hits for the duration: the miss allocations
+        # below may evict, and evicting a page this very admission is about
+        # to map would hand its id to the allocator mid-flight
+        hits = self.lookup_keys(keys)
+        pinned = frozenset(p for p in hits
+                           if p is not None and p in self._cached)
+        misses = sum(1 for p in hits if p is None)
+        if self.free_pages - len(pinned) < misses:
+            raise RuntimeError(
+                f"page pool exhausted: want {misses}, free "
+                f"{self.free_pages - len(pinned)} (net of parked hits)")
+        self._pinned = pinned
+        try:
+            return super().admit_shared(slot, n_tokens, keys,
+                                        defer_index=defer_index)
+        finally:
+            self._pinned = frozenset()
+
+    def _register_key(self, parent, key, page: int):
+        super()._register_key(parent, key, page)
+        self._page_ns[page] = self._current_ns
+        self._page_chain[page] = self._page_chain.get(parent, b"") + key[2]
+
+    def _drop_page(self, page: int) -> bool:
+        self.refcount[page] -= 1
+        if self.refcount[page] > 0:
+            return False
+        if page in self._page_key:
+            # indexed: park in the device tier instead of freeing
+            self._cached[page] = True
+            self._cached.move_to_end(page)
+            self.tier_stats["cached_peak"] = max(
+                self.tier_stats["cached_peak"], len(self._cached))
+            if self.watermark:
+                while len(self._cached) > self.watermark:
+                    self._evict_one()
+            return False
+        self._free.append(int(page))
+        return True
+
+    def _map_page(self, slot: int, page: int):
+        if page in self._cached:    # device-tier hit: page re-enters service
+            del self._cached[page]
+            self.tier_stats["device_hits"] += 1
+        super()._map_page(slot, page)
+
+    def _release(self, slot: int):
+        # park child pages before their parents (reverse table order) so LRU
+        # eviction takes leaves first and the surviving parked chain stays
+        # reachable through the share index as long as possible
+        freed = [int(p) for p in self.table[slot, : self.held[slot]][::-1]
+                 if self._drop_page(p)]
+        self.table[slot] = NULL_PAGE
+        self.held[slot] = 0
+        self.tokens[slot] = 0
+        self.active[slot] = False
+        return freed
+
+    def _take_page(self) -> int:
+        if not self._free and self._cached:
+            self._evict_one()
+        return super()._take_page()
+
+    def _alloc(self, slot: int, n_pages: int):
+        while len(self._free) < n_pages and self._cached:
+            self._evict_one()
+        return super()._alloc(slot, n_pages)
+
+    # -- tier transitions ------------------------------------------------------
+
+    def _evict_one(self):
+        """Evict the LRU parked page: demote its bytes to the store (when
+        both a store and this namespace's demoter exist), drop its share-
+        index entry, and return the physical page to the free list."""
+        page = next((p for p in self._cached if p not in self._pinned), None)
+        if page is None:
+            raise RuntimeError("page pool exhausted: every parked page is "
+                               "pinned by an in-flight admission")
+        del self._cached[page]
+        ns = self._page_ns.pop(page, b"")
+        chain = self._page_chain.pop(page, None)
+        pk = self._page_key.pop(page, None)
+        if pk is not None:
+            self._index.pop(pk, None)
+            gather = self._demoters.get(ns)
+            if self.store is not None and gather is not None and chain is not None:
+                covered, h = pk[1][0], pk[1][1]
+                self.store.put((covered, h, chain), gather(page))
+                self.tier_stats["demotions"] += 1
+        self.refcount[page] = 0
+        self._free.append(int(page))
+        self.tier_stats["evictions"] += 1
+
+    def adopt(self, parent, key, chain: bytes, namespace: bytes = b"") -> int:
+        """Materialize a store hit: allocate a page, register it under
+        `(parent, key)` with the given chain/namespace, and park it at
+        refcount 0. The caller must scatter the slab bytes into the page
+        BEFORE anything can map it (single-threaded serving: the admission
+        that probed the store does both back-to-back)."""
+        self._current_ns = bytes(namespace)
+        page = self._take_page()
+        self.refcount[page] = 0
+        self._register_key(parent, key, page)
+        self._cached[page] = True
+        self.tier_stats["promotions"] += 1
+        self.tier_stats["cached_peak"] = max(
+            self.tier_stats["cached_peak"], len(self._cached))
+        return page
+
+    def flush_cached(self):
+        """Demote every parked page to the store (pairs with
+        `PageStore.flush` at clean shutdown)."""
+        while self._cached:
+            self._evict_one()

@@ -70,7 +70,8 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-int(n_tokens) // page_size)
 
 
-def prefix_keys(tokens, page_size: int) -> list[tuple[int, int, bytes]]:
+def prefix_keys(tokens, page_size: int, *,
+                namespace: bytes = b"") -> list[tuple[int, int, bytes]]:
     """Content keys for prefix sharing, one per page.
 
     Key for page i is `(covered, fnv64(prefix), own_page_bytes)` with
@@ -90,15 +91,24 @@ def prefix_keys(tokens, page_size: int) -> list[tuple[int, int, bytes]]:
     different prompts can never alias one request's KV pages into another's.
     Total key material per prompt is O(n) and the chain hash is just a fast
     prefilter that makes unequal tuples fail comparison early.
+
+    `namespace` (multi-tenant serving): a model-id byte string absorbed into
+    the rolling-hash root AND prepended to every key's verbatim bytes. KV is
+    a function of (weights, tokens), so two models must never alias a page
+    even for identical token streams — namespacing makes their key spaces
+    disjoint at both the hash prefilter and the exact-bytes comparison.
     """
     keys: list[tuple[int, int, bytes]] = []
     h = _FNV_OFFSET
+    for b in bytes(namespace):
+        h = ((h ^ b) * _FNV_PRIME) & _MASK64
     toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
     for i in range(toks.shape[0]):
         h = ((h ^ (int(toks[i]) & _MASK64)) * _FNV_PRIME) & _MASK64
         if (i + 1) % page_size == 0 or i + 1 == toks.shape[0]:
             start = (i // page_size) * page_size
-            keys.append((i + 1, h, toks[start: i + 1].tobytes()))
+            keys.append((i + 1, h,
+                         bytes(namespace) + toks[start: i + 1].tobytes()))
     return keys
 
 
@@ -142,6 +152,19 @@ class PageTable:
     @property
     def usable_pages(self) -> int:
         return self.num_pages - 1
+
+    def stats(self) -> dict:
+        """Pool occupancy over *usable* pages: page 0 is reserved scratch
+        (never allocatable) and inert phys-slot padding rows never map pages,
+        so neither is real demand — `occupancy` is live/(num_pages-1), which
+        is what a utilization column should report (the raw num_pages
+        denominator understated pressure by the scratch page and the old
+        peak-vs-num_pages bench column overstated headroom)."""
+        usable = self.usable_pages
+        live = usable - self.free_pages
+        return {"usable_pages": usable, "free_pages": self.free_pages,
+                "live_pages": live,
+                "occupancy": live / usable if usable else 0.0}
 
     def can_admit(self, n_tokens: int, *, reclaimable: int = 0) -> bool:
         """Whether n_tokens' pages fit the free list. `reclaimable` counts
@@ -218,6 +241,14 @@ class PageTable:
         self.held[slot] = h + 1
         self.refcount[page] += 1
 
+    def _register_key(self, parent, key, page: int):
+        """Register `page` in the share index under `(parent, key)`. The
+        single write point for index entries — cache_tiers.TieredPageTable
+        overrides it to record the page's namespace and verbatim prefix
+        chain (its content address in the host/disk tiers)."""
+        self._index[(parent, key)] = page
+        self._page_key[page] = (parent, key)
+
     def _drop_page(self, page: int) -> bool:
         """Drop one reference; free the page iff the count hits zero (and
         evict its share-index entry — a free page must never be findable)."""
@@ -287,8 +318,7 @@ class PageTable:
             else:
                 (page,) = self._alloc(slot, 1)
                 if not defer_index:
-                    self._index[(parent, key)] = page
-                    self._page_key[page] = (parent, key)
+                    self._register_key(parent, key, page)
                 parent = page
         self.tokens[slot] = n_tokens
         return self.slot_pages(slot), shared
@@ -320,8 +350,7 @@ class PageTable:
             if have is None:
                 if (parent, key) in self._index:
                     break                      # lost the race: stay private
-                self._index[(parent, key)] = page
-                self._page_key[page] = (parent, key)
+                self._register_key(parent, key, page)
             parent = page
 
     def extend(self, slot: int, n_tokens: int) -> list[int]:
@@ -394,6 +423,86 @@ class PageTable:
         them). Swapped-in pages are not re-registered in the share index —
         the request's decode tail has already diverged from any prefix key."""
         return self.admit(slot, n_tokens)
+
+    def view(self, base: int, slots: int, namespace: bytes = b"") -> "SlotView":
+        """A slot-window view for multi-tenant serving: slots
+        [base, base+slots) re-addressed from 0, sharing this table's page
+        pool, refcounts and share index. See `SlotView`."""
+        return SlotView(self, base, slots, namespace)
+
+
+class SlotView:
+    """One tenant's window onto a shared `PageTable`.
+
+    The multi-tenant server gives every tenant `Server` a contiguous slot
+    range of ONE PageTable; the view re-addresses those slots from 0 so the
+    per-tenant scheduler code runs unchanged, while the free list, refcounts
+    and the prefix-share index stay global — that is the whole point: all
+    tenants allocate from (and index into) the same pool. `table`/`held`/
+    `tokens`/`active` are numpy basic slices of the parent arrays (views,
+    not copies), so parent-side mutations are visible through the view and
+    vice versa. Index-writing calls stamp the parent's current namespace
+    first, so a tiered table records which tenant's cache pool each indexed
+    page's bytes live in (the demotion gather needs the right pool).
+    """
+
+    def __init__(self, pt: PageTable, base: int, slots: int,
+                 namespace: bytes = b""):
+        if base < 0 or base + slots > pt.slots:
+            raise ValueError(f"view [{base}, {base + slots}) outside "
+                             f"{pt.slots} slots")
+        self._pt = pt
+        self._base = int(base)
+        self.slots = int(slots)
+        self.namespace = bytes(namespace)
+        sl = slice(self._base, self._base + self.slots)
+        self.table = pt.table[sl]
+        self.held = pt.held[sl]
+        self.tokens = pt.tokens[sl]
+        self.active = pt.active[sl]
+
+    def __getattr__(self, name):
+        # global (non-slot-indexed) state delegates untranslated: free_pages,
+        # refcount, num_pages, page_size, max_pages, lookup_keys, can_admit,
+        # stats, and the tier surface (store, adopt, tier_stats, ...)
+        return getattr(self._pt, name)
+
+    def _stamp_ns(self):
+        self._pt._current_ns = self.namespace
+
+    def slot_pages(self, slot):
+        return self._pt.slot_pages(self._base + slot)
+
+    def cow_pending(self, slot, token_pos, extra_shared=frozenset()):
+        return self._pt.cow_pending(self._base + slot, token_pos,
+                                    extra_shared)
+
+    def admit(self, slot, n_tokens):
+        return self._pt.admit(self._base + slot, n_tokens)
+
+    def admit_shared(self, slot, n_tokens, keys, *, defer_index=False):
+        self._stamp_ns()
+        return self._pt.admit_shared(self._base + slot, n_tokens, keys,
+                                     defer_index=defer_index)
+
+    def index_pages(self, slot, keys, covered):
+        self._stamp_ns()
+        return self._pt.index_pages(self._base + slot, keys, covered)
+
+    def extend(self, slot, n_tokens):
+        return self._pt.extend(self._base + slot, n_tokens)
+
+    def fork_cow(self, slot, token_pos):
+        return self._pt.fork_cow(self._base + slot, token_pos)
+
+    def retire(self, slot):
+        return self._pt.retire(self._base + slot)
+
+    def swap_out(self, slot):
+        return self._pt.swap_out(self._base + slot)
+
+    def swap_in(self, slot, n_tokens):
+        return self._pt.swap_in(self._base + slot, n_tokens)
 
 
 # ---------------------------------------------------------------------------
@@ -488,6 +597,40 @@ def swap_out_slot(cache, slot: int, page_ids, paged_mask):
         return np.asarray(leaf[:, slot] if _is_mid(path) else leaf[slot])
 
     return jax.tree_util.tree_map_with_path(grab, cache, paged_mask)
+
+
+def gather_pages(cache, page_ids, paged_mask):
+    """Gather the bytes of specific physical pages into a host numpy pytree
+    (paged leaves only — slab leaves come back as zero-size placeholders; a
+    page is pure pool state, it has no per-slot rows). The cache-tier
+    demotion path: a refcount-0 indexed page's bytes leave the device pool
+    through here before the page id is reused. Inverse: `scatter_pages`."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def grab(path, leaf, is_paged):
+        if not is_paged:
+            return np.zeros(0, np.int8)
+        return np.asarray(leaf[:, ids] if _is_mid(path) else leaf[ids])
+
+    return jax.tree_util.tree_map_with_path(grab, cache, paged_mask)
+
+
+def scatter_pages(cache, saved, page_ids, paged_mask):
+    """Scatter a `gather_pages` image back into specific physical pages (the
+    cache-tier promotion path: a host/disk slab re-materializes into a
+    freshly allocated page). Slab leaves (zero-size placeholders in the
+    saved tree) pass through untouched."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def put(path, leaf, sv, is_paged):
+        if not is_paged:
+            return leaf
+        body = jnp.asarray(sv, leaf.dtype)
+        if _is_mid(path):
+            return leaf.at[:, ids].set(body)
+        return leaf.at[ids].set(body)
+
+    return jax.tree_util.tree_map_with_path(put, cache, saved, paged_mask)
 
 
 def swap_in_slot(cache, saved, slot: int, page_ids, paged_mask):

@@ -1,0 +1,437 @@
+"""Multi-tenant, multi-arch serving over ONE shared page pool.
+
+    PYTHONPATH=src python -m repro.launch.multi_serve --reduced \
+        --tenant llama3.2-3b,ternary --tenant gemma3-4b,w-ternary \
+        --prefix-share --preempt --requests 8 --jit-budget 12
+
+BrainTTA's thesis is one flexible substrate serving heterogeneous networks
+instead of N fixed engines; this is the serving-layer analogue. Each tenant
+is a registry entry — (arch config, precision policy, operating point) —
+with its OWN packed weight set, its own device cache pool, and its own
+jitted step functions (prefill/chunk/decode signatures stay per-model, so
+the `--jit-budget` discipline holds per entry). What is SHARED is the page
+allocator: one `PageTable` (or `TieredPageTable`) whose slot rows are
+carved into per-tenant windows (`kv_cache.SlotView`), so every tenant's
+pages come out of one physical budget, compete under one preemption/swap
+scheduler, and live in one prefix-share index — with prefix keys namespaced
+by model id (hash root + verbatim bytes, `kv_cache.prefix_keys`), so two
+models can never alias a page even on identical token streams.
+
+Scheduling:
+  * **weighted round-robin admission** — each tick rotates which tenant
+    steps (and therefore admits) first through a weight-expanded cycle, so
+    under page contention a weight-2 tenant gets first claim on free pages
+    twice as often as a weight-1 tenant. No tenant is ever skipped in a
+    tick; the rotation orders claims, it does not gate them.
+  * **priority classes** — a tenant's `priority` becomes the default
+    `Request.priority` of its traffic, and `Server`'s existing preemption
+    scheduler consumes it; cross-tenant reclaim (`Server.reclaim_hook`)
+    lets a starved higher-priority tenant preempt a strictly-lower-priority
+    co-tenant's slot, swap image and all. Request ids are globally unique
+    so the (priority desc, rid asc) order is coherent across tenants.
+  * **conservative co-reservation** — without `--preempt`, each tenant's
+    lifetime-reservation admission also subtracts every CO-tenant's
+    outstanding page demand (`Server.extern_demand`), preserving the
+    "extend can never fail mid-flight" invariant on the shared pool.
+  * **per-tenant SLO counters** — submitted/admitted/preempted/dropped plus
+    TTFT/ITL percentiles (ticks and wall seconds), surfaced through each
+    tenant's `Server.stats` and aggregated by `MultiServer.stats()`.
+
+Token-exactness: every tenant's output is token-exact vs its own
+single-model sequential oracle while co-scheduled (tests/test_multi_serve).
+The shared table is only an allocator — pages of different tenants never
+alias (namespaced keys), a tenant's masked decode table contains only its
+own rows, and each tenant's KV bytes live in its own device pool.
+
+Tiering (`--tier-dir`): the shared table becomes a `TieredPageTable`; any
+tenant's retired prefixes park on device, demote to host/disk, and are
+re-admitted — across tenants' lifetimes and across process restarts —
+without re-prefilling (see launch/cache_tiers.py, docs/SERVING.md).
+
+Not supported here: `--mesh` tensor parallelism (single-tenant `serve.py`
+keeps it; multi-tenant TP would need per-tenant meshes over one device set)
+and `--spec-draft` (per-tenant speculative serving composes, but is out of
+scope for the multi-tenant driver).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+import zlib
+
+import numpy as np
+
+from repro.launch.cache_tiers import PageStore, TieredPageTable
+from repro.launch.kv_cache import PageTable
+from repro.launch.serve import Request, Server
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One registry entry of the multi-tenant server."""
+    model_id: str                  # unique name; becomes the key namespace
+    arch: str                      # configs.get_config name
+    policy: str | None = None      # precision policy override
+    backend: str = "jnp"
+    impl: str = "popcount"
+    slots: int = 2                 # decode-batch slots in the shared table
+    cache_len: int = 64            # per-slot KV budget (tokens)
+    weight: int = 1                # weighted-round-robin admission weight
+    priority: int = 0              # priority class -> Request.priority default
+    max_queue: int | None = None   # admission-queue cap; beyond it: dropped
+    chunk_tokens: int = 0          # per-tenant chunked prefill
+    reduced: bool = False
+    seed: int = 0                  # weight-init seed
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+class MultiServer:
+    """N tenant `Server`s scheduled onto one shared `PageTable`.
+
+    Construction: the shared table has `sum(t.slots)` rows and per-slot
+    width `max(t.cache_len) // page_size`; each tenant gets a `SlotView`
+    window and builds its own device cache pool of `num_pages` pages (pages
+    are per-tenant STORAGE but a shared page-id BUDGET — the allocator,
+    refcounts, and prefix index are global, which is what creates the
+    cross-tenant pressure, fairness, and reuse dynamics).
+    """
+
+    def __init__(self, tenants, *, page_size: int = 8,
+                 num_pages: int | None = None, prefix_share: bool = False,
+                 preempt: bool = False, dispatch_ahead: bool = True,
+                 tier: PageStore | None = None, tier_watermark: int = 0,
+                 dtype=None):
+        if len({t.model_id for t in tenants}) != len(tenants):
+            raise ValueError("tenant model_ids must be unique (they namespace "
+                             "the shared prefix index)")
+        self.tenants = list(tenants)
+        total_slots = sum(t.slots for t in self.tenants)
+        width = max(-(-t.cache_len // page_size) for t in self.tenants)
+        if num_pages is None:
+            num_pages = total_slots * width + 1
+        if tier is not None:
+            self.pt = TieredPageTable(num_pages, page_size, total_slots,
+                                      width, store=tier,
+                                      watermark=tier_watermark)
+        else:
+            self.pt = PageTable(num_pages, page_size, total_slots, width)
+        self.servers: dict[str, Server] = {}
+        base = 0
+        for t in self.tenants:
+            cfg, packed, ctx = registry.build_serve_entry(
+                t.arch, policy=t.policy, reduced=t.reduced,
+                backend=t.backend, impl=t.impl, dtype=dtype, seed=t.seed)
+            view = self.pt.view(base, t.slots, t.model_id.encode())
+            srv = Server(cfg, packed, slots=t.slots, cache_len=t.cache_len,
+                         paged=True, page_size=page_size,
+                         prefix_share=prefix_share, preempt=preempt,
+                         chunk_tokens=t.chunk_tokens,
+                         dispatch_ahead=dispatch_ahead, ctx=ctx,
+                         page_table=view, model_id=t.model_id)
+            if srv.cache_len != t.cache_len:
+                raise ValueError(f"tenant {t.model_id}: cache_len "
+                                 f"{t.cache_len} not a page multiple")
+            self.servers[t.model_id] = srv
+            base += t.slots
+        for mid, srv in self.servers.items():
+            srv.extern_demand = self._extern_demand(mid)
+            if preempt:
+                srv.reclaim_hook = self._reclaim(mid)
+        # weighted round-robin cycle: tenant ids repeated by weight; the
+        # pointer advances one entry per tick and the tick's step order is
+        # the de-duplicated cycle read from the pointer
+        self._cycle = [t.model_id for t in self.tenants
+                       for _ in range(max(1, t.weight))]
+        self._rr = 0
+        self._rid = 0
+        self.ticks = 0
+        # SLO tracking: per-request submit/first-token/done marks
+        self._pending: dict[int, tuple[str, Request]] = {}
+        self._marks: dict[int, dict] = {}
+        self.slo = {t.model_id: {"submitted": 0, "dropped": 0, "completed": 0,
+                                 "ttft_ticks": [], "itl_ticks": [],
+                                 "ttft_s": [], "itl_s": []}
+                    for t in self.tenants}
+
+    # -- cross-tenant coupling -------------------------------------------------
+
+    def _extern_demand(self, mid: str):
+        def demand():
+            return sum(o._outstanding_demand() + o._fork_debt()
+                       for m, o in self.servers.items() if m != mid)
+        return demand
+
+    def _reclaim(self, mid: str):
+        """Preempt one RUNNING slot of a co-tenant, strictly worse than
+        `worse_than` in the global (priority desc, rid asc) order; worst
+        victim first. Returns True iff a slot was preempted (its pages are
+        back in the shared pool — possibly fewer than hoped if shared)."""
+        def reclaim(worse_than) -> bool:
+            best = None
+            for m, o in self.servers.items():
+                if m == mid:
+                    continue
+                for s, r in enumerate(o.slot_req):
+                    if (r is not None and r.state == "RUNNING"
+                            and o._prio(r) > worse_than):
+                        if best is None or o._prio(r) > best[2]:
+                            best = (o, s, o._prio(r))
+            if best is None:
+                return False
+            best[0]._preempt(best[1])
+            return True
+        return reclaim
+
+    # -- request intake --------------------------------------------------------
+
+    def submit(self, model_id: str, prompt, max_new: int, *,
+               temperature: float = 0.0, seed: int = 0,
+               eos: int | None = None, priority: int | None = None) -> int | None:
+        """Queue a request for one tenant. Returns the global rid, or None
+        when the tenant's queue cap drops it. The tenant's priority class is
+        the default request priority (a per-request override still wins)."""
+        t = next(t for t in self.tenants if t.model_id == model_id)
+        srv = self.servers[model_id]
+        rec = self.slo[model_id]
+        rec["submitted"] += 1
+        if t.max_queue is not None and len(srv.queue) >= t.max_queue:
+            rec["dropped"] += 1
+            return None
+        rid = self._rid
+        self._rid += 1
+        req = Request(rid, np.asarray(prompt, np.int32), max_new,
+                      temperature=temperature, seed=seed, eos=eos,
+                      priority=t.priority if priority is None else priority)
+        srv.submit(req)
+        self._pending[rid] = (model_id, req)
+        self._marks[rid] = {"submit": (self.ticks, time.perf_counter())}
+        return rid
+
+    # -- scheduling ------------------------------------------------------------
+
+    def _tick_order(self) -> list[str]:
+        order: list[str] = []
+        n = len(self._cycle)
+        for i in range(n):
+            mid = self._cycle[(self._rr + i) % n]
+            if mid not in order:
+                order.append(mid)
+        self._rr = (self._rr + 1) % n
+        return order
+
+    def step_all(self) -> bool:
+        """One global tick: every tenant steps once, in this tick's WRR
+        order (earlier = first claim on free pages for admission/resume).
+        Returns True while any tenant still has work."""
+        busy = False
+        for mid in self._tick_order():
+            busy = bool(self.servers[mid].step()) or busy
+        self.ticks += 1
+        self._mark_progress()
+        return busy
+
+    def _mark_progress(self):
+        now = time.perf_counter()
+        done = []
+        for rid, (mid, req) in self._pending.items():
+            m = self._marks[rid]
+            if req.out and "first" not in m:
+                m["first"] = (self.ticks, now)
+            if req.done:
+                m["done"] = (self.ticks, now)
+                done.append(rid)
+        for rid in done:
+            mid, req = self._pending.pop(rid)
+            m = self._marks.pop(rid)
+            rec = self.slo[mid]
+            rec["completed"] += 1
+            sub, first = m["submit"], m.get("first", m["done"])
+            fin = m["done"]
+            rec["ttft_ticks"].append(first[0] - sub[0])
+            rec["ttft_s"].append(first[1] - sub[1])
+            steps = max(len(req.out) - 1, 1)
+            rec["itl_ticks"].append((fin[0] - first[0]) / steps)
+            rec["itl_s"].append((fin[1] - first[1]) / steps)
+
+    def run(self) -> int:
+        t0 = self.ticks
+        while self.step_all():
+            pass
+        return self.ticks - t0
+
+    def flush_tier(self):
+        """Clean shutdown of the tier: park -> store -> disk (so a restarted
+        MultiServer re-admits every tenant's flushed prefixes)."""
+        if hasattr(self.pt, "flush_cached"):
+            self.pt.flush_cached()
+            if self.pt.store is not None:
+                self.pt.store.flush()
+
+    # -- reporting -------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Per-tenant scheduler + SLO counters, plus shared-pool stats."""
+        out = {"pool": self.pt.stats(), "ticks": self.ticks}
+        if hasattr(self.pt, "tier_stats"):
+            out["tier"] = dict(self.pt.tier_stats)
+            if self.pt.store is not None:
+                out["store"] = dict(self.pt.store.stats)
+        for mid, srv in self.servers.items():
+            rec = self.slo[mid]
+            out[mid] = {
+                **{k: srv.stats[k] for k in
+                   ("admitted", "preemptions", "resumes", "shared_pages",
+                    "cow_forks", "prefill_skips", "tier_hits_device",
+                    "tier_hits_host", "tier_hits_disk")},
+                "submitted": rec["submitted"],
+                "dropped": rec["dropped"],
+                "completed": rec["completed"],
+                "jit_signatures": sum(srv.compile_counts.values()),
+                "ttft_ticks_p50": _pct(rec["ttft_ticks"], 50),
+                "ttft_ticks_p99": _pct(rec["ttft_ticks"], 99),
+                "itl_ticks_p50": _pct(rec["itl_ticks"], 50),
+                "itl_ticks_p99": _pct(rec["itl_ticks"], 99),
+                "ttft_s_p50": _pct(rec["ttft_s"], 50),
+                "ttft_s_p99": _pct(rec["ttft_s"], 99),
+                "itl_s_p50": _pct(rec["itl_s"], 50),
+                "itl_s_p99": _pct(rec["itl_s"], 99),
+            }
+        return out
+
+
+def _parse_tenant(spec: str, idx: int, args) -> TenantSpec:
+    """CLI tenant spec: ARCH[,POLICY[,SLOTS[,WEIGHT[,PRIORITY]]]]."""
+    parts = spec.split(",")
+    arch = parts[0]
+    policy = parts[1] if len(parts) > 1 and parts[1] else None
+    slots = int(parts[2]) if len(parts) > 2 else 2
+    weight = int(parts[3]) if len(parts) > 3 else 1
+    prio = int(parts[4]) if len(parts) > 4 else 0
+    return TenantSpec(model_id=f"{arch}#{idx}", arch=arch, policy=policy,
+                      slots=slots, weight=weight, priority=prio,
+                      cache_len=args.cache_len, reduced=args.reduced,
+                      chunk_tokens=args.chunk_tokens)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenant", action="append", required=True,
+                    metavar="ARCH[,POLICY[,SLOTS[,WEIGHT[,PRIO]]]]",
+                    help="add a tenant (repeatable); e.g. "
+                         "--tenant llama3.2-3b,ternary,2,2,1")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests PER TENANT")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="shared pool size; < sum(slots)*cache_len/page_size "
+                         "oversubscribes and tenants compete")
+    ap.add_argument("--prefix-share", action="store_true")
+    ap.add_argument("--preempt", action="store_true")
+    ap.add_argument("--chunk-tokens", type=int, default=0)
+    ap.add_argument("--no-dispatch-ahead", dest="dispatch_ahead",
+                    action="store_false", default=True)
+    ap.add_argument("--tier-dir", default=None,
+                    help="enable the tiered prefix cache with this disk-slab "
+                         "directory (host tier: --tier-host-slabs); flushed "
+                         "at exit so a restart re-admits cached prefixes")
+    ap.add_argument("--tier-host-slabs", type=int, default=64)
+    ap.add_argument("--tier-watermark", type=int, default=0,
+                    help="max device-parked pages (0 = bounded only by "
+                         "allocation pressure)")
+    ap.add_argument("--jit-budget", type=int, default=None,
+                    help="fail if ANY tenant's trace-time signatures exceed "
+                         "this (the discipline holds per model entry)")
+    ap.add_argument("--expect-tier-hits", type=int, default=None,
+                    help="fail unless host+disk tier hits reach this total "
+                         "(the CI kill-and-restart reuse gate)")
+    args = ap.parse_args(argv)
+
+    tenants = [_parse_tenant(s, i, args) for i, s in enumerate(args.tenant)]
+    store = (PageStore(host_capacity=args.tier_host_slabs,
+                       disk_dir=args.tier_dir)
+             if args.tier_dir is not None else None)
+    ms = MultiServer(tenants, page_size=args.page_size,
+                     num_pages=args.num_pages,
+                     prefix_share=args.prefix_share, preempt=args.preempt,
+                     dispatch_ahead=args.dispatch_ahead, tier=store,
+                     tier_watermark=args.tier_watermark)
+    print(f"tenants: " + ", ".join(
+        f"{t.model_id}(policy={ms.servers[t.model_id].cfg.policy}, "
+        f"slots={t.slots}, w={t.weight}, prio={t.priority})"
+        for t in tenants))
+    print(f"shared pool: {ms.pt.usable_pages} usable pages x "
+          f"{ms.pt.page_size} tokens"
+          + (f", tiered -> {args.tier_dir}" if store else ""))
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        for t in tenants:
+            vocab = ms.servers[t.model_id].cfg.vocab
+            # every tenant's traffic repeats a page-aligned common prefix
+            # (stable per tenant AND across process runs), so prefix sharing
+            # has something to alias and a restarted run re-probes the same
+            # disk-tier keys — namespacing keeps equal token streams
+            # distinct across tenants
+            prng = np.random.default_rng(zlib.crc32(t.model_id.encode()))
+            prompt = np.concatenate([
+                prng.integers(0, vocab, size=(args.page_size,)),
+                rng.integers(0, vocab, size=(int(rng.integers(2, 7)),))
+            ]).astype(np.int32)
+            ms.submit(t.model_id, prompt, args.max_new, seed=i)
+    ticks = ms.run()
+    dt = time.time() - t0
+    if store is not None:
+        ms.flush_tier()
+    st = ms.stats()
+    total_done = sum(st[t.model_id]["completed"] for t in tenants)
+    total_tok = sum(len(r.out) for t in tenants
+                    for r in ms.servers[t.model_id].completed)
+    print(f"served {total_done} requests / {total_tok} tokens across "
+          f"{len(tenants)} tenants in {ticks} ticks, {dt:.1f}s")
+    worst_sigs = 0
+    for t in tenants:
+        row = st[t.model_id]
+        worst_sigs = max(worst_sigs, row["jit_signatures"])
+        print(f"  {t.model_id}: admitted={row['admitted']} "
+              f"preempt={row['preemptions']} dropped={row['dropped']} "
+              f"shared={row['shared_pages']} skips={row['prefill_skips']} "
+              f"tier(d/h/k)={row['tier_hits_device']}/"
+              f"{row['tier_hits_host']}/{row['tier_hits_disk']} "
+              f"ttft p50/p99={row['ttft_ticks_p50']:.0f}/"
+              f"{row['ttft_ticks_p99']:.0f} ticks "
+              f"itl p50/p99={row['itl_ticks_p50']:.2f}/"
+              f"{row['itl_ticks_p99']:.2f} ticks "
+              f"jit={row['jit_signatures']}")
+    peak = max(s.stats["peak_pages"] for s in ms.servers.values())
+    print(f"pool: occupancy peak {peak / ms.pt.usable_pages:.2f}, exit "
+          f"{st['pool']['occupancy']:.2f} ({st['pool']['live_pages']}/"
+          f"{st['pool']['usable_pages']} usable live)"
+          + (f", parked {st['pool'].get('cached_pages', 0)}" if store else ""))
+    if store is not None:
+        tier_hits = sum(st[t.model_id]["tier_hits_host"]
+                        + st[t.model_id]["tier_hits_disk"] for t in tenants)
+        print(f"tier: {st['tier']} store={st['store']} "
+              f"promoted-hits={tier_hits}")
+        if (args.expect_tier_hits is not None
+                and tier_hits < args.expect_tier_hits):
+            raise SystemExit(f"expected >= {args.expect_tier_hits} host/disk "
+                             f"tier hits, measured {tier_hits}")
+    elif args.expect_tier_hits is not None:
+        raise SystemExit("--expect-tier-hits needs --tier-dir")
+    if args.jit_budget is not None and worst_sigs > args.jit_budget:
+        raise SystemExit(f"jit budget exceeded: a tenant traced {worst_sigs} "
+                         f"signatures > per-model budget {args.jit_budget}")
+    return ms
+
+
+if __name__ == "__main__":
+    main()

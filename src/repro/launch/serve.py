@@ -180,7 +180,9 @@ class Server:
                  prefix_share: bool = False, preempt: bool = False,
                  chunk_tokens: int = 0, dispatch_ahead: bool = True,
                  spec_draft: str | None = None, spec_k: int = 4,
-                 ctx: ModelCtx | None = None, mesh=None):
+                 ctx: ModelCtx | None = None, mesh=None,
+                 page_table=None, model_id: str | None = None,
+                 tier=None, tier_watermark: int = 0):
         self.cfg = cfg
         self.sp = transformer.build_specs(cfg)
         self.params = params
@@ -284,18 +286,53 @@ class Server:
         # compute dtype, unless the int8-requant cache is configured —
         # otherwise every scatter silently rounds the prefill KV
         kv_dtype = None if cfg.kv_cache_dtype == "int8" else self.ctx.dtype
+        # multi-tenant namespace: mixed into every prefix key (hash root +
+        # verbatim bytes) so co-tenant models can never alias a page, and
+        # the tag under which this server's tier demoter registers
+        self.model_id = model_id
+        self.ns = model_id.encode() if model_id else b""
+        # full-coverage prefill skip (tiered / shared re-admission): when
+        # every prompt page arrives from the share index, the first-token
+        # logits come from a single 1-token chunk step over the resident KV
+        # instead of a full re-prefill. Same algebra constraints as chunked
+        # prefill: no recurrent/window state, no int8 KV requant.
+        self._skip_prefill_ok = (paged and not self.exact_prefill
+                                 and cfg.kv_cache_dtype != "int8")
         if paged:
             self.max_pages = cache_len // page_size
-            if num_pages is None:
-                num_pages = slots * self.max_pages + 1   # +1: scratch page 0
-            self.pt = PageTable(num_pages, page_size, self.phys_slots,
-                                self.max_pages)
+            if page_table is not None:
+                # multi-tenant: a SlotView window onto the shared pool
+                if page_table.slots != self.phys_slots:
+                    raise ValueError(
+                        f"page_table view has {page_table.slots} slots, "
+                        f"server needs {self.phys_slots}")
+                self.pt = page_table
+                num_pages = page_table.num_pages
+            else:
+                if num_pages is None:
+                    num_pages = slots * self.max_pages + 1  # +1: scratch page 0
+                if tier is not None:
+                    from repro.launch.cache_tiers import TieredPageTable
+                    self.pt = TieredPageTable(
+                        num_pages, page_size, self.phys_slots, self.max_pages,
+                        store=tier, watermark=tier_watermark)
+                    self.pt._current_ns = self.ns
+                else:
+                    self.pt = PageTable(num_pages, page_size, self.phys_slots,
+                                        self.max_pages)
             self.cache = transformer.init_cache(cfg, self.phys_slots, cache_len,
                                                 paged=(num_pages, page_size),
                                                 kv_dtype=kv_dtype)
             self.paged_mask = kv_cache.paged_leaf_mask(
                 cfg, self.phys_slots, cache_len, num_pages, page_size)
+            if hasattr(self.pt, "register_demoter"):
+                self.pt.register_demoter(
+                    self.ns,
+                    lambda pid: kv_cache.gather_pages(self.cache, [pid],
+                                                      self.paged_mask))
         else:
+            if page_table is not None or tier is not None:
+                raise ValueError("page_table/tier need the paged cache")
             self.pt = None
             self.cache = transformer.init_cache(cfg, self.phys_slots, cache_len,
                                                 kv_dtype=kv_dtype)
@@ -326,7 +363,17 @@ class Server:
                       "preemptions": 0, "resumes": 0, "peak_pages": 0,
                       "chunk_ticks": 0, "plan_hits": 0, "fences": 0,
                       "spec_ticks": 0, "spec_proposed": 0,
-                      "spec_accepted": 0, "spec_emitted": 0}
+                      "spec_accepted": 0, "spec_emitted": 0,
+                      "admitted": 0, "prefill_skips": 0,
+                      "tier_hits_device": 0, "tier_hits_host": 0,
+                      "tier_hits_disk": 0}
+        # multi-tenant hooks (set by launch/multi_serve.MultiServer):
+        # extern_demand() -> pages co-tenant running slots may still claim
+        # (joins this server's conservative admission reservation);
+        # reclaim_hook(worse_than) -> True if it preempted one strictly-
+        # lower-priority co-tenant slot (extends _make_room across tenants)
+        self.extern_demand = None
+        self.reclaim_hook = None
         # dispatch-ahead state: the prepared next tick and the mutation epoch
         # that fences it (every scheduler mutation — admit, retire, preempt,
         # resume, fork, submit — bumps the epoch; a plan built at epoch e is
@@ -504,10 +551,16 @@ class Server:
         """
         hits = self.pt.lookup_keys(keys) if keys is not None else []
         nhit = sum(1 for p in hits if p is not None)
+        # effective supply: a tiered table's parked pages count as free, but
+        # parked pages this probe HITS will be mapped, not reclaimed — they
+        # must not fund the miss allocations (free_pages_for nets them out)
+        free = (self.pt.free_pages_for(keys)
+                if hasattr(self.pt, "free_pages_for") else self.pt.free_pages)
         if self.preempt:
             need_now = pages_for(len(req.prompt), self.page_size) - nhit
-            return self.pt.free_pages >= need_now
+            return free >= need_now
         lifetime = pages_for(self._need_tokens(req), self.page_size) - nhit
+        extern = self.extern_demand() if self.extern_demand is not None else 0
         debt = 0
         if self.prefix_share:
             # the candidate's own first decode write lands in its final
@@ -520,19 +573,107 @@ class Server:
                                        ) else ()
             debt = self._fork_debt({p for p in hits if p is not None},
                                    boundary)
-        return self.pt.free_pages - self._outstanding_demand() - debt >= lifetime
+        return free - self._outstanding_demand() - debt - extern >= lifetime
+
+    def _tier_promote(self, keys):
+        """Re-materialize host/disk-tier slabs for this prompt's leading
+        missing prefix pages, so the admission that follows maps them as
+        share hits (and, on full coverage, skips prefill outright).
+
+        Prefix-closed walk: accumulate the verbatim chain over consumed
+        keys; at the first share-index miss, probe the store with the
+        restart-stable content key `(covered, hash, chain)`. A store hit is
+        adopted — allocated, registered under the live `(parent, key)`
+        chain, parked at refcount 0 — and its bytes scattered into this
+        server's pool before anything can map it. The walk stops at the
+        first store miss (deeper pages are unreachable without it) and
+        never evicts to fund itself (promotion only spends REAL free pages
+        — cannibalizing the device tier to fill the device tier is churn).
+        """
+        store = getattr(self.pt, "store", None)
+        if store is None or not keys:
+            return
+        hits = self.pt.lookup_keys(keys)
+        parent, chain = kv_cache._ROOT, b""
+        for key, hit in zip(keys, hits):
+            if hit is not None:
+                parent, chain = hit, chain + key[2]
+                continue
+            chain = chain + key[2]
+            if not getattr(self.pt, "_free", ()):
+                break              # no real free page to land the slab on
+            image, tiername = store.get((key[0], key[1], chain))
+            if image is None:
+                break
+            page = self.pt.adopt(parent, key, chain, self.ns)
+            self.cache = kv_cache.scatter_pages(self.cache, image, [page],
+                                                self.paged_mask)
+            if self.mesh is not None:
+                from repro.launch import sharding as shardlib
+                self.cache = shardlib.repin_serve_cache(self.mesh, self.cache)
+            self.stats["tier_hits_host" if tiername == "host"
+                       else "tier_hits_disk"] += 1
+            parent = page
+
+    def _count_device_hits(self, keys):
+        """Per-tenant device-tier accounting: share hits about to re-admit
+        a PARKED page are device-tier hits for this server (the table's own
+        counter is pool-global)."""
+        if keys is None or not hasattr(self.pt, "is_cached"):
+            return
+        self.stats["tier_hits_device"] += sum(
+            1 for p in self.pt.lookup_keys(keys)
+            if p is not None and self.pt.is_cached(p))
+
+    def _skip_prefill(self, s: int, req: Request, n: int):
+        """First-token logits for a fully-resident prompt (every page came
+        from the share index) via ONE 1-token chunk step at position n-1 —
+        no re-prefill. The write table is all-NULL: the resident pages are
+        shared/parked and must not be rewritten (their bytes are already
+        byte-identical to what this prompt's prefill would produce); the
+        chunk's in-flight K/V for its own row feeds the attention directly,
+        so the logits match the full prefill's final row bit-for-bit
+        (jit-vs-jit, same algebra as the chunked-prefill final chunk)."""
+        read = self.pt.table[s].copy()
+        write = np.full_like(read, NULL_PAGE)
+        toks = np.asarray([[req.prompt[-1]]], np.int32)
+        c_logits, self.cache = self._chunk(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray([n - 1], jnp.int32), jnp.asarray(read)[None],
+            jnp.asarray(write)[None], jnp.asarray([1], jnp.int32),
+            jnp.asarray([0], jnp.int32))
+        req.out.append(self._sample(req, np.asarray(c_logits)[0, 0]))
+        self.stats["prefill_skips"] += 1
 
     def _try_start(self, s: int) -> bool:
         """Prefill + admit the queue head into slot s (False: it must wait)."""
         req = self.queue[0]
         keys = None
         if self.paged:
-            keys = (kv_cache.prefix_keys(req.prompt, self.page_size)
+            keys = (kv_cache.prefix_keys(req.prompt, self.page_size,
+                                         namespace=self.ns)
                     if self.prefix_share else None)
+            if keys is not None:
+                self._tier_promote(keys)
             if not self._admission_ok(req, keys):
                 return False   # FIFO: the head waits for pages; no jumping
         self.queue.pop(0)
         n = len(req.prompt)
+        if self.paged and keys is not None:
+            self._count_device_hits(keys)
+            ids, shared = self.pt.admit_shared(s, n, keys)
+            self.stats["shared_pages"] += int(shared.sum())
+            if shared.all() and self._skip_prefill_ok:
+                # the whole prompt is already resident — first token from
+                # one chunk step over the shared pages, no prefill at all
+                self._skip_prefill(s, req, n)
+                self._finish_start(s, req, n)
+                return True
+            # shared pages already hold this prefix's KV (and possibly a
+            # co-owner's decode bytes past it) — never rescatter them
+            scatter_ids = np.where(shared, NULL_PAGE, ids).astype(np.int32)
+        elif self.paged:
+            scatter_ids = self.pt.admit(s, n)
         bucket = self._bucket(n)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.prompt
@@ -540,14 +681,6 @@ class Server:
                                    jnp.asarray([n - 1], jnp.int32))
         req.out.append(self._sample(req, np.asarray(logits[0, -1])))
         if self.paged:
-            if keys is not None:
-                ids, shared = self.pt.admit_shared(s, n, keys)
-                self.stats["shared_pages"] += int(shared.sum())
-                # shared pages already hold this prefix's KV (and possibly a
-                # co-owner's decode bytes past it) — never rescatter them
-                scatter_ids = np.where(shared, NULL_PAGE, ids).astype(np.int32)
-            else:
-                scatter_ids = self.pt.admit(s, n)
             pad = pages_for(bucket, self.page_size) - len(scatter_ids)
             if pad:
                 scatter_ids = np.concatenate(
@@ -557,11 +690,15 @@ class Server:
                 page_ids=scatter_ids, page_size=self.page_size)
         else:
             self.cache = kv_cache.scatter_prefill(self.cache, rc, s)
+        self._finish_start(s, req, n)
+        return True
+
+    def _finish_start(self, s: int, req: Request, n: int):
         req.state = RUNNING
         self.slot_req[s] = req
         self.slot_pos[s] = n
+        self.stats["admitted"] += 1
         self._epoch += 1
-        return True
 
     def _defer_for_inflight(self, keys) -> bool:
         """True if the queue head must wait one tick: its first prefix page
@@ -592,8 +729,11 @@ class Server:
         registration of the slot's own pages is deferred until chunks
         actually cover them (PageTable.index_pages at each chunk landing)."""
         req = self.queue[0]
-        keys = (kv_cache.prefix_keys(req.prompt, self.page_size)
+        keys = (kv_cache.prefix_keys(req.prompt, self.page_size,
+                                     namespace=self.ns)
                 if self.prefix_share else None)
+        if keys is not None:
+            self._tier_promote(keys)
         if not self._admission_ok(req, keys):
             return False   # FIFO: the head waits for pages; no jumping
         if self._defer_for_inflight(keys):
@@ -603,8 +743,15 @@ class Server:
         shared = None
         lead = 0
         if keys is not None:
+            self._count_device_hits(keys)
             ids, shared = self.pt.admit_shared(s, n, keys, defer_index=True)
             self.stats["shared_pages"] += int(shared.sum())
+            if shared.all() and self._skip_prefill_ok:
+                # fully resident (tier re-admission): no chunks to run at
+                # all — sample the first token and go straight to RUNNING
+                self._skip_prefill(s, req, n)
+                self._finish_start(s, req, n)
+                return True
             while lead < len(shared) and shared[lead]:
                 lead += 1
         else:
@@ -613,6 +760,7 @@ class Server:
         req.state = PREFILLING
         self.slot_req[s] = req
         self.slot_pos[s] = min(lead * self.page_size, n - 1)  # chunk clock
+        self.stats["admitted"] += 1
         self._epoch += 1
         return True
 
@@ -669,6 +817,12 @@ class Server:
                        if r is not None and r.state == RUNNING
                        and self._prio(r) > worse_than]
             if not victims:
+                # multi-tenant: ask the coordinator to preempt a strictly-
+                # lower-priority co-tenant slot (frees pages in the SHARED
+                # pool); victims shrink every call, so this terminates
+                if (self.reclaim_hook is not None
+                        and self.reclaim_hook(worse_than)):
+                    continue
                 return False
             self._preempt(max(victims,
                               key=lambda v: self._prio(self.slot_req[v])))
@@ -1142,6 +1296,17 @@ class Server:
             self.step()
             ticks += 1
         return ticks
+
+    def flush_tier(self):
+        """Demote every parked device-tier page to the store and push the
+        store's host tier to disk — the clean-shutdown path that makes
+        indexed prefixes survive a restart (tests/CI kill-and-restart
+        smoke). No-op without a tiered table."""
+        if hasattr(self.pt, "flush_cached"):
+            self.pt.flush_cached()
+            store = getattr(self.pt, "store", None)
+            if store is not None:
+                store.flush()
 
 
 def main(argv=None):

@@ -284,7 +284,11 @@ def serve_cache_shardings(mesh: Mesh, cache_tree):
     or enter a jitted signature. Prefix sharing and copy-on-write only remap
     *which* page ids appear in the (host) table; the device placement rules
     above are unchanged by them — re-verified token-exact under `--mesh` by
-    tests/test_serving_sched.py.
+    tests/test_serving_sched.py. The same holds for the tiered prefix cache
+    (launch/cache_tiers.py) and multi-tenant SlotView windows
+    (launch/multi_serve.py): parked pages, host/disk slabs and per-tenant
+    slot ranges are all host bookkeeping over the one shared pool, so they
+    inherit these rules unmodified.
     """
     def one(path, leaf):
         names = _names(path)
@@ -301,11 +305,13 @@ def repin_serve_cache(mesh: Mesh, cache_tree):
     """Re-apply the serve cache placement after a host-driven update.
 
     Swap-in scatters a preempted request's host slab back into the pool with
-    eager `.at[ids].set` ops; outside jit, sharding propagation through such
-    an update is backend-dependent, so the server re-pins the result to the
-    canonical `serve_cache_shardings` layout (a no-op device_put when the
-    placement already matches). Keeping this here — next to the rules it
-    re-applies — means serve.py cannot drift from the layout contract."""
+    eager `.at[ids].set` ops, and tier promotion (launch/cache_tiers.py)
+    scatters a host/disk slab image the same way; outside jit, sharding
+    propagation through such an update is backend-dependent, so the server
+    re-pins the result to the canonical `serve_cache_shardings` layout (a
+    no-op device_put when the placement already matches). Keeping this here
+    — next to the rules it re-applies — means serve.py cannot drift from the
+    layout contract."""
     return jax.device_put(cache_tree, serve_cache_shardings(mesh, cache_tree))
 
 

@@ -165,7 +165,13 @@ def make_decode_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
     (kernels.paged_attn.paged_flash_decode, its pages-per-block Tile from
     ctx.tune or the shipped TuneTable) in place of the jnp gather — both
     paths share the identical cache write and post-fork table, so swapping
-    them never changes the decode signature or the CoW contract."""
+    them never changes the decode signature or the CoW contract.
+
+    Multi-tenant serving (launch/multi_serve.py) builds one of these per
+    tenant — the signature is keyed by that tenant's (cfg, policy, ctx), so
+    co-scheduled models never share a trace and the per-model --jit-budget
+    accounting stays exact even though every tenant's pages live in the one
+    shared pool."""
     ctx = ctx or ModelCtx(mode="serve")
 
     def decode_step(params, batch):

@@ -22,6 +22,33 @@ def build(name_or_cfg) -> tuple[ArchConfig, transformer.ModelSpecs]:
     return cfg, transformer.build_specs(cfg)
 
 
+def build_serve_entry(arch: str, *, policy: str | None = None,
+                      reduced: bool = False, backend: str = "jnp",
+                      impl: str = "popcount", plane_twins: bool = False,
+                      dtype=None, seed: int = 0
+                      ) -> tuple[ArchConfig, dict, ModelCtx]:
+    """One registry entry of the multi-tenant server: resolve an (arch,
+    policy) pair to `(cfg, packed serve params, serve ModelCtx)`. Each
+    tenant gets its own packed weight set and its own ctx — per-layer
+    OperatingPoints resolve per model (`models.common.operating_point`), so
+    heterogeneous precision policies coexist on one device."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if policy:
+        cfg = dataclasses.replace(cfg, policy=policy)
+    params = transformer.init(jax.random.PRNGKey(seed), cfg)
+    packed = transformer.pack_for_serve(params, cfg,
+                                        plane_twins=plane_twins
+                                        or impl == "planes")
+    ctx = ModelCtx(mode="serve", backend=backend, impl=impl)
+    if dtype is not None:
+        ctx = dataclasses.replace(ctx, dtype=dtype)
+    return cfg, packed, ctx
+
+
 def input_specs(cfg: ArchConfig, shape: ShapeConfig | str) -> dict:
     """ShapeDtypeStruct tree for the inputs of (arch x workload-shape)."""
     if isinstance(shape, str):

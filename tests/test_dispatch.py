@@ -430,24 +430,27 @@ def test_shipped_tune_table_keys_are_registered():
     assert TUNE_KEY in tune.tiles, "paged-attn Tile missing from shipped table"
 
 
+def test_prune_stale_tiles_drops_unresolvable_keys():
+    """`kernel_bench --retune` prunes tune-table rows no registered cell can
+    resolve (renamed impl, retired precision pair) while keeping every live
+    row, the `(w, a, "*")` wildcards of registered pairs, and the paged-attn
+    pseudo-cell."""
+    from repro.kernels.paged_attn import TUNE_KEY
+    tune = dispatch.default_tune()
+    stale = {("int3", "int8", "*"): Tile(64, 64, 16),
+             ("binary", "binary", "gone-impl"): Tile(128, 128, 8)}
+    wild = ("binary", "binary", "*")          # registered pair: must survive
+    assert wild in dispatch.valid_tune_keys()
+    tiles = {**tune.tiles, **stale, wild: Tile(64, 64, 8)}
+    kept, dropped = dispatch.prune_stale_tiles(tiles, extra_keys=(TUNE_KEY,))
+    assert dropped == sorted(stale)
+    assert set(kept) == set(tune.tiles) | {wild}
+    # without the extra key, the pseudo-cell row is pruned too (the prune is
+    # exactly as permissive as its caller declares)
+    kept2, dropped2 = dispatch.prune_stale_tiles(tune.tiles)
+    assert TUNE_KEY in dropped2 and TUNE_KEY not in kept2
+
+
 def test_registry_table_renders():
     table = dispatch.registry_table()
     assert "wprec" in table and "int4" in table and "w_q4" in table
-
-
-# ---------------------------------------------------------------------------
-# 5. the deprecated ops shim still works — but warns
-# ---------------------------------------------------------------------------
-
-def test_ops_shim_warns_and_matches_qgemm():
-    from repro.kernels import ops
-    spec = _spec("binary", "binary", k=64, n=32)
-    p = _packed(spec)
-    x = jax.random.normal(jax.random.PRNGKey(8), (4, 64)) * 0.2
-    with pytest.warns(DeprecationWarning, match="binary_matmul"):
-        y = ops.binary_matmul(x, p["w_packed"], p["w_scale"], k=64)
-    want = dispatch.qgemm(p, x, spec, _op(spec, "popcount", "pallas"))
-    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
-    with pytest.warns(DeprecationWarning, match="qlinear_serve"):
-        y2 = ops.qlinear_serve(p, x, spec)
-    np.testing.assert_array_equal(np.asarray(y2), np.asarray(want))

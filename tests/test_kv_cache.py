@@ -39,6 +39,16 @@ def _check_invariants(pt: PageTable, model: dict):
     # a page is freed exactly when its refcount hits zero
     assert pt.free_pages + len(distinct) == pt.num_pages - 1
     assert distinct.isdisjoint(pt._free)
+    # stats() reports occupancy over USABLE pages: page 0 scratch is not
+    # demand, live == usable - free == distinct owned, occupancy in [0, 1]
+    st = pt.stats()
+    assert st["usable_pages"] == pt.num_pages - 1
+    assert st["free_pages"] == pt.free_pages
+    assert st["live_pages"] == st["usable_pages"] - st["free_pages"] \
+        == len(distinct)
+    assert st["occupancy"] == pytest.approx(
+        len(distinct) / st["usable_pages"])
+    assert 0.0 <= st["occupancy"] <= 1.0
     # the share index only ever points at live pages, bijectively
     for key, p in pt._index.items():
         assert int(pt.refcount[p]) >= 1, (key, p)

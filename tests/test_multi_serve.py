@@ -1,0 +1,217 @@
+"""Multi-tenant serving lockdown: N tenants (different archs x precision
+policies) co-scheduled on ONE shared page pool must each stay token-exact
+against their own single-model sequential oracle — with prefix sharing,
+preemption, and the tiered prefix cache all enabled — and a cold restart
+must re-admit previously cached prefixes from the disk tier without
+re-prefilling.
+
+This is the multi-tenant extension of test_serving's batched-equals-
+sequential oracle: the failure class it catches is cross-tenant aliasing
+(one model's KV pages mapped into another's table because the share index
+keys weren't namespace-disjoint) and allocator races (a tenant's page
+reclaimed or evicted while another tenant's admission was about to map it).
+Run in f32 so both paths compute identical algebra.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.cache_tiers import PageStore
+from repro.launch.multi_serve import MultiServer, TenantSpec
+from repro.models import registry, transformer
+from repro.models.common import ModelCtx
+
+MAX_NEW = 4
+CACHE_LEN = 32
+PAGE = 4
+
+# two archs (pure-attn llama vs windowed gemma) x two precision policies
+TENANTS = [
+    TenantSpec(model_id="llama#0", arch="llama3.2-3b", policy="ternary",
+               slots=2, cache_len=CACHE_LEN, weight=2, priority=1,
+               reduced=True),
+    TenantSpec(model_id="gemma#1", arch="gemma3-4b", policy="w-ternary",
+               slots=2, cache_len=CACHE_LEN, weight=1, priority=0,
+               reduced=True),
+]
+
+
+@functools.lru_cache(maxsize=None)
+def _entry(arch: str, policy: str):
+    cfg, packed, _ = registry.build_serve_entry(arch, policy=policy,
+                                                reduced=True,
+                                                dtype=jnp.float32)
+    return cfg, transformer.build_specs(cfg), packed
+
+
+def _oracle(arch, policy, prompt, max_new=MAX_NEW):
+    """Single-request contiguous scalar-pos greedy decode (the seed-
+    validated reference path), per tenant."""
+    cfg, sp, sparams = _entry(arch, policy)
+    ctx = ModelCtx(mode="serve", dtype=jnp.float32)
+    logits, cache = transformer.prefill(sparams, jnp.asarray(prompt)[None],
+                                        sp, ctx, cache_len=CACHE_LEN)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(out) < max_new:
+        l, cache = transformer.decode_step(
+            sparams, cache, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.int32(pos), sp, ctx)
+        out.append(int(jnp.argmax(l[0, 0])))
+        pos += 1
+    return out
+
+
+def _traffic(seed=7, n=3):
+    """Per-tenant prompt lists: a stable page-aligned common prefix (so the
+    share index and the disk tier have something to hit) + mixed-length
+    random tails. Both tenants get the SAME token streams — the namespaced
+    keys must keep them from ever aliasing a page."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, 500, size=(PAGE,))
+    prompts = []
+    for i in range(n):
+        tail = rng.integers(0, 500, size=(2 + 3 * i,))
+        prompts.append(np.concatenate([head, tail]).astype(np.int32))
+    return prompts
+
+
+def _serve_all(ms, prompts):
+    rids = {}
+    for t in ms.tenants:
+        for p in prompts:
+            rids.setdefault(t.model_id, []).append(
+                ms.submit(t.model_id, p, MAX_NEW))
+    ms.run()
+    return rids
+
+
+def _assert_exact(ms, rids, prompts):
+    for t in ms.tenants:
+        done = {r.rid: r.out for r in ms.servers[t.model_id].completed}
+        for rid, p in zip(rids[t.model_id], prompts):
+            want = _oracle(t.arch, t.policy, p)
+            assert done[rid] == want, (t.model_id, rid, done[rid], want)
+
+
+def test_cotenants_token_exact_shared_pool_tiered(tmp_path):
+    """Acceptance gate: 2 archs x 2 policies co-scheduled with prefix-share
+    + preempt + tiering on an oversubscribed shared pool, every tenant
+    token-exact vs its own oracle."""
+    store = PageStore(host_capacity=4, disk_dir=tmp_path)
+    # full provisioning would be 4 slots x 8 pages + 1 = 33; 25 forces the
+    # tenants to actually compete for pages
+    ms = MultiServer(TENANTS, page_size=PAGE, num_pages=25,
+                     prefix_share=True, preempt=True, tier=store,
+                     dtype=jnp.float32)
+    prompts = _traffic()
+    rids = _serve_all(ms, prompts)
+    _assert_exact(ms, rids, prompts)
+    st = ms.stats()
+    for t in ms.tenants:
+        assert st[t.model_id]["completed"] == len(prompts)
+        # per-model jit discipline holds while co-scheduled
+        assert st[t.model_id]["jit_signatures"] <= 12
+    # the identical token streams shared pages only WITHIN each namespace
+    assert st["llama#0"]["shared_pages"] >= 1
+    assert st["gemma#1"]["shared_pages"] >= 1
+    # pool drains clean: nothing live (parked pages count as free supply),
+    # and the retired prefixes really did stay resident in the device tier
+    pool = st["pool"]
+    assert pool["live_pages"] == 0
+    assert pool["cached_pages"] >= 1
+
+
+def test_cold_restart_reuses_disk_tier(tmp_path):
+    """Kill-and-restart: a fresh MultiServer over the same slab directory
+    re-admits prefixes from the disk tier — the pure-attn tenant skips
+    prefill outright (first token from one chunk step), the windowed tenant
+    (exact_prefill) still promotes and maps the pages — and both stay
+    token-exact."""
+    prompts = _traffic()
+    ms1 = MultiServer(TENANTS, page_size=PAGE, prefix_share=True,
+                      tier=PageStore(host_capacity=2, disk_dir=tmp_path),
+                      dtype=jnp.float32)
+    rids1 = _serve_all(ms1, prompts)
+    _assert_exact(ms1, rids1, prompts)
+    ms1.flush_tier()                      # clean shutdown: park -> disk
+    assert ms1.pt.store.stats["disk_writes"] >= 1
+
+    ms2 = MultiServer(TENANTS, page_size=PAGE, prefix_share=True,
+                      tier=PageStore(host_capacity=2, disk_dir=tmp_path),
+                      dtype=jnp.float32)
+    rids2 = _serve_all(ms2, prompts)
+    _assert_exact(ms2, rids2, prompts)
+    st = ms2.stats()
+    for t in ms2.tenants:
+        row = st[t.model_id]
+        assert row["tier_hits_host"] + row["tier_hits_disk"] >= 1, row
+    # the pure-attn tenant's fully-covered prompt never re-prefilled
+    assert st["llama#0"]["prefill_skips"] >= 1
+    # windowed + exact_prefill cannot skip (ring slab isn't paged): the
+    # guard must have kept it on the re-prefill path, not broken exactness
+    assert st["gemma#1"]["prefill_skips"] == 0
+
+
+def test_wrr_rotation_orders_claims_by_weight():
+    """The weighted cycle gives a weight-2 tenant first claim twice as
+    often, rotates fairly, and never skips a tenant in a tick."""
+    ms = object.__new__(MultiServer)      # rotation logic only, no models
+    ms._cycle = ["a", "a", "b"]
+    ms._rr = 0
+    orders = [ms._tick_order() for _ in range(6)]
+    assert all(sorted(o) == ["a", "b"] for o in orders)
+    firsts = [o[0] for o in orders]
+    assert firsts == ["a", "a", "b"] * 2
+    assert ms._rr == 0                    # full rotation wraps
+
+
+def test_priority_class_reclaims_across_tenants():
+    """Under pool pressure with --preempt, a higher-priority tenant's
+    admission preempts a strictly-lower-priority co-tenant's RUNNING slot
+    (cross-tenant reclaim), and BOTH tenants still finish token-exact."""
+    tenants = [
+        TenantSpec(model_id="lo#0", arch="llama3.2-3b", policy="ternary",
+                   slots=1, cache_len=CACHE_LEN, priority=0, reduced=True),
+        TenantSpec(model_id="hi#1", arch="llama3.2-3b", policy="ternary",
+                   slots=1, cache_len=CACHE_LEN, priority=1, reduced=True),
+    ]
+    # 8 usable pages; each request's lifetime needs 5 (14 prompt + 4 new)
+    ms = MultiServer(tenants, page_size=PAGE, num_pages=9, preempt=True,
+                     dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    p_lo = rng.integers(0, 500, size=(14,)).astype(np.int32)
+    p_hi = rng.integers(0, 500, size=(14,)).astype(np.int32)
+    r_lo = ms.submit("lo#0", p_lo, MAX_NEW)
+    # let the low-priority request admit and hold its pages first
+    ms.step_all()
+    r_hi = ms.submit("hi#1", p_hi, MAX_NEW)
+    ms.run()
+    assert ms.servers["lo#0"].stats["preemptions"] >= 1
+    assert ms.servers["lo#0"].stats["resumes"] >= 1
+    done_lo = {r.rid: r.out for r in ms.servers["lo#0"].completed}
+    done_hi = {r.rid: r.out for r in ms.servers["hi#1"].completed}
+    assert done_lo[r_lo] == _oracle("llama3.2-3b", "ternary", p_lo)
+    assert done_hi[r_hi] == _oracle("llama3.2-3b", "ternary", p_hi)
+
+
+def test_queue_cap_and_slo_counters():
+    """max_queue drops excess submissions (counted, returning None) and the
+    SLO record tracks submitted/dropped/completed with TTFT/ITL
+    percentiles for what ran."""
+    tenants = [TenantSpec(model_id="m#0", arch="llama3.2-3b",
+                          policy="ternary", slots=1, cache_len=CACHE_LEN,
+                          max_queue=1, reduced=True)]
+    ms = MultiServer(tenants, page_size=PAGE, dtype=jnp.float32)
+    p = np.arange(5, dtype=np.int32)
+    rids = [ms.submit("m#0", p, MAX_NEW) for _ in range(3)]
+    assert rids[0] is not None and rids[1] is None and rids[2] is None
+    ms.run()
+    row = ms.stats()["m#0"]
+    assert row["submitted"] == 3
+    assert row["dropped"] == 2
+    assert row["completed"] == 1
+    assert row["ttft_ticks_p50"] >= 1     # first token needs >= 1 tick
+    assert row["itl_s_p50"] >= 0.0

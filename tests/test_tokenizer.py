@@ -1,0 +1,61 @@
+"""ByteTokenizer edge cases: the text <-> ids bijection the serving path
+relies on (EOS retirement, prompt encoding, decode printing) at its
+boundaries — empty prompt, all-special streams, and the full byte range
+inside a reduced 512-vocab model.
+"""
+import numpy as np
+import pytest
+
+from repro.data.tokenizer import ByteTokenizer
+
+
+def test_empty_prompt():
+    tk = ByteTokenizer()
+    ids = tk.encode("", bos=False)
+    assert ids.shape == (0,) and ids.dtype == np.int32
+    assert tk.decode(ids) == ""
+    # with BOS the empty prompt is still a servable 1-token prompt
+    ids = tk.encode("")
+    assert ids.tolist() == [ByteTokenizer.BOS]
+    assert tk.decode(ids) == ""
+
+
+def test_all_special_token_stream_decodes_empty():
+    tk = ByteTokenizer()
+    stream = [ByteTokenizer.BOS, ByteTokenizer.EOS, ByteTokenizer.PAD,
+              ByteTokenizer.PAD]
+    assert tk.decode(np.asarray(stream, np.int32)) == ""
+    # out-of-range ids (a sampler emitting into the 259..511 reduced-vocab
+    # tail, or negative garbage) are stripped too, never crash decode
+    assert tk.decode([300, 511, -1, 65]) == "A"
+
+
+def test_bos_eos_framing():
+    tk = ByteTokenizer()
+    ids = tk.encode("hi", eos=True)
+    assert ids[0] == ByteTokenizer.BOS and ids[-1] == ByteTokenizer.EOS
+    assert ids[1:-1].tolist() == list(b"hi")
+    assert tk.decode(ids) == "hi"
+
+
+def test_round_trip_full_byte_range_within_512_vocab():
+    """Every byte value round-trips exactly, and every emitted id fits the
+    reduced() vocab of 512 — the boundary the serve smokes run at."""
+    tk = ByteTokenizer(vocab=512)
+    text = "".join(chr(i) for i in range(256)) + " déjà-vu ∞"
+    ids = tk.encode(text, eos=True)
+    assert int(ids.max()) <= 258 < 512
+    assert int(ids.min()) >= 0
+    assert tk.decode(ids) == text
+
+
+def test_vocab_too_small_rejected():
+    with pytest.raises(ValueError, match="cannot hold"):
+        ByteTokenizer(vocab=ByteTokenizer.vocab_size - 1)
+    ByteTokenizer(vocab=ByteTokenizer.vocab_size)   # exact fit is fine
+
+
+def test_round_trip_arbitrary_unicode():
+    tk = ByteTokenizer()
+    for text in ("", "plain ascii", "emoji 🙂🙃", "mixed ©®µ¶ text\n\ttabs"):
+        assert tk.decode(tk.encode(text)) == text
