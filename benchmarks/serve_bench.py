@@ -45,6 +45,11 @@ Scenarios:
                 excluded by a warmup workload that touches every signature
                 before the clock starts
 
+  moe           MoE routing telemetry on deepseek-moe: identical traffic at
+                router-capacity headroom vs a drop-forcing capacity_factor,
+                reporting per-expert utilization and the drop rate straight
+                from Server.stats (docs/MOE.md) — the columns the EP serving
+                deployment monitors
   multi-tenant  two tenants (pure-attn + windowed arch, different precision
                 policies) co-scheduled on ONE shared page pool with prefix
                 sharing, preemption and the tiered (device→host→disk)
@@ -215,6 +220,40 @@ def spec_rows(arch="llama3.2-3b", *, requests=6, slots=2, cache_len=64,
             4, 17)),)).astype(np.int32), max_new) for i in range(requests)]
         rows.append(_run_one(cfg, sparams, reqs, label=label, scenario="spec",
                              **kw, **skw))
+    return rows
+
+
+def moe_rows(arch="deepseek-moe-16b", *, requests=6, slots=2, cache_len=64,
+             page_size=8):
+    """The `moe` scenario: identical mixed-length traffic through an MoE
+    arch at two router capacities — the reduced default (capacity_factor=8,
+    headroom for every top-k assignment) vs a deliberately tight 0.5 that
+    forces slot-overflow drops. The routing telemetry the server accumulates
+    (Server.stats: moe_routed / moe_dropped / moe_expert_tokens, see
+    docs/MOE.md §Stats) surfaces as per-row columns: `moe_drop_rate` is
+    dropped/routed, `moe_expert_util` each expert's share of the kept
+    assignments. Single-process rows — EP changes the *placement* of this
+    exact computation, not the counters (tests/test_moe_serving.py holds the
+    stats shard-count-invariant), so the utilization/drop columns here stand
+    for the sharded deployment too."""
+    rows = []
+    for label, cap in (("capacity-headroom", None), ("capacity-tight", 0.5)):
+        cfg = get_config(arch).reduced()
+        if cap is not None:
+            cfg = dataclasses.replace(cfg, capacity_factor=cap)
+        params = transformer.init(jax.random.PRNGKey(0), cfg)
+        sparams = transformer.pack_for_serve(params, cfg)
+        row = _run_one(
+            cfg, sparams, _mixed_traffic(cfg, requests, np.random.default_rng(5)),
+            label=label, scenario="moe", slots=slots, cache_len=cache_len,
+            paged=True, page_size=page_size)
+        et = row.pop("moe_expert_tokens")
+        kept = sum(et)
+        row["capacity_factor"] = cfg.capacity_factor
+        row["moe_drop_rate"] = row["moe_dropped"] / max(row["moe_routed"], 1)
+        row["moe_expert_util"] = "|".join(
+            f"{v / max(kept, 1):.3f}" for v in et)
+        rows.append(row)
     return rows
 
 
@@ -530,7 +569,7 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--scenario", default="all",
                     choices=("all", "scheduler", "decode-attn", "poisson",
-                             "spec", "multi-tenant"),
+                             "spec", "multi-tenant", "moe"),
                     help="'scheduler' = the mixed/shared-prefix/"
                          "oversubscribed trio; 'poisson' = the open-loop "
                          "arrival-process scenario only (the CI serving-lane "
@@ -538,7 +577,9 @@ def main(argv=None):
                          "draft-friendly snapped w4a8 weights; "
                          "'multi-tenant' = two archs x two policies on one "
                          "shared pool + tiered cache, with a cold-restart "
-                         "prefix-reuse pass")
+                         "prefix-reuse pass; 'moe' = MoE routing telemetry "
+                         "(expert utilization + drop rate) at headroom vs "
+                         "drop-forcing router capacity")
     ap.add_argument("--tier-dir", default=None,
                     help="disk-slab directory for the multi-tenant "
                          "scenario's tiered cache (default: a temp dir)")
@@ -637,6 +678,23 @@ def main(argv=None):
                    multi_tenant_restart_prefill_skips=reuse_skips,
                    multi_tenant_restart_ttft_p50_speedup=ttft_x)
         all_rows += mrows
+
+    if args.scenario in ("all", "moe"):
+        qrows = moe_rows()
+        _print_rows(qrows, "# moe scenario (identical traffic, router "
+                           "capacity headroom vs drop-forcing; utilization "
+                           "= share of kept top-k assignments per expert)")
+        tight = next(r for r in qrows if r["config"] == "capacity-tight")
+        head = next(r for r in qrows if r["config"] == "capacity-headroom")
+        print(f"# moe routing: drop-rate {tight['moe_drop_rate']:.1%} at "
+              f"capacity_factor={tight['capacity_factor']} vs "
+              f"{head['moe_drop_rate']:.1%} at headroom; expert util "
+              f"[{head['moe_expert_util']}] (acceptance: headroom arm "
+              f"drops nothing, tight arm drops > 0)")
+        out.update(moe_rows=qrows,
+                   moe_tight_drop_rate=tight["moe_drop_rate"],
+                   moe_headroom_drop_rate=head["moe_drop_rate"])
+        all_rows += qrows
 
     if args.scenario in ("all", "decode-attn"):
         attn_rows = decode_attn_rows()

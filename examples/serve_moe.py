@@ -1,0 +1,28 @@
+"""Expert-parallel MoE serving on a minimal two-device mesh.
+
+    PYTHONPATH=src python examples/serve_moe.py [--dense]
+
+Serves the reduced deepseek-moe config (4 routed experts, top-2, one shared
+expert) on a forced two-CPU-device ("data", "model") = (1, 2) mesh: the
+expert stacks shard over the model axis and each device runs only its two
+local experts on their capacity-dispatched token slabs — the grouped expert
+dispatch of docs/MOE.md. The server prints the routing telemetry
+(moe_routed / moe_dropped / moe_expert_tokens) with the rest of its stats;
+routing is replicated and deterministic, so the tokens AND the counters are
+bit-identical to the dense-expert-vmap path (--dense re-runs with
+--no-moe-ep so you can diff the two yourself).
+"""
+import os
+import sys
+
+# must be set before jax initializes: fake 2 CPU devices for the mesh
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+from repro.launch import serve
+
+args = ["--arch", "deepseek-moe-16b", "--reduced", "--paged",
+        "--mesh", "1,2", "--requests", "4", "--max-new", "8",
+        "--slots", "2", "--cache-len", "64", "--page-size", "8"]
+if "--dense" in sys.argv:
+    args.append("--no-moe-ep")
+serve.main(args)

@@ -290,7 +290,7 @@ def serve_param_shapes(spec: QLinearSpec) -> dict[str, jax.ShapeDtypeStruct]:
 def apply(p: Params, x: jnp.ndarray, spec: QLinearSpec, *,
           mode: str = "train", op=None, impl: str | None = None,
           backend: str | None = None, wire: str = "dense",
-          tp=None) -> jnp.ndarray:
+          tp=None, ep=None) -> jnp.ndarray:
     """Apply the quantized linear. See module docstring for modes.
 
     Serve mode routes every operating point through
@@ -301,11 +301,13 @@ def apply(p: Params, x: jnp.ndarray, spec: QLinearSpec, *,
     formulation/backend/tile from the execution context; None derives it
     from the spec plus the legacy `impl=`/`backend=` string kwargs. `tp`
     (a `dispatch.TPSpec`) runs the GEMM under shard_map in the layer's
-    `spec.parallel` role (tensor-parallel serve)."""
+    `spec.parallel` role (tensor-parallel serve); `ep` (a
+    `dispatch.EPSpec`) runs expert stacks via the grouped expert-parallel
+    dispatch instead of the replicated dense vmap."""
     if mode == "train":
         return _apply_train(p, x, spec, wire)
     if mode != "serve":
         raise ValueError(f"mode={mode!r}")
     from repro.kernels.dispatch import qgemm   # deferred: core must not pull
     return qgemm(p, x, spec, op, impl=impl, backend=backend,  # pallas at import
-                 tp=tp, parallel=spec.parallel)
+                 tp=tp, ep=ep, parallel=spec.parallel)

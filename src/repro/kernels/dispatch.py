@@ -523,6 +523,180 @@ _K_AXIS = {"w_packed": -1, "w_mask": -1, "w_sign": -1, "w_q4": -1,
            "w_planes": -1, "w_q": -2, "w": -2}
 
 
+# ---------------------------------------------------------------------------
+# expert parallelism: grouped qgemm under shard_map
+# ---------------------------------------------------------------------------
+#
+# MoE expert stacks carry a leading E axis that launch/sharding.py already
+# places over the "model" mesh axis. EPSpec makes the COMPUTE exploit that
+# placement: instead of every shard running all E experts (the dense expert
+# vmap, replicated work), each shard runs only its E/ns local experts on
+# their capacity-dispatched token slabs — the grouped expert dispatch.
+#
+#   up (parallel="column"):  each shard runs the COMPLETE per-expert qgemm
+#       (prep + acc + requant) on its local expert stack; the output stays
+#       expert-sharded over the model axis and the elementwise activation
+#       between up and down needs no collective.
+#   down (parallel="row"):   each shard's local int accumulators are zero-
+#       embedded into the full (E, M, N) at offset shard*e_loc and psum'd —
+#       ONE collective, before requant, mirroring row-parallel TP's recipe.
+#       Unlike TP-row's true K-reduction, every (e, m, n) element here is
+#       produced by exactly ONE shard (zeros elsewhere), so the psum is a
+#       disjoint ASSEMBLY — exact at any accumulator width (x + 0 == x in
+#       IEEE) — and narrow weight-only cells (bf16 accumulators, e.g. the
+#       w-ternary deepseek policy) are EP-shardable where TP-row must fall
+#       back to replicated compute. The replicated assembled output then
+#       feeds the combine einsum exactly as the single-device oracle does.
+#
+# Routing (models/moe.py) stays replicated: the router is tiny, and running
+# it identically everywhere keeps top-k/capacity drops deterministic and
+# bit-identical to the dense-vmap oracle.
+
+@dataclasses.dataclass(frozen=True)
+class EPSpec:
+    """Expert-parallel context threaded from the serve driver into qgemm.
+
+    Lives beside TPSpec: tp shards WITHIN a (possibly expert-stacked) layer
+    (N or packed-K over the model axis), ep shards the expert stack ITSELF
+    (leading E axis over the same axis). `ep_plan` arbitrates; when EP does
+    not apply the call falls through to the tp/vmap paths unchanged."""
+    mesh: Any                       # jax.sharding.Mesh
+    axis: str = "model"             # expert axis name on the mesh
+
+    @property
+    def size(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+
+def ep_shardable(n_experts: int, n_shards: int) -> bool:
+    """Whole-expert placement predicate: each shard must own an integral
+    number of expert stacks. Shared with launch/sharding's `fit_spec` drop
+    (E % shards != 0 replicates the leading axis there, and falls back to
+    the dense vmap here), so device layout and compute always agree."""
+    return n_experts > 0 and n_shards > 0 and n_experts % n_shards == 0
+
+
+def ep_plan(cell: GemmCell, spec, parallel: str, ep: "EPSpec | None"
+            ) -> str | None:
+    """Resolve the effective EP mode, or None => dense-vmap/TP fallback.
+
+    Guards: an expert stack, a live mesh axis with size > 1, whole experts
+    per shard (`ep_shardable`, the same predicate behind the sharding rules'
+    fit_spec drop), and a K axis that is a whole number of packed storage
+    units (`cell.k_quantum`, reusing pack.K_QUANTUM). E-axis sharding never
+    splits a packed word by construction — each expert's (N, K/q) planes
+    move whole — so the k-quantum check is a layout-integrity invariant,
+    not a divisibility-by-shards constraint like TP-row's."""
+    if ep is None or not spec.experts or parallel not in ("column", "row"):
+        return None
+    if ep.axis not in ep.mesh.axis_names:
+        return None
+    ns = ep.size
+    if ns <= 1 or not ep_shardable(spec.experts, ns):
+        return None
+    if spec.in_dim % cell.k_quantum:
+        return None
+    return parallel
+
+
+def _ep_pspec(ep: EPSpec, nm: str, v) -> P:
+    """Expert-stacked leaves shard their LEADING E axis; scalars and shared
+    leaves (a_scale) replicate."""
+    if v.ndim == 0 or nm == "a_scale":
+        return P(*([None] * v.ndim))
+    return P(ep.axis, *([None] * (v.ndim - 1)))
+
+
+def _ep_column(cell, p, x, spec, op, ep):
+    """Expert-sharded up projection: each shard runs the plain per-expert
+    qgemm (the dense-vmap path) on its local E/ns expert stack and token
+    slabs. No collective — the output stays expert-sharded over the model
+    axis, which is exactly the layout the elementwise activation and the
+    row-parallel down projection consume."""
+    mesh, ax, ns = ep.mesh, ep.axis, ep.size
+    e, k, n = spec.experts, spec.in_dim, spec.out_dim
+    lead = x.shape[:-1]
+    x3 = x.reshape(e, -1, k)
+    sub = dataclasses.replace(spec, experts=e // ns)
+    pspecs = {nm: _ep_pspec(ep, nm, v) for nm, v in p.items()}
+    fn = lambda pl_, xl: qgemm(pl_, xl, sub, op)
+    y = _shard_map(fn, mesh=mesh, in_specs=(pspecs, P(ax, None, None)),
+                   out_specs=P(ax, None, None))(p, x3)
+    return y.reshape(*lead, n)
+
+
+def _ep_row(cell, p, x, spec, op, ep):
+    """Expert-sharded down projection: per-local-expert accumulators, zero-
+    embedded into the full (E, M, N) at this shard's expert offset, ONE psum
+    over the model axis (the scatter-back), deferred global requant.
+
+    Exactness: the psum sums one real accumulator block with ns-1 zero
+    blocks per element — a disjoint assembly, exact at any width — so both
+    wide (int32) and narrow (bf16, weight-only) cells keep bit-identical
+    results vs the dense-vmap oracle. a_scale (per-row activation stats,
+    computed per expert slab exactly as the oracle computes them) is
+    assembled the same way for the wide cells' requant."""
+    mesh, ax, ns = ep.mesh, ep.axis, ep.size
+    e, k, n = spec.experts, spec.in_dim, spec.out_dim
+    e_loc = e // ns
+    lead = x.shape[:-1]
+    x3 = x.reshape(e, -1, k)
+    m = x3.shape[-2]
+    w_ops = _weight_ops(cell, op, p)
+    shared = {nm: p[nm] for nm in ("a_scale",) if nm in p}
+    use_pallas = op.backend == "pallas" and cell.body is not None
+    tile = _resolve_tile(op)
+    sub = dataclasses.replace(spec, experts=0)
+    has_ascale = cell.aprec != "none"   # _prep_bf16 returns a_scale=None
+
+    def local(x_loc, w_loc, sh):
+        idx = jax.lax.axis_index(ax)
+        x_ops, a_scale = jax.vmap(lambda x2d: cell.prep(x2d, sh, sub))(x_loc)
+        if use_pallas:
+            padm = (-m) % PAD_M
+            if padm:
+                x_ops = tuple(jnp.pad(v, ((0, 0), (0, padm), (0, 0)))
+                              for v in x_ops)
+            acc = harness.gemm_grouped(cell.body, x_ops, w_loc,
+                                       k=k, tile=tile, out="acc",
+                                       interpret=INTERPRET)[:, :m]
+        else:
+            acc = jax.vmap(lambda xo, wl: cell.acc(xo, wl, k))(x_ops, w_loc)
+
+        def scatter(v):
+            full = jnp.zeros((e,) + v.shape[1:], v.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, v, idx * e_loc, axis=0)
+
+        # THE expert-parallel collective: disjoint-embedding psum (assembly)
+        out = (scatter(acc), scatter(a_scale)) if has_ascale \
+            else (scatter(acc),)
+        return jax.tree.map(lambda v: jax.lax.psum(v, ax), out)
+
+    wspecs = tuple(_ep_pspec(ep, nm, p[nm]) for nm in cell.weight_names)
+    out_specs = (P(*([None] * x3.ndim)),)
+    if has_ascale:
+        out_specs = out_specs + (P(None, None),)
+    res = _shard_map(local, mesh=mesh,
+                     in_specs=(P(ax, None, None), wspecs,
+                               {nm: P() for nm in shared}),
+                     out_specs=out_specs)(x3, w_ops, shared)
+    acc = res[0]
+    a_scale = res[1] if has_ascale else None
+    w_scale, bias = p.get("w_scale"), p.get("b")
+    if cell.wide:
+        rq = lambda a, ws, asc, b=None: harness.requant(a, ws, asc, b)
+        if bias is not None:
+            y = jax.vmap(rq)(acc, w_scale, a_scale, bias)
+        else:
+            y = jax.vmap(rq)(acc, w_scale, a_scale)
+    else:
+        rqn = lambda a, ws, b=None: _requant_narrow(a, ws, b)
+        y = (jax.vmap(rqn)(acc, w_scale, bias) if bias is not None
+             else jax.vmap(rqn)(acc, w_scale))
+    return y.astype(jnp.bfloat16).reshape(*lead, n)
+
+
 def tp_plan(cell: GemmCell, spec, parallel: str, tp: TPSpec | None) -> str | None:
     """Resolve the effective TP mode, or None => replicated fallback.
 
@@ -696,7 +870,8 @@ def _requant_narrow(acc, w_scale, bias):
 
 
 def qgemm(p: dict, x: jnp.ndarray, spec, op: OperatingPoint | None = None, *,
-          tp: TPSpec | None = None, parallel: str = "none",
+          tp: TPSpec | None = None, ep: "EPSpec | None" = None,
+          parallel: str = "none",
           impl: str | None = None, backend: str | None = None) -> jnp.ndarray:
     """The serve-mode quantized GEMM: (..., K) -> (..., N) bf16.
 
@@ -718,6 +893,12 @@ def qgemm(p: dict, x: jnp.ndarray, spec, op: OperatingPoint | None = None, *,
     accumulator before requant. Both modes are bit-exact vs. the unsharded
     path; non-dividing shapes (and narrow-accumulator row cells) fall back
     to replicated compute — `tp_plan` is the single arbiter.
+
+    ep (expert stacks only) runs the grouped expert dispatch: each shard
+    computes only its local experts (see the EP section above). Checked
+    before tp — when `ep_plan` declines (non-dividing expert count, dead
+    axis) the call falls through to TP-within-expert, then the dense
+    expert vmap, all bit-exact vs. each other.
     """
     if op is None:
         op = OperatingPoint.for_spec(spec, impl=impl or "popcount",
@@ -731,6 +912,12 @@ def qgemm(p: dict, x: jnp.ndarray, spec, op: OperatingPoint | None = None, *,
             f"OperatingPoint {op.tag} does not match the layer's policy "
             f"assignment {spec.lq.tag} for {spec.name!r}")
     cell = lookup(op)
+    if spec.experts and ep is not None:
+        plan = ep_plan(cell, spec, parallel, ep)
+        if plan == "column":
+            return _ep_column(cell, p, x, spec, op, ep)
+        if plan == "row":
+            return _ep_row(cell, p, x, spec, op, ep)
     if tp is not None and parallel != "none":
         plan = tp_plan(cell, spec, parallel, tp)
         if plan == "column":

@@ -254,6 +254,31 @@ def gemm(body: MacBody, x_ops: Sequence[jnp.ndarray], w_ops: Sequence[jnp.ndarra
     )(*x_ops, *w_ops, w_scale, a_scale, bias)
 
 
+def gemm_grouped(body: MacBody, x_ops, w_ops, w_scale=None, a_scale=None,
+                 bias=None, *, k: int, tile: Tile | None = None,
+                 interpret: bool = True, out: str = "requant"):
+    """Grouped-expert entry point: `gemm` vmapped over a leading group axis.
+
+    Every operand (each x_op, each w_op, and any non-None scale/bias)
+    carries the same leading G axis; one Pallas launch runs per group
+    member on its own token slab — the segment-GEMM of the expert-parallel
+    MoE path (kernels.dispatch._ep_row). None operands stay None (they map
+    to `gemm`'s zero dummies), so the (M, N) algebra per group is exactly
+    `gemm`'s — grouped-vs-looped equivalence is an identity, not a check.
+    """
+    ops = {"x": tuple(x_ops), "w": tuple(w_ops)}
+    if w_scale is not None:
+        ops["ws"] = w_scale
+    if a_scale is not None:
+        ops["as"] = a_scale
+    if bias is not None:
+        ops["b"] = bias
+    fn = lambda d: gemm(body, d["x"], d["w"], d.get("ws"), d.get("as"),
+                        d.get("b"), k=k, tile=tile, interpret=interpret,
+                        out=out)
+    return jax.vmap(fn)(ops)
+
+
 def vmem_tile_bytes(body: MacBody, tile: Tile | None = None) -> int:
     """VMEM working set of one grid step (the kernel_bench tile model)."""
     tile = tile or Tile()

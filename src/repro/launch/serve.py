@@ -180,6 +180,7 @@ class Server:
                  prefix_share: bool = False, preempt: bool = False,
                  chunk_tokens: int = 0, dispatch_ahead: bool = True,
                  spec_draft: str | None = None, spec_k: int = 4,
+                 moe_ep: bool = True,
                  ctx: ModelCtx | None = None, mesh=None,
                  page_table=None, model_id: str | None = None,
                  tier=None, tier_watermark: int = 0):
@@ -197,6 +198,23 @@ class Server:
             self.ctx = dataclasses.replace(
                 self.ctx, tp=TPSpec(mesh=mesh, axis="model"))
             data_dim = int(mesh.shape["data"])
+            if cfg.n_experts and moe_ep:
+                # expert-parallel MoE: expert stacks are E-sharded over
+                # "model" (the serve param layout already places them there)
+                # and the grouped dispatch runs each shard's local experts
+                # only — see kernels/dispatch.py EP section. ep_plan falls
+                # back per layer when E % model_dim != 0, matching the
+                # sharding rules' fit_spec drop.
+                from repro.kernels.dispatch import EPSpec
+                self.ctx = dataclasses.replace(
+                    self.ctx, ep=EPSpec(mesh=mesh, axis="model"))
+        if cfg.n_experts:
+            # routing telemetry: the serve entry points return a third
+            # {"expert_tokens", "dropped"} value; _pop_moe queues it and
+            # _drain_moe folds it into Server.stats AFTER the tick's fix-up
+            # sync (converting at dispatch would sync the stream and kill
+            # the dispatch-ahead overlap)
+            self.ctx = dataclasses.replace(self.ctx, moe_stats=True)
         self.slots = slots
         # the CPU SPMD partitioner silently miscompiles batched serve steps
         # whose slot dim does not divide the data axis (wrong tokens, not an
@@ -367,6 +385,12 @@ class Server:
                       "admitted": 0, "prefill_skips": 0,
                       "tier_hits_device": 0, "tier_hits_host": 0,
                       "tier_hits_disk": 0}
+        if cfg.n_experts:
+            # moe_routed = total top-k assignments (kept + dropped);
+            # moe_expert_tokens[e] = assignments expert e actually served
+            self.stats.update({"moe_routed": 0, "moe_dropped": 0,
+                               "moe_expert_tokens": [0] * cfg.n_experts})
+        self._moe_pending: list = []
         # multi-tenant hooks (set by launch/multi_serve.MultiServer):
         # extern_demand() -> pages co-tenant running slots may still claim
         # (joins this server's conservative admission reservation);
@@ -448,6 +472,34 @@ class Server:
         return jax.jit(traced)
 
     # -- request lifecycle -----------------------------------------------------
+
+    def _pop_moe(self, res, count: bool = True):
+        """Strip the trailing MoE-stats leaf from a jitted serve-step result
+        (the ctx.moe_stats 3-tuple contract) and queue the device arrays for
+        the deferred drain. `count=False` drops the stats instead (the spec
+        DRAFT pass re-routes the same positions the verify step counts —
+        counting both would double-book). No-op when stats are off."""
+        if not self.ctx.moe_stats:
+            return res
+        *rest, st = res
+        if count and st is not None:
+            self._moe_pending.append(st)
+        return tuple(rest)
+
+    def _drain_moe(self):
+        """Fold queued per-call routing counters into Server.stats. Called at
+        the END of a tick, after fix-up already synced the device stream —
+        np.asarray here is free, while converting at dispatch would serialize
+        dispatch-ahead."""
+        for st in self._moe_pending:
+            et = np.asarray(st["expert_tokens"])
+            dropped = int(np.asarray(st["dropped"]))
+            self.stats["moe_dropped"] += dropped
+            self.stats["moe_routed"] += int(et.sum()) + dropped
+            self.stats["moe_expert_tokens"] = [
+                a + int(b)
+                for a, b in zip(self.stats["moe_expert_tokens"], et)]
+        self._moe_pending.clear()
 
     def submit(self, req: Request):
         if len(req.prompt) > self.buckets[-1]:
@@ -637,11 +689,11 @@ class Server:
         read = self.pt.table[s].copy()
         write = np.full_like(read, NULL_PAGE)
         toks = np.asarray([[req.prompt[-1]]], np.int32)
-        c_logits, self.cache = self._chunk(
+        c_logits, self.cache = self._pop_moe(self._chunk(
             self.params, self.cache, jnp.asarray(toks),
             jnp.asarray([n - 1], jnp.int32), jnp.asarray(read)[None],
             jnp.asarray(write)[None], jnp.asarray([1], jnp.int32),
-            jnp.asarray([0], jnp.int32))
+            jnp.asarray([0], jnp.int32)))
         req.out.append(self._sample(req, np.asarray(c_logits)[0, 0]))
         self.stats["prefill_skips"] += 1
 
@@ -677,8 +729,8 @@ class Server:
         bucket = self._bucket(n)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.prompt
-        logits, rc = self._prefill(self.params, jnp.asarray(toks),
-                                   jnp.asarray([n - 1], jnp.int32))
+        logits, rc = self._pop_moe(self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray([n - 1], jnp.int32)))
         req.out.append(self._sample(req, np.asarray(logits[0, -1])))
         if self.paged:
             pad = pages_for(bucket, self.page_size) - len(scatter_ids)
@@ -1104,9 +1156,10 @@ class Server:
             for s in live:
                 tokens[s, 0] = cur[s]
                 pos[s] = base[s] + j
-            dlogits, dcache = self._draft(self.params, dcache,
-                                          jnp.asarray(tokens),
-                                          jnp.asarray(pos), jnp.asarray(dtab))
+            dlogits, dcache = self._pop_moe(
+                self._draft(self.params, dcache, jnp.asarray(tokens),
+                            jnp.asarray(pos), jnp.asarray(dtab)),
+                count=False)   # verify re-routes these positions exactly
             rows = np.asarray(dlogits[:, 0])
             for s in live:
                 r = reqs[s]
@@ -1126,9 +1179,9 @@ class Server:
             tokens[s, :len(row)] = row
             pos0[s] = base[s]
             nreal[s] = keff[s]
-        vlogits, self.cache = self._verify(
+        vlogits, self.cache = self._pop_moe(self._verify(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos0),
-            jnp.asarray(table), jnp.asarray(table), jnp.asarray(nreal))
+            jnp.asarray(table), jnp.asarray(table), jnp.asarray(nreal)))
         vrows = np.asarray(vlogits)
         self.stats["spec_ticks"] += 1
         for s in active:
@@ -1153,6 +1206,7 @@ class Server:
             self.slot_pos[s] = base[s] + len(emitted)
         self._epoch += 1
         self._retire()   # truncates at a mid-batch EOS before retiring
+        self._drain_moe()
         return bool(any(r is not None for r in self.slot_req) or self.queue
                     or self.preempted)
 
@@ -1202,13 +1256,13 @@ class Server:
                 pos[s] = self.slot_pos[s]
             self.pos_trace.append(self.slot_pos[active].copy())
             if self.paged:
-                logits, self.cache = self._decode(
+                logits, self.cache = self._pop_moe(self._decode(
                     self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(pos), jnp.asarray(plan.table))
+                    jnp.asarray(pos), jnp.asarray(plan.table)))
             else:
-                logits, self.cache = self._decode(
+                logits, self.cache = self._pop_moe(self._decode(
                     self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(pos))
+                    jnp.asarray(pos)))
             greedy = not any(r.temperature > 0 for r in plan.reqs)
             if greedy:
                 # argmax on device, transfer (slots,) ints — not the whole
@@ -1221,13 +1275,13 @@ class Server:
             cs = chunk["slot"]
             chunk_req = self.slot_req[cs]
             self.stats["chunk_ticks"] += 1
-            c_logits, self.cache = self._chunk(
+            c_logits, self.cache = self._pop_moe(self._chunk(
                 self.params, self.cache, jnp.asarray(chunk["tokens"]),
                 jnp.asarray([chunk["pos0"]], jnp.int32),
                 jnp.asarray(chunk["read"])[None],
                 jnp.asarray(chunk["write"])[None],
                 jnp.asarray([chunk["nreal"]], jnp.int32),
-                jnp.asarray([chunk["last_idx"]], jnp.int32))
+                jnp.asarray([chunk["last_idx"]], jnp.int32)))
         # -- optimistic host advance (deterministic consequences of the
         # dispatch — token VALUES stay unknown until fix-up)
         for s in active:
@@ -1271,6 +1325,7 @@ class Server:
         quiet = (frozenset(self._prepared.will_retire)
                  if self._prepared is not None else frozenset())
         self._retire(quiet=quiet)
+        self._drain_moe()
         return bool(any(r is not None for r in self.slot_req) or self.queue
                     or self.preempted)
 
@@ -1381,6 +1436,16 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=4,
                     help="speculative window: draft K-1 tokens and verify "
                          "K rows per tick (with --spec-draft)")
+    ap.add_argument("--moe-ep", dest="moe_ep", action="store_true",
+                    default=True,
+                    help="expert-parallel MoE serving (default, MoE archs "
+                         "under --mesh): shard expert stacks over the "
+                         "'model' axis and run the grouped expert dispatch "
+                         "(each shard computes only its local experts); "
+                         "token-exact vs the dense expert vmap")
+    ap.add_argument("--no-moe-ep", dest="moe_ep", action="store_false",
+                    help="keep the replicated dense expert vmap under "
+                         "--mesh (oracle / fallback path)")
     ap.add_argument("--no-dispatch-ahead", dest="dispatch_ahead",
                     action="store_false", default=True,
                     help="disable double buffering (host prepares tick N+1 "
@@ -1442,6 +1507,7 @@ def main(argv=None):
                  chunk_tokens=args.chunk_tokens,
                  dispatch_ahead=args.dispatch_ahead,
                  spec_draft=args.spec_draft, spec_k=args.spec_k,
+                 moe_ep=args.moe_ep,
                  ctx=ModelCtx(mode="serve", backend=args.backend,
                               impl=args.impl, tune=tune,
                               paged_attn=args.paged_attn))
@@ -1512,6 +1578,16 @@ def main(argv=None):
     if args.paged:
         print(f"page pool: {srv.pt.usable_pages} usable pages x "
               f"{srv.pt.page_size} tokens, {srv.pt.free_pages} free at exit")
+    if cfg.n_experts:
+        routed = max(srv.stats["moe_routed"], 1)
+        et = srv.stats["moe_expert_tokens"]
+        util = [f"{v / max(sum(et), 1):.2f}" for v in et]
+        mode = "EP grouped dispatch" if srv.ctx.ep is not None \
+            else "dense expert vmap"
+        print(f"moe: {mode}, routed={srv.stats['moe_routed']} "
+              f"dropped={srv.stats['moe_dropped']} "
+              f"(drop-rate {srv.stats['moe_dropped'] / routed:.1%}), "
+              f"expert util {util}")
     if args.prefix_share or args.preempt:
         print(f"scheduler: shared_pages={srv.stats['shared_pages']} "
               f"cow_forks={srv.stats['cow_forks']} "

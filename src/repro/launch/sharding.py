@@ -6,7 +6,14 @@ Strategy (DESIGN.md §3):
     collective per block instead of two.
   * FSDP over "data": the non-TP weight dim is sharded over the data axis
     (ZeRO-3 via GSPMD; gathered per-layer under the scan).
-  * EP over "model" for MoE expert stacks (leading E axis).
+  * EP over "model" for MoE expert stacks (leading E axis). Under serve
+    (fsdp=False) this placement is exploited by compute: kernels.dispatch
+    runs the grouped expert dispatch (`_ep_column`/`_ep_row`) whose
+    shard_map in_specs are exactly these rules — each shard computes only
+    its local experts. `ep_plan`'s whole-expert guard (E % model == 0) and
+    `fit_spec`'s drop of non-dividing axes agree by construction: a config
+    whose expert count the axis can't split replicates the stack here AND
+    falls back to the dense expert vmap there (docs/MOE.md).
   * "pod" axis: pure DP — parameters are NOT sharded over pods (gathering
     weights over DCI every layer would drown; gradients all-reduce over pod
     instead).

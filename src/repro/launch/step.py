@@ -140,7 +140,12 @@ def make_compressed_train_step(cfg: ArchConfig, sp, opt, mesh: Mesh, *,
 def make_prefill_step(cfg: ArchConfig, sp, *, ctx: ModelCtx | None = None):
     """Serve prefill; every quantized matmul goes through
     kernels.dispatch.qgemm with a per-layer OperatingPoint — precisions from
-    the layer's policy assignment, formulation/backend/tune from ctx."""
+    the layer's policy assignment, formulation/backend/tune from ctx.
+
+    NOTE: under ctx.moe_stats the transformer entry points return a third
+    MoE routing-stats value (the serve driver's contract). The default ctx
+    here leaves it off, so these step builders — and the dry-run cells that
+    lower them via `jax.eval_shape(step, ...)[1]` — keep the 2-tuple shape."""
     ctx = ctx or ModelCtx(mode="serve")
 
     def prefill_step(params, batch):

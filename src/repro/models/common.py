@@ -49,6 +49,20 @@ class ModelCtx:
                                  # the cell's stack depth); other layers run
                                  # full precision. None everywhere but the
                                  # serve driver's draft pass.
+    ep: object | None = None     # kernels.dispatch.EPSpec: serve-mode expert
+                                 # parallelism — expert-stacked qgemms run the
+                                 # grouped dispatch (each shard computes only
+                                 # its local experts) instead of the
+                                 # replicated dense vmap. Set by the --mesh
+                                 # serving driver for MoE archs; None
+                                 # everywhere else.
+    moe_stats: bool = False      # surface per-step MoE routing stats: the
+                                 # top-level serve entry points return a third
+                                 # {"expert_tokens": (E,) i32, "dropped": i32}
+                                 # value summed over MoE blocks (Server.stats
+                                 # feeds on it). Off => 2-tuple returns, so
+                                 # non-MoE callers and lowering probes keep
+                                 # their shapes.
 
 
 TRAIN = ModelCtx(mode="train")
@@ -100,7 +114,8 @@ def linear_init(rng, spec: QLinearSpec, dtype=jnp.float32):
 def linear_apply(p, x, spec: QLinearSpec, ctx: ModelCtx):
     if ctx.mode == "serve":
         y = qlinear.apply(p, x, spec, mode="serve",
-                          op=operating_point(spec, ctx), tp=ctx.tp)
+                          op=operating_point(spec, ctx), tp=ctx.tp,
+                          ep=ctx.ep)
     else:
         y = qlinear.apply(p, x, spec, mode=ctx.mode, wire=ctx.fsdp_wire)
     return y.astype(ctx.dtype)

@@ -2,16 +2,27 @@
 
 Supports phi3.5-moe (16 experts, top-2) and deepseek-moe (2 shared + 64
 routed, top-6, fine-grained d_ff). Expert FFN weights carry a leading expert
-axis that `launch/sharding.py` places on the "model" mesh axis (EP); the
-dispatch/combine einsums then lower to all-to-alls — the collective-bound
-cell of the roofline study.
+axis that `launch/sharding.py` places on the "model" mesh axis (EP); under a
+serve mesh with `ctx.ep` set, the expert qgemms run the grouped expert
+dispatch (`kernels.dispatch._ep_column`/`_ep_row`) — each shard computes
+only its local experts on their capacity-dispatched token slabs, with one
+psum assembling the down projection (see docs/MOE.md).
 
 Router stays fp32 and unquantized (core.precision.ALWAYS_WIDE): it is tiny
-and accuracy-critical — BrainTTA's "sensitive layers stay wide" rule.
+and accuracy-critical — BrainTTA's "sensitive layers stay wide" rule. It is
+also REPLICATED under EP: every shard routes identically, which is what
+makes capacity drops deterministic and shard-count independent.
 
 Dispatch uses the dense (B,S,E,C) one-hot formulation: static shapes (SPMD-
 friendly), with token dropping at capacity. Sort-based ragged dispatch is the
 documented beyond-paper alternative (EXPERIMENTS.md §Perf).
+
+Determinism contract (the token-exact-vs-oracle bar): `jax.lax.top_k`
+breaks gate ties toward the lowest expert index, and capacity slots are
+assigned by flat (s*k) cumsum position — both pure functions of the gate
+values, no RNG, no device-count dependence. EP serving therefore drops
+exactly the tokens the single-device dense-vmap oracle drops, and
+`tests/test_moe_serving.py` holds the outputs bit-equal.
 """
 from __future__ import annotations
 
@@ -44,11 +55,13 @@ class MoESpecs:
 def moe_specs(cfg: ArchConfig, pol: PrecisionPolicy, *, first=False, last=False) -> MoESpecs:
     e, f, d = cfg.n_experts, cfg.d_ff, cfg.d_model
     up_out = 2 * f if cfg.gated_ffn else f
-    # serve TP: Megatron pairing *within* each expert — the expert axis stays
-    # unsharded (leading None in the shard_map specs) while each expert's
-    # up/down shard N / packed-K over the model axis; the row-parallel psum
-    # covers the whole expert stack in one collective (dispatch/combine
-    # einsums stay global). The router is tiny and replicated.
+    # serve meshes: the parallel= markers feed BOTH plans. EP (preferred,
+    # ctx.ep) shards the leading expert axis — column runs local experts
+    # with no collective, row assembles with one disjoint psum. When ep_plan
+    # declines (E % shards != 0), the same markers drive Megatron pairing
+    # *within* each expert — expert axis unsharded, each expert's up/down
+    # sharding N / packed-K, one row psum over the whole stack (dispatch/
+    # combine einsums stay global). The router is tiny and replicated.
     return MoESpecs(
         router=common.lspec(pol, "moe_router", d, e),
         up=common.lspec(pol, "moe_expert", d, up_out, first=first, last=last,
@@ -79,7 +92,16 @@ def _capacity(s: int, specs: MoESpecs) -> int:
 
 
 def moe_apply(p, x, specs: MoESpecs, ctx: ModelCtx):
-    """x: (B, S, D) -> (B, S, D). Dense-dispatch MoE with top-k routing."""
+    """x: (B, S, D) -> (B, S, D). Dense-dispatch MoE with top-k routing.
+
+    Returns (y, aux) where aux is a dict:
+      "loss"          — scalar Switch-style load-balancing term (train)
+      "expert_tokens" — (E,) int32, tokens·top-k assignments that landed a
+                        capacity slot on each expert this call (utilization)
+      "dropped"       — int32, assignments past capacity (dropped this call)
+    The counters are exact under EP because routing is replicated; the
+    serve driver accumulates them into `Server.stats` when ctx.moe_stats.
+    """
     b, s, d = x.shape
     e, k = specs.n_experts, specs.top_k
     c = _capacity(s, specs)
@@ -116,8 +138,13 @@ def moe_apply(p, x, specs: MoESpecs, ctx: ModelCtx):
     if specs.shared is not None:
         y = y + ffn.ffn_apply(p["shared"], x, specs.shared, ctx)
 
-    # aux load-balancing loss term (Switch-style), returned via metric side-car
+    # aux side-car: load-balancing loss term (Switch-style) + routing stats
     density = jnp.mean(jnp.sum(sel, axis=2), axis=(0, 1))        # (E,) token frac
     router_prob = jnp.mean(gates, axis=(0, 1))                   # (E,)
-    aux = e * jnp.sum(density * router_prob)
+    kept = sel * keep[..., None]                                 # (B,S,K,E)
+    aux = {
+        "loss": e * jnp.sum(density * router_prob),
+        "expert_tokens": jnp.sum(kept, axis=(0, 1, 2)).astype(jnp.int32),
+        "dropped": jnp.sum(1.0 - keep).astype(jnp.int32),
+    }
     return y, aux

@@ -110,11 +110,44 @@ def block_apply(p, x, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
         h2 = common.norm_apply(p["norm2"], x, cfg.norm)
         if bs.is_moe:
             y, a = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
-            aux = aux + a
+            aux = aux + a["loss"]
         else:
             y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
         x = x + y
     return x, aux
+
+
+def _moe_ffn(p, x, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx):
+    """Shared serve-path FFN tail: residual add + optional MoE stats.
+
+    Returns (x, st) where st is the block's routing-stat dict
+    ({"expert_tokens": (E,) i32, "dropped": i32}) iff this is an MoE block
+    and ctx.moe_stats is on, else None — the top-level entry points sum the
+    dicts across blocks (None is the empty contribution, so dense blocks in
+    a mixed pattern keep the scan carry structure constant)."""
+    st = None
+    if bs.ffn is None:
+        return x, st
+    h2 = common.norm_apply(p["norm2"], x, cfg.norm)
+    if bs.is_moe:
+        y, a = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
+        if ctx.moe_stats:
+            st = {"expert_tokens": a["expert_tokens"], "dropped": a["dropped"]}
+    else:
+        y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
+    return x + y, st
+
+
+def _moe_zero(cfg: ArchConfig):
+    """Zero routing-stat accumulator — the scan-carry seed when stats are on."""
+    return {"expert_tokens": jnp.zeros((cfg.n_experts,), jnp.int32),
+            "dropped": jnp.int32(0)}
+
+
+def _moe_add(tot, st):
+    if tot is None or st is None:
+        return tot
+    return jax.tree.map(lambda a, b: a + b, tot, st)
 
 
 def block_cache_shapes(cfg: ArchConfig, bs: BlockSpecs, batch: int, seq_len: int,
@@ -139,7 +172,10 @@ def block_cache_shapes(cfg: ArchConfig, bs: BlockSpecs, batch: int, seq_len: int
 
 def block_prefill(p, x, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
                   enc_out=None, cache_len: int = 0):
-    """Prefill: like block_apply but returns the decode cache."""
+    """Prefill: like block_apply but returns the decode cache.
+
+    Returns (x, cache, st) — st per `_moe_ffn` (None unless an MoE block
+    under ctx.moe_stats)."""
     h = common.norm_apply(p["norm1"], x, cfg.norm)
     cache = {}
     if bs.kind in ("attn", "local"):
@@ -160,14 +196,8 @@ def block_prefill(p, x, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx, *,
         cache["cross_k"], cache["cross_v"] = k, v
         hc = common.norm_apply(p["norm_cross"], x, cfg.norm)
         x = x + attention.cross_attn_apply(p["mixer"], hc, (k, v), bs.mixer, cfg, ctx)
-    if bs.ffn is not None:
-        h2 = common.norm_apply(p["norm2"], x, cfg.norm)
-        if bs.is_moe:
-            y, _ = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
-        else:
-            y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
-        x = x + y
-    return x, cache
+    x, st = _moe_ffn(p, x, bs, cfg, ctx)
+    return x, cache, st
 
 
 def _recurrent_prefill(pm, h, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx):
@@ -210,7 +240,9 @@ def _recurrent_prefill(pm, h, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx):
 
 def block_decode(p, x, cache, pos, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCtx,
                  *, pages=None):
-    """One-token decode through a block. x: (B,1,D); pos: scalar or (B,)."""
+    """One-token decode through a block. x: (B,1,D); pos: scalar or (B,).
+
+    Returns (x, cache, st) — st per `_moe_ffn`."""
     h = common.norm_apply(p["norm1"], x, cfg.norm)
     if bs.kind in ("attn", "local"):
         sub = {k: v for k, v in cache.items() if k in ("k", "v")}
@@ -232,19 +264,14 @@ def block_decode(p, x, cache, pos, bs: BlockSpecs, cfg: ArchConfig, ctx: ModelCt
         hc = common.norm_apply(p["norm_cross"], x, cfg.norm)
         x = x + attention.cross_attn_apply(
             p["mixer"], hc, (cache["cross_k"], cache["cross_v"]), bs.mixer, cfg, ctx)
-    if bs.ffn is not None:
-        h2 = common.norm_apply(p["norm2"], x, cfg.norm)
-        if bs.is_moe:
-            y, _ = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
-        else:
-            y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
-        x = x + y
-    return x, cache
+    x, st = _moe_ffn(p, x, bs, cfg, ctx)
+    return x, cache, st
 
 
 def block_chunk(p, x, cache, pos0, bs: BlockSpecs, cfg: ArchConfig,
                 ctx: ModelCtx, *, read_pages, write_pages, nreal):
     """Chunked-prefill through one block. x: (B, C, D); pos0: (B,).
+    Returns (x, cache, st) — st per `_moe_ffn`.
 
     Only full-attention blocks are chunkable: window rings and recurrent
     states have no pageable representation of a partial prefix (the server
@@ -259,14 +286,8 @@ def block_chunk(p, x, cache, pos0, bs: BlockSpecs, cfg: ArchConfig,
         read_pages=read_pages, write_pages=write_pages, nreal=nreal)
     cache = {**cache, **sub}
     x = x + m
-    if bs.ffn is not None:
-        h2 = common.norm_apply(p["norm2"], x, cfg.norm)
-        if bs.is_moe:
-            y, _ = moe.moe_apply(p["ffn"], h2, bs.ffn, ctx)
-        else:
-            y = ffn.ffn_apply(p["ffn"], h2, bs.ffn, ctx)
-        x = x + y
-    return x, cache
+    x, st = _moe_ffn(p, x, bs, cfg, ctx)
+    return x, cache, st
 
 
 def block_pack(p, bs: BlockSpecs):
@@ -561,6 +582,11 @@ def prefill(params, tokens, sp: ModelSpecs, ctx: ModelCtx, *, frontend_embeds=No
     right-padded to a bucket length (continuous-batching prefill); None =>
     the literal last column. Causal masking keeps real positions from
     attending to the padding, so the cache below `last_pos` is unaffected.
+
+    Under ctx.moe_stats (MoE archs), returns (logits, cache, moe_stats) —
+    the per-block routing counters summed over the stack. NOTE: prefill
+    routes padding rows too, so expert_tokens/dropped include bucket-padding
+    traffic (same for the sequential oracle — counters stay comparable).
     """
     cfg = sp.cfg
     x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
@@ -571,28 +597,38 @@ def prefill(params, tokens, sp: ModelSpecs, ctx: ModelCtx, *, frontend_embeds=No
         x = jnp.concatenate([frontend_embeds.astype(ctx.dtype), x], axis=1)
     cache_len = cache_len or x.shape[1]
 
+    moe_tot = _moe_zero(cfg) if (ctx.moe_stats and cfg.n_experts) else None
     caches: dict[str, Any] = {}
-    x, caches["first"] = block_prefill(params["first"], x, sp.first, cfg, ctx,
-                                       enc_out=enc_out, cache_len=cache_len)
+    x, caches["first"], st = block_prefill(params["first"], x, sp.first, cfg, ctx,
+                                           enc_out=enc_out, cache_len=cache_len)
+    moe_tot = _moe_add(moe_tot, st)
     if sp.n_periods:
-        def period(xx, pp):
+        def period(carry, pp):
+            xx, tot = carry
             cs = {}
             for t, bs in enumerate(sp.mid):
-                xx, cs[f"b{t}"] = block_prefill(pp[f"b{t}"], xx, bs, cfg, ctx,
-                                                enc_out=enc_out, cache_len=cache_len)
-            return xx, cs
-        x, caches["mid"] = jax.lax.scan(period, x, params["mid"])
+                xx, cs[f"b{t}"], st = block_prefill(pp[f"b{t}"], xx, bs, cfg, ctx,
+                                                    enc_out=enc_out,
+                                                    cache_len=cache_len)
+                tot = _moe_add(tot, st)
+            return (xx, tot), cs
+        (x, moe_tot), caches["mid"] = jax.lax.scan(period, (x, moe_tot),
+                                                   params["mid"])
     for t, bs in enumerate(sp.rem):
-        x, caches[f"rem{t}"] = block_prefill(params[f"rem{t}"], x, bs, cfg, ctx,
-                                             enc_out=enc_out, cache_len=cache_len)
-    x, caches["last"] = block_prefill(params["last"], x, sp.last, cfg, ctx,
-                                      enc_out=enc_out, cache_len=cache_len)
+        x, caches[f"rem{t}"], st = block_prefill(params[f"rem{t}"], x, bs, cfg, ctx,
+                                                 enc_out=enc_out, cache_len=cache_len)
+        moe_tot = _moe_add(moe_tot, st)
+    x, caches["last"], st = block_prefill(params["last"], x, sp.last, cfg, ctx,
+                                          enc_out=enc_out, cache_len=cache_len)
+    moe_tot = _moe_add(moe_tot, st)
     if last_pos is None:
         x_last = x[:, -1:]
     else:
         idx = jnp.asarray(last_pos, jnp.int32).reshape(-1, 1, 1)
         x_last = jnp.take_along_axis(x, idx, axis=1)
     logits = _logits(params, x_last, sp, ctx)
+    if ctx.moe_stats:
+        return logits, caches, moe_tot
     return logits, caches
 
 
@@ -601,29 +637,38 @@ def _chunk_stack(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx,
     """Shared multi-token paged traversal: embed `tokens` (B, C) and run the
     chunk path (attention reads prior pool KV + the chunk's own causal
     prefix, writes the chunk KV through `write_pages`) through every block.
-    Returns (hidden (B, C, D), new_cache). Backs both `prefill_chunk`
+    Returns (hidden (B, C, D), new_cache, moe_tot) — moe_tot per the
+    ctx.moe_stats contract (None when off). Backs both `prefill_chunk`
     (chunked prompt prefill) and `decode_verify` (speculative multi-token
     verification) — one algebra, two logits policies."""
     cfg = sp.cfg
     x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
+    moe_tot = _moe_zero(cfg) if (ctx.moe_stats and cfg.n_experts) else None
     new_cache: dict[str, Any] = {}
-    x, new_cache["first"] = block_chunk(params["first"], x, cache["first"], pos0,
-                                        sp.first, cfg, ctx, **kw)
+    x, new_cache["first"], st = block_chunk(params["first"], x, cache["first"], pos0,
+                                            sp.first, cfg, ctx, **kw)
+    moe_tot = _moe_add(moe_tot, st)
     if sp.n_periods:
-        def period(xx, scanned):
+        def period(carry, scanned):
+            xx, tot = carry
             pp, cc = scanned
             ncs = {}
             for t, bs in enumerate(sp.mid):
-                xx, ncs[f"b{t}"] = block_chunk(pp[f"b{t}"], xx, cc[f"b{t}"], pos0,
-                                               bs, cfg, ctx, **kw)
-            return xx, ncs
-        x, new_cache["mid"] = jax.lax.scan(period, x, (params["mid"], cache["mid"]))
+                xx, ncs[f"b{t}"], st = block_chunk(pp[f"b{t}"], xx, cc[f"b{t}"],
+                                                   pos0, bs, cfg, ctx, **kw)
+                tot = _moe_add(tot, st)
+            return (xx, tot), ncs
+        (x, moe_tot), new_cache["mid"] = jax.lax.scan(
+            period, (x, moe_tot), (params["mid"], cache["mid"]))
     for t, bs in enumerate(sp.rem):
-        x, new_cache[f"rem{t}"] = block_chunk(params[f"rem{t}"], x, cache[f"rem{t}"],
-                                              pos0, bs, cfg, ctx, **kw)
-    x, new_cache["last"] = block_chunk(params["last"], x, cache["last"], pos0,
-                                       sp.last, cfg, ctx, **kw)
-    return x, new_cache
+        x, new_cache[f"rem{t}"], st = block_chunk(params[f"rem{t}"], x,
+                                                  cache[f"rem{t}"], pos0, bs,
+                                                  cfg, ctx, **kw)
+        moe_tot = _moe_add(moe_tot, st)
+    x, new_cache["last"], st = block_chunk(params["last"], x, cache["last"], pos0,
+                                           sp.last, cfg, ctx, **kw)
+    moe_tot = _moe_add(moe_tot, st)
+    return x, new_cache, moe_tot
 
 
 def prefill_chunk(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx, *,
@@ -644,10 +689,12 @@ def prefill_chunk(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx, *,
     so the sampled first token matches the sequential oracle.
     """
     kw = dict(read_pages=read_pages, write_pages=write_pages, nreal=nreal)
-    x, new_cache = _chunk_stack(params, cache, tokens, pos0, sp, ctx, kw)
+    x, new_cache, moe_tot = _chunk_stack(params, cache, tokens, pos0, sp, ctx, kw)
     idx = jnp.asarray(last_idx, jnp.int32).reshape(-1, 1, 1)
     x_last = jnp.take_along_axis(x, idx, axis=1)
     logits = _logits(params, x_last, sp, ctx)
+    if ctx.moe_stats:
+        return logits, new_cache, moe_tot
     return logits, new_cache
 
 
@@ -673,8 +720,10 @@ def decode_verify(params, cache, tokens, pos0, sp: ModelSpecs, ctx: ModelCtx, *,
     before dispatch (see launch/serve.py `_spec_tick`).
     """
     kw = dict(read_pages=read_pages, write_pages=write_pages, nreal=nreal)
-    x, new_cache = _chunk_stack(params, cache, tokens, pos0, sp, ctx, kw)
+    x, new_cache, moe_tot = _chunk_stack(params, cache, tokens, pos0, sp, ctx, kw)
     logits = _logits(params, x, sp, ctx)
+    if ctx.moe_stats:
+        return logits, new_cache, moe_tot
     return logits, new_cache
 
 
@@ -687,26 +736,39 @@ def decode_step(params, cache, tokens, pos, sp: ModelSpecs, ctx: ModelCtx, *,
     `init_cache(..., paged=(num_pages, page_size))`; full-attention layers
     then write/read through the page lists (see launch/kv_cache.py).
 
-    This is the `serve_step` the decode_* dry-run shapes lower.
+    This is the `serve_step` the decode_* dry-run shapes lower. Under
+    ctx.moe_stats, returns (logits, cache, moe_stats) — counters include the
+    padding/parked slots in the batch (they decode like real slots; the
+    oracle pads identically, so comparisons stay exact).
     """
     cfg = sp.cfg
     x = common.shard_act(common.embed_apply(params["embed"], tokens, ctx.dtype), ctx)
+    moe_tot = _moe_zero(cfg) if (ctx.moe_stats and cfg.n_experts) else None
     new_cache: dict[str, Any] = {}
-    x, new_cache["first"] = block_decode(params["first"], x, cache["first"], pos,
-                                         sp.first, cfg, ctx, pages=pages)
+    x, new_cache["first"], st = block_decode(params["first"], x, cache["first"], pos,
+                                             sp.first, cfg, ctx, pages=pages)
+    moe_tot = _moe_add(moe_tot, st)
     if sp.n_periods:
-        def period(xx, scanned):
+        def period(carry, scanned):
+            xx, tot = carry
             pp, cc = scanned
             ncs = {}
             for t, bs in enumerate(sp.mid):
-                xx, ncs[f"b{t}"] = block_decode(pp[f"b{t}"], xx, cc[f"b{t}"], pos,
-                                                bs, cfg, ctx, pages=pages)
-            return xx, ncs
-        x, new_cache["mid"] = jax.lax.scan(period, x, (params["mid"], cache["mid"]))
+                xx, ncs[f"b{t}"], st = block_decode(pp[f"b{t}"], xx, cc[f"b{t}"],
+                                                    pos, bs, cfg, ctx, pages=pages)
+                tot = _moe_add(tot, st)
+            return (xx, tot), ncs
+        (x, moe_tot), new_cache["mid"] = jax.lax.scan(
+            period, (x, moe_tot), (params["mid"], cache["mid"]))
     for t, bs in enumerate(sp.rem):
-        x, new_cache[f"rem{t}"] = block_decode(params[f"rem{t}"], x, cache[f"rem{t}"],
-                                               pos, bs, cfg, ctx, pages=pages)
-    x, new_cache["last"] = block_decode(params["last"], x, cache["last"], pos,
-                                        sp.last, cfg, ctx, pages=pages)
+        x, new_cache[f"rem{t}"], st = block_decode(params[f"rem{t}"], x,
+                                                   cache[f"rem{t}"], pos, bs,
+                                                   cfg, ctx, pages=pages)
+        moe_tot = _moe_add(moe_tot, st)
+    x, new_cache["last"], st = block_decode(params["last"], x, cache["last"], pos,
+                                            sp.last, cfg, ctx, pages=pages)
+    moe_tot = _moe_add(moe_tot, st)
     logits = _logits(params, x, sp, ctx)
+    if ctx.moe_stats:
+        return logits, new_cache, moe_tot
     return logits, new_cache

@@ -81,8 +81,69 @@ def test_prefill_decode_matches_forward(arch, built):
     np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("arch", ["deepseek-moe-16b", "phi3.5-moe-42b-a6.6b"])
+def test_moe_router_topk_shapes(arch, built):
+    """Router/top-k geometry on the reduced MoE archs: the router spec is a
+    (D -> E) linear, each token lands exactly top_k assignments, and the aux
+    counters account for every one (kept + dropped == B*S*top_k)."""
+    from repro.core.precision import get_policy
+    from repro.models import moe
+
+    cfg, sp, params = built(arch)
+    pol = get_policy(cfg.policy)
+    specs = moe.moe_specs(cfg, pol)
+    assert specs.router.in_dim == cfg.d_model
+    assert specs.router.out_dim == cfg.n_experts
+    assert 0 < specs.top_k <= specs.n_experts
+
+    p = moe.moe_init(jax.random.PRNGKey(5), specs)
+    b, s = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(6), (b, s, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe.moe_apply(p, x, specs, ModelCtx(mode="train",
+                                                 dtype=jnp.float32))
+    assert y.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(y))), arch
+    et = np.asarray(aux["expert_tokens"])
+    assert et.shape == (cfg.n_experts,) and et.dtype == np.int32
+    assert int(et.sum()) + int(aux["dropped"]) == b * s * specs.top_k
+    assert np.isfinite(float(aux["loss"]))
+
+
+def test_moe_shared_expert_path(built):
+    """deepseek's always-on shared expert really contributes: its reduced
+    config keeps one shared expert (params carry a 'shared' FFN whose spec
+    widens d_ff by n_shared), and zeroing that FFN changes the block output.
+    phi3.5 has no shared expert — no 'shared' leaf, same top-level keys
+    otherwise."""
+    from repro.core.precision import get_policy
+    from repro.models import moe
+
+    cfg, _, _ = built("deepseek-moe-16b")
+    assert cfg.n_shared_experts == 1
+    pol = get_policy(cfg.policy)
+    specs = moe.moe_specs(cfg, pol)
+    assert specs.shared is not None
+    p = moe.moe_init(jax.random.PRNGKey(7), specs)
+    assert "shared" in p
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 8, cfg.d_model),
+                          jnp.float32)
+    ctx = ModelCtx(mode="train", dtype=jnp.float32)
+    y, _ = moe.moe_apply(p, x, specs, ctx)
+    p0 = dict(p, shared=jax.tree.map(jnp.zeros_like, p["shared"]))
+    y0, _ = moe.moe_apply(p0, x, specs, ctx)
+    assert bool(jnp.any(y != y0))
+
+    cfg_phi, _, _ = built("phi3.5-moe-42b-a6.6b")
+    specs_phi = moe.moe_specs(cfg_phi, get_policy(cfg_phi.policy))
+    assert specs_phi.shared is None
+    p_phi = moe.moe_init(jax.random.PRNGKey(9), specs_phi)
+    assert "shared" not in p_phi
+    assert set(p_phi) == set(p) - {"shared"}
+
+
 @pytest.mark.parametrize("arch", ["llama3.2-3b", "xlstm-125m", "recurrentgemma-9b",
-                                  "deepseek-moe-16b"])
+                                  "deepseek-moe-16b", "phi3.5-moe-42b-a6.6b"])
 def test_serve_packed_forward(arch, built):
     """pack_for_serve params run the serve path without NaNs."""
     cfg, sp, params = built(arch)

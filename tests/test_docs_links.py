@@ -1,0 +1,64 @@
+"""Docs link check: every relative markdown link in README.md and docs/*.md
+must point at a file that exists in the repo. External (http/https/mailto)
+targets are out of scope; fragment-only links (#section) are checked against
+the file's own headings. This is the CI gate that keeps the docs map honest
+as files move."""
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_DOCS = sorted(
+    [os.path.join(REPO, "README.md")]
+    + [os.path.join(REPO, "docs", f)
+       for f in os.listdir(os.path.join(REPO, "docs")) if f.endswith(".md")]
+)
+
+# [text](target) — excluding images is unnecessary (image paths must exist
+# too); nested brackets in link text don't occur in these docs
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug (enough of it for these docs)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {_anchor(m.group(1)) for m in _HEADING.finditer(f.read())}
+
+
+@pytest.mark.parametrize("doc", _DOCS, ids=[os.path.relpath(d, REPO) for d in _DOCS])
+def test_no_dead_relative_links(doc):
+    with open(doc, encoding="utf-8") as f:
+        text = f.read()
+    dead = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, frag = target.partition("#")
+        if not path:                       # same-file #fragment
+            if _anchor(frag) not in _anchors(doc):
+                dead.append(target + " (no such heading)")
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(doc), path))
+        if not os.path.exists(resolved):
+            dead.append(target)
+        elif frag and path.endswith(".md") \
+                and _anchor(frag) not in _anchors(resolved):
+            dead.append(target + " (no such heading)")
+    assert not dead, f"dead links in {os.path.relpath(doc, REPO)}: {dead}"
+
+
+def test_docs_inventory_nonempty():
+    """The parametrized sweep silently passes on an empty list; pin the
+    inventory so a bad glob can't turn the gate off."""
+    names = {os.path.basename(d) for d in _DOCS}
+    assert {"README.md", "SERVING.md", "DISPATCH.md", "MOE.md"} <= names

@@ -88,9 +88,14 @@ def test_moe_identity_experts_preserve_combine_weights():
     params, x, specs = _moe_setup(capacity_factor=8.0)
     y, aux = moe.moe_apply(params, x, specs, F32)
     assert y.shape == x.shape
-    assert np.isfinite(float(aux))
+    assert np.isfinite(float(aux["loss"]))
     # aux loss near its e*sum(f*p) ~ 1 optimum for near-uniform routing
-    assert 0.5 < float(aux) < 4.0
+    assert 0.5 < float(aux["loss"]) < 4.0
+    # routing-stat side-car: every kept assignment counted, none dropped at
+    # the smoke capacity factor
+    b, s = x.shape[:2]
+    assert int(aux["dropped"]) == 0
+    assert int(np.sum(np.asarray(aux["expert_tokens"]))) == b * s * specs.top_k
 
 
 @given(st.integers(0, 10**5))
@@ -112,7 +117,7 @@ def test_moe_grads_reach_router_and_experts():
     params, x, specs = _moe_setup()
     def loss(p):
         y, aux = moe.moe_apply(p, x, specs, F32)
-        return jnp.sum(y ** 2) + 0.01 * aux
+        return jnp.sum(y ** 2) + 0.01 * aux["loss"]
     g = jax.grad(loss)(params)
     assert float(jnp.sum(jnp.abs(g["router"]["w"]))) > 0
     assert float(jnp.sum(jnp.abs(g["up"]["w"]))) > 0

@@ -1,0 +1,202 @@
+"""Expert-parallel MoE serving lockdown: the grouped expert dispatch on a
+("data", "model") mesh must be TOKEN-EXACT against the single-device
+dense-vmap server, drops included.
+
+Why exactness is achievable (and therefore demanded): routing is replicated
+and deterministic (jax.lax.top_k breaks ties to the lowest expert index,
+capacity slots come from a cumsum — no RNG, no device-count dependence), so
+every shard agrees on which token goes to which expert slot and which
+assignments drop. The up projection computes local experts with no
+collective; the down projection zero-embeds each shard's local accumulators
+into the full (E, M, N) and psums — a DISJOINT assembly (one real producer
+per element, x + 0 == x), exact at any accumulator width, which is what lets
+the narrow weight-only deepseek policy ("ternary"/"none" cells) EP-shard
+where TP-row must fall back. Any relaxation — a float reduction over a
+shared element, per-shard routing, capacity depending on shard count —
+shows up here as a token mismatch, not a tolerance warning.
+
+Runs in a subprocess with --xla_force_host_platform_device_count=8 (same
+pattern as test_serving_tp.py) so the device-count flag can't leak into the
+rest of the suite.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str) -> subprocess.CompletedProcess:
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    return subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, env=env, cwd=REPO, timeout=900)
+
+
+SCRIPT_QGEMM = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8
+from repro.core import qlinear
+from repro.core.precision import LayerQuant
+from repro.core.quantize import QuantSpec
+from repro.kernels import dispatch
+from repro.kernels.dispatch import OperatingPoint
+
+MESH = jax.make_mesh((2, 4), ("data", "model"))
+
+def build(wprec, aprec, bias, experts, k, parallel, seed=0):
+    spec = qlinear.QLinearSpec(
+        k, 32, LayerQuant(QuantSpec(wprec), QuantSpec(aprec)),
+        use_bias=bias, experts=experts, parallel=parallel)
+    p = qlinear.init(jax.random.PRNGKey(seed), spec)
+    if bias:
+        p["b"] = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                   p["b"].shape) * 0.1
+    return spec, qlinear.pack_params(p, spec)
+
+def check(cellkey, parallel, experts, backend, bias):
+    wprec, aprec, impl = cellkey
+    impl_arg = "popcount" if impl == "*" else impl
+    spec, p = build(wprec, aprec, bias, experts, 64, parallel)
+    op = OperatingPoint.for_spec(spec, impl=impl_arg, backend=backend)
+    x = jax.random.normal(jax.random.PRNGKey(experts), (experts, 5, 64)) * 0.2
+    ref = dispatch.qgemm(p, x, spec, op)                       # dense-vmap oracle
+    ep = dispatch.EPSpec(MESH)
+    plan = dispatch.ep_plan(dispatch.lookup(op), spec, parallel, ep)
+    y = dispatch.qgemm(p, x, spec, op, ep=ep, parallel=parallel)
+    assert y.shape == ref.shape and y.dtype == ref.dtype
+    np.testing.assert_array_equal(
+        np.asarray(y, np.float32), np.asarray(ref, np.float32),
+        err_msg=str((cellkey, parallel, experts, backend, bias, plan)))
+    return plan
+
+planned = 0
+for cellkey in sorted(dispatch.cells()):
+    for parallel in ("column", "row"):
+        if check(cellkey, parallel, 4, "jnp", True):
+            planned += 1
+        # E=6 does not divide model=4: ep_plan must decline, dense fallback
+        assert check(cellkey, parallel, 6, "jnp", False) is None
+assert planned >= 2 * len(dispatch.cells()) // 2, planned
+# pallas backend: the grouped harness launch, wide W&A + mixed-precision cells
+for cellkey in (("ternary", "int8", "*"), ("int8", "int8", "*")):
+    for parallel in ("column", "row"):
+        assert check(cellkey, parallel, 4, "pallas", True) == parallel
+# narrow weight-only cell EP-shards in row mode (disjoint assembly is exact
+# at bf16) where tp_plan would refuse
+spec, _ = build("ternary", "none", False, 4, 64, "row")
+cell = dispatch.lookup(OperatingPoint.for_spec(spec))
+assert not cell.wide
+assert dispatch.ep_plan(cell, spec, "row", dispatch.EPSpec(MESH)) == "row"
+print("EP_QGEMM_OK", planned)
+'''
+
+
+SCRIPT_SERVE = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8
+from repro.configs import get_config
+from repro.launch.serve import Request, Server
+from repro.models import transformer
+from repro.models.common import ModelCtx
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+PROMPT_LENS, MAX_NEW, CACHE_LEN, PAGE_SIZE = (3, 9, 14), 4, 32, 4
+NUM_PAGES = 24
+rng = np.random.default_rng(7)
+
+def serve(cfg, sparams, ctx, prompts, mesh_, moe_ep=True):
+    srv = Server(cfg, sparams, slots=2, cache_len=CACHE_LEN, paged=True,
+                 page_size=PAGE_SIZE, num_pages=NUM_PAGES, ctx=ctx,
+                 mesh=mesh_, moe_ep=moe_ep)
+    assert (srv.ctx.ep is not None) == (mesh_ is not None and moe_ep)
+    for i, p in enumerate(prompts):
+        srv.submit(Request(i, p, MAX_NEW))
+    srv.run()
+    assert len(srv.completed) == len(prompts)
+    assert srv.compile_counts["decode"] == 1, srv.compile_counts
+    # routing telemetry surfaced and self-consistent
+    assert srv.stats["moe_routed"] > 0
+    assert srv.stats["moe_routed"] == (sum(srv.stats["moe_expert_tokens"])
+                                       + srv.stats["moe_dropped"])
+    return srv
+
+# deepseek arms: EP vs the SINGLE-DEVICE server. Its reduced config is MHA
+# (kv heads == heads), which keeps the mesh attention bit-exact, so any
+# mismatch here is the MoE dispatch's fault.
+for arch, cap in (("deepseek-moe-16b", None),     # w-ternary: narrow EP row
+                  ("deepseek-moe-16b", 0.5)):     # force capacity drops
+    cfg = get_config(arch).reduced()
+    if cap is not None:
+        cfg = dataclasses.replace(cfg, capacity_factor=cap)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    sparams = transformer.pack_for_serve(params, cfg)
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)
+               for n in PROMPT_LENS]
+    ctx = ModelCtx(mode="serve", backend="jnp", dtype=jnp.float32)
+    ref = serve(cfg, sparams, ctx, prompts, None)
+    want = {r.rid: r.out for r in ref.completed}
+    ep_srv = serve(cfg, sparams, ctx, prompts, mesh)
+    got = {r.rid: r.out for r in ep_srv.completed}
+    assert got == want, ("EP serve diverged", arch, cap, got, want)
+    # stats identical too: routing (and drops) are shard-count independent
+    for k in ("moe_routed", "moe_dropped", "moe_expert_tokens"):
+        assert ep_srv.stats[k] == ref.stats[k], (k, ep_srv.stats, ref.stats)
+    if cap is not None:
+        assert ep_srv.stats["moe_dropped"] > 0   # the drop arm really drops
+    print("OK", arch, cap, ep_srv.stats["moe_dropped"], flush=True)
+
+# phi3.5 arm: EP vs the DENSE-VMAP server ON THE SAME MESH. Its reduced
+# config is GQA with kv=2 — the kv-head count doesn't divide model=4, and
+# on the CPU SPMD backend that geometry (under the weight-only w-* policies,
+# whose bf16 activations can't absorb ulp noise the way int8 requant does)
+# makes mesh attention diverge from single-device at the value level with
+# NO MoE code in the loop (reproduces on llama3.2 reduced, kv=2 + w-ternary,
+# n_experts=0; kv=4 or wide policies are exact). See docs/SERVING.md
+# §Known constraints. The MoE contract still holds shard-for-shard: the
+# grouped EP dispatch must match the replicated dense expert vmap bit for
+# bit under the identical mesh, stats included.
+cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+params = transformer.init(jax.random.PRNGKey(0), cfg)
+sparams = transformer.pack_for_serve(params, cfg)
+prompts = [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)
+           for n in PROMPT_LENS]
+ctx = ModelCtx(mode="serve", backend="jnp", dtype=jnp.float32)
+ref = serve(cfg, sparams, ctx, prompts, mesh, moe_ep=False)
+want = {r.rid: r.out for r in ref.completed}
+ep_srv = serve(cfg, sparams, ctx, prompts, mesh)
+got = {r.rid: r.out for r in ep_srv.completed}
+assert got == want, ("EP vs dense-vmap diverged", got, want)
+for k in ("moe_routed", "moe_dropped", "moe_expert_tokens"):
+    assert ep_srv.stats[k] == ref.stats[k], (k, ep_srv.stats, ref.stats)
+print("OK phi3.5-moe ep-vs-dense", ep_srv.stats["moe_dropped"], flush=True)
+print("MOE_SERVE_OK")
+'''
+
+
+def test_ep_qgemm_token_exact_vs_dense_vmap():
+    """Grouped EP qgemm == dense expert vmap, bit for bit, for every
+    registered cell on both parallels (jnp + pallas spot-check), with
+    fallback on non-dividing expert counts and narrow-cell row EP allowed
+    (disjoint-assembly psum)."""
+    r = _run(SCRIPT_QGEMM)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "EP_QGEMM_OK" in r.stdout, r.stdout[-2000:]
+
+
+def test_ep_serve_token_exact_vs_single_device():
+    """EP(model=4) paged serve, token for token AND stat for stat, on a
+    forced-8-device CPU mesh: deepseek-moe (plus a drop-forcing capacity
+    arm) against the single-device server; phi3.5-moe against the
+    dense-expert-vmap server on the same mesh (its kv=2 GQA geometry hits a
+    pre-existing mesh-vs-single attention divergence with no MoE code in
+    the loop — see the in-script comment)."""
+    r = _run(SCRIPT_SERVE)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "MOE_SERVE_OK" in r.stdout, r.stdout[-2000:]
